@@ -1,0 +1,81 @@
+"""Kernel microbenchmarks: correctness deltas + structural stats.
+
+Wall times on this CPU-only host come from interpret mode and are NOT TPU
+projections; the meaningful derived quantities are correctness vs oracle and
+the compression ratio of the LUT weight format (4x byte reduction vs bf16,
+with a 16-entry codebook + per-channel scales as the only overhead).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.mac_model import DEFAULT_COEFFS
+from repro.core.stats import TILE, tile_transition_stats as stats_oracle
+from repro.kernels.lut_matmul.ops import compress_layer_weights, lut_matmul
+from repro.kernels.lut_matmul.ref import lut_matmul_ref
+from repro.kernels.transition_energy.ops import tile_transition_stats
+
+
+def run():
+    t0 = time.time()
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # --- LUT matmul
+    m, k, n = 256, 512, 256
+    w = jax.random.normal(key, (k, n)) * 0.04
+    values = [-112, -80, -56, -40, -28, -16, -8, 0, 8, 16, 28, 40, 56, 80,
+              112, 127]
+    packed, cb, scale = compress_layer_weights(w, values, block_k=128)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k), jnp.bfloat16)
+
+    t = time.time()
+    y = lut_matmul(x, packed, cb, scale, interpret=True)
+    y.block_until_ready()
+    t_kernel = time.time() - t
+    y_ref = lut_matmul_ref(x, packed, cb, scale, block_k=128)
+    rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+    dense_bytes = k * n * 2  # bf16
+    lut_bytes = packed.size * 1 + cb.size + scale.size * 4
+    rows.append({
+        "kernel": "lut_matmul", "shape": f"{m}x{k}x{n}",
+        "interpret_s": t_kernel, "rel_err_vs_ref": rel,
+        "weight_bytes_dense_bf16": dense_bytes,
+        "weight_bytes_lut4": int(lut_bytes),
+        "weight_compression": dense_bytes / lut_bytes,
+    })
+
+    # --- transition energy
+    wt = jax.random.randint(key, (TILE, TILE), -128, 128, dtype=jnp.int32)
+    ab = jax.random.randint(jax.random.fold_in(key, 2), (TILE, TILE), -128,
+                            128, dtype=jnp.int32)
+    t = time.time()
+    got = tile_transition_stats(wt, ab, DEFAULT_COEFFS, interpret=True)
+    jax.block_until_ready(got)
+    t_kernel = time.time() - t
+    want = stats_oracle(wt, ab, DEFAULT_COEFFS)
+    rel = float(jnp.max(jnp.abs(got[0] - want[0]))
+                / jnp.maximum(jnp.max(want[0]), 1e-9))
+    rows.append({
+        "kernel": "transition_energy", "shape": "64x64x64",
+        "interpret_s": t_kernel, "rel_err_vs_ref": rel,
+        "transitions_per_call": TILE * TILE * (TILE - 1),
+    })
+
+    derived = {
+        "lut_rel_err": rows[0]["rel_err_vs_ref"],
+        "lut_weight_compression": rows[0]["weight_compression"],
+        "te_rel_err": rows[1]["rel_err_vs_ref"],
+        "all_within_tolerance": all(r["rel_err_vs_ref"] < 2e-2 for r in rows),
+    }
+    return emit("bench_kernels", t0, rows, derived)
+
+
+if __name__ == "__main__":
+    run()

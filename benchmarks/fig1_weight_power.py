@@ -1,0 +1,35 @@
+"""Paper Figure 1: average MAC power across weight values."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.mac_model import weight_static_energy_profile
+
+
+def run():
+    t0 = time.time()
+    prof = weight_static_energy_profile(n_samples=4096)
+    w = jnp.arange(-128, 128)
+    rows = [{"w": int(wi), "power_eu": float(p)} for wi, p in zip(w, prof)]
+    derived = {
+        "min_power": float(jnp.min(prof)),
+        "max_power": float(jnp.max(prof)),
+        "spread_ratio": float(jnp.max(prof) / jnp.min(prof)),
+        "argmin_w": int(w[int(jnp.argmin(prof))]),
+        "zero_weight_power": float(prof[128]),
+    }
+    # ASCII sketch of the profile (16 buckets)
+    buckets = prof.reshape(16, 16).mean(axis=1)
+    lo, hi = float(buckets.min()), float(buckets.max())
+    bars = "".join("▁▂▃▄▅▆▇█"[min(7, int(8 * (float(b) - lo) / (hi - lo + 1e-9)))]
+                   for b in buckets)
+    print(f"# fig1 weight-power profile (w=-128..127): {bars}")
+    return emit("fig1_weight_power", t0, rows, derived)
+
+
+if __name__ == "__main__":
+    run()

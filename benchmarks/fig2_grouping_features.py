@@ -1,0 +1,76 @@
+"""Paper Figure 2: (a) power vs transition Hamming distance; (b) power vs
+(MSB_prev, MSB_cur) pair — validates the two grouping features, plus the
+stability-ratio comparison against random grouping."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import grouping
+from repro.core.mac_model import mac_transition_energy
+
+
+def run():
+    t0 = time.time()
+    key = jax.random.PRNGKey(0)
+    n = 1 << 15
+    k1, k2, k3 = jax.random.split(key, 3)
+    width1 = jax.random.randint(k1, (n,), 1, 23)
+    width2 = jax.random.randint(k2, (n,), 1, 23)
+    raw = jax.random.randint(k3, (n, 2), 0, 1 << 22)
+    p_prev = raw[:, 0] & ((1 << width1) - 1)
+    p_cur = raw[:, 1] & ((1 << width2) - 1)
+    e = mac_transition_energy(11, 5, 5, p_prev, p_cur)
+
+    # (a) power vs HD
+    hd = jax.lax.population_count((p_prev ^ p_cur) & 0x3FFFFF)
+    hd_rows = []
+    for h in range(0, 22, 2):
+        m = (hd >= h) & (hd < h + 2)
+        if bool(jnp.any(m)):
+            hd_rows.append({"hd_bucket": h,
+                            "mean_power": float(jnp.mean(e[m]))})
+    hd_monotone = all(a["mean_power"] < b["mean_power"]
+                      for a, b in zip(hd_rows, hd_rows[1:]))
+
+    # (b) power vs MSB pair (5x5 coarse buckets)
+    mg_prev = grouping.msb_group(p_prev) // 2
+    mg_cur = grouping.msb_group(p_cur) // 2
+    msb_rows = []
+    for i in range(5):
+        for j in range(5):
+            m = (mg_prev == i) & (mg_cur == j)
+            if bool(jnp.any(m)):
+                msb_rows.append({"msb_prev": i, "msb_cur": j,
+                                 "mean_power": float(jnp.mean(e[m]))})
+    diag = [r["mean_power"] for r in msb_rows if r["msb_prev"] == r["msb_cur"]]
+    offd = [r["mean_power"] for r in msb_rows if
+            abs(r["msb_prev"] - r["msb_cur"]) >= 2]
+
+    # stability ratio: model grouping vs random
+    gid = (grouping.group_id(p_prev) * grouping.N_GROUPS
+           + grouping.group_id(p_cur))
+    sr_model = float(grouping.stability_ratio(e, gid, grouping.N_GROUPS ** 2))
+    g_rand = jax.random.randint(jax.random.fold_in(key, 9), (n,), 0,
+                                grouping.N_GROUPS ** 2)
+    sr_rand = float(grouping.stability_ratio(e, g_rand, grouping.N_GROUPS ** 2))
+
+    derived = {
+        "hd_monotone": hd_monotone,
+        "diag_mean": sum(diag) / len(diag),
+        "offdiag_mean": sum(offd) / len(offd),
+        "offdiag_over_diag": (sum(offd) / len(offd)) / (sum(diag) / len(diag)),
+        "stability_ratio_msb_hd": sr_model,
+        "stability_ratio_random": sr_rand,
+        "stability_gain": sr_model / max(sr_rand, 1e-9),
+    }
+    return emit("fig2_grouping_features", t0,
+                {"hd": hd_rows, "msb": msb_rows}, derived)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Benchmark driver: one entry per paper table/figure + roofline + kernels.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark (derived is a JSON
+blob of the headline numbers) and writes full rows to benchmarks/out/*.json.
+BENCH_BUDGET=fast|full scales training budgets (default fast; see common.py).
+BENCH_ONLY=<name[,name]> restricts the run.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_kernels,
+        fig1_weight_power,
+        fig2_grouping_features,
+        fig3_activation_heatmaps,
+        fig4_components,
+        roofline,
+        table1_energy_savings,
+        table2_layerwise_resnet20,
+        table3_layerwise_vs_global,
+        table4_weight_selection,
+    )
+
+    benches = [
+        ("fig1_weight_power", fig1_weight_power.run),
+        ("fig2_grouping_features", fig2_grouping_features.run),
+        ("fig3_activation_heatmaps", fig3_activation_heatmaps.run),
+        ("table1_energy_savings", table1_energy_savings.run),
+        ("table2_layerwise_resnet20", table2_layerwise_resnet20.run),
+        ("table3_layerwise_vs_global", table3_layerwise_vs_global.run),
+        ("table4_weight_selection", table4_weight_selection.run),
+        ("fig4_components", fig4_components.run),
+        ("bench_kernels", bench_kernels.run),
+        ("roofline", roofline.run),
+    ]
+    only = os.environ.get("BENCH_ONLY")
+    if only:
+        allow = set(only.split(","))
+        benches = [(n, f) for n, f in benches if n in allow]
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for name, fn in benches:
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name},0,{{\"status\": \"FAILED\"}}")
+    print(f"# total wall: {time.time() - t0:.1f}s budget="
+          f"{os.environ.get('BENCH_BUDGET', 'fast')}")
+    if failures:
+        print(f"# FAILED: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

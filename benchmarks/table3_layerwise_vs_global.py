@@ -1,0 +1,69 @@
+"""Paper Table 3: layer-wise vs global strategies at matched (prune, K) on
+ResNet-20. The global arm restricts every layer to one network-wide codebook;
+the layer-wise arm runs the energy-prioritized schedule."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, fresh_copy, steps, trained
+from repro.core import baselines
+from repro.core.schedule import ScheduleConfig, energy_prioritized_compression
+from repro.core.weight_selection import SelectionConfig
+
+
+def _layerwise(bundle, prune, k):
+    b = fresh_copy(bundle)
+    cfg = ScheduleConfig(prune_ratios=(prune,), k_targets=(k,), delta_acc=0.08,
+                         finetune_steps=steps(15), trial_finetune_steps=steps(10),
+                         eval_batches=2, max_layers=3, min_energy_share=0.0)
+    sel = SelectionConfig(k_init=max(24, k), k_target=k, delta_acc=0.08,
+                          score_batches=1, accept_batches=2,
+                          max_score_candidates=5)
+    _, _, _, _, r = energy_prioritized_compression(
+        b["runner"], b["params"], b["state"], b["opt_state"], b["comp"],
+        b["stats"], cfg, sel)
+    return {"method": f"layerwise p{prune} k{k}", "prune": prune, "k": k,
+            "energy_saving": r.energy_saving, "accuracy": r.acc_final}
+
+
+def _global(bundle, prune, k):
+    b = fresh_copy(bundle)
+    sel = SelectionConfig(k_init=max(24, k), k_target=k, delta_acc=0.5,
+                          score_batches=1, accept_batches=1,
+                          max_score_candidates=5)
+    _, _, _, _, res = baselines.global_strategy(
+        b["runner"], b["params"], b["state"], b["opt_state"], b["comp"],
+        b["stats"], prune_ratio=prune, k_target=k,
+        finetune_steps=steps(30), eval_batches=2, sel_cfg=sel)
+    return {"method": f"global p{prune} k{k}", "prune": prune, "k": k,
+            "energy_saving": res.energy_saving, "accuracy": res.acc_after}
+
+
+def run():
+    t0 = time.time()
+    bundle = trained("resnet20")
+    rows = []
+    for prune, k in ((0.5, 32), (0.5, 16)):
+        rows.append(_global(bundle, prune, k))
+        rows.append(_layerwise(bundle, prune, k))
+
+    def pair(prune, k):
+        g = next(r for r in rows if r["method"] == f"global p{prune} k{k}")
+        l = next(r for r in rows if r["method"] == f"layerwise p{prune} k{k}")
+        return g, l
+
+    g16, l16 = pair(0.5, 16)
+    g32, l32 = pair(0.5, 32)
+    derived = {
+        "k16_layerwise_acc_advantage": l16["accuracy"] - g16["accuracy"],
+        "k32_layerwise_acc_advantage": l32["accuracy"] - g32["accuracy"],
+        "layerwise_acc_wins_at_16": l16["accuracy"] >= g16["accuracy"],
+        "global_degrades_more_at_16": (g32["accuracy"] - g16["accuracy"])
+                                      >= (l32["accuracy"] - l16["accuracy"]),
+    }
+    return emit("table3_layerwise_vs_global", t0, rows, derived)
+
+
+if __name__ == "__main__":
+    run()

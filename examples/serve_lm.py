@@ -1,0 +1,73 @@
+"""Serve a small LM with batched requests: prefill + decode loop.
+
+Demonstrates the serving path the decode_* dry-run cells lower: batched
+prefill building the per-layer KV/recurrent caches, then step-wise greedy
+decoding via `decode_step`. Runs a gemma3-family reduced config (5:1
+local:global pattern with ring-buffer window caches) so both cache kinds are
+exercised.
+
+    PYTHONPATH=src python examples/serve_lm.py [--batch 4] [--new-tokens 24]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.lm import build_lm
+from repro.nn.spec import init_params, spec_count
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--arch", default="gemma3-4b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).scaled_down(compute_dtype="float32")
+    model = build_lm(cfg)
+    print(f"arch={cfg.name} (reduced: {spec_count(model.spec)/1e6:.1f}M params,"
+          f" pattern={cfg.pattern}, window={cfg.window})")
+    params = init_params(jax.random.PRNGKey(0), model.spec)
+
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    max_len = args.prompt_len + args.new_tokens
+
+    t0 = time.time()
+    logits, cache = model.prefill(params, prompts, max_len=max_len,
+                                  cache_dtype=jnp.float32, q_block=8,
+                                  kv_block=8)
+    t_prefill = time.time() - t0
+    next_tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
+
+    decode = jax.jit(model.decode_step)
+    seqs = [next_tok]
+    t0 = time.time()
+    for _ in range(args.new_tokens - 1):
+        logits, cache = decode(params, cache, next_tok)
+        next_tok = jnp.argmax(logits[:, 0, :cfg.vocab], axis=-1)[:, None]
+        seqs.append(next_tok)
+    jax.block_until_ready(next_tok)
+    t_decode = time.time() - t0
+
+    out = jnp.concatenate(seqs, axis=1)
+    print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
+          f"{t_prefill*1e3:.0f} ms")
+    print(f"decode : {args.batch}x{args.new_tokens} tokens in "
+          f"{t_decode*1e3:.0f} ms "
+          f"({args.batch*args.new_tokens/max(t_decode,1e-9):.0f} tok/s batch)")
+    for b in range(min(args.batch, 2)):
+        print(f"request {b}: prompt tail {list(map(int, prompts[b, -4:]))} -> "
+              f"generated {list(map(int, out[b, :8]))}...")
+    assert bool(jnp.all(out >= 0)) and bool(jnp.all(out < cfg.vocab))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

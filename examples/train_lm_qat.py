@@ -1,0 +1,100 @@
+"""Train a ~100M-parameter LM with QAT + weight-set restriction, with
+fault-tolerant checkpointing — the framework's end-to-end LM driver.
+
+Runs a few hundred steps on CPU (olmo-family reduced config, synthetic
+bigram corpus), restricts the FFN weight sets to 16 values mid-training (the
+paper's technique applied to a transformer), and shows loss keeps improving.
+Demonstrates: spec-system init, train_step factory, deterministic resumable
+data, CheckpointManager + resilient loop, straggler monitor.
+
+    PYTHONPATH=src python examples/train_lm_qat.py [--steps N] [--arch olmo-1b]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.core.lm_compress import init_lm_comp, lm_comp_layers, set_codebook
+from repro.data.synthetic import SyntheticTokens
+from repro.distributed.fault import StragglerMonitor, run_resilient_loop
+from repro.launch.train import StepConfig, init_train_state, make_train_step
+from repro.models.config import model_param_count
+from repro.models.lm import build_lm
+from repro.nn.spec import spec_count
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--full", action="store_true",
+                    help="~100M-param config (hours on one CPU core; the "
+                         "default is a ~17M quick profile of the same run)")
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = get_config(args.arch).scaled_down(
+            n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+            d_ff=2304, vocab=32768, compute_dtype="float32")
+    else:
+        cfg = get_config(args.arch).scaled_down(
+            n_layers=4, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+            d_ff=1536, vocab=8192, compute_dtype="float32")
+    model = build_lm(cfg)
+    n_params = spec_count(model.spec)
+    print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.1f}M")
+
+    step_cfg = StepConfig(qat=True, with_comp=True, remat=False,
+                          q_block=128, kv_block=128, lr=6e-4)
+    state = init_train_state(model, step_cfg)
+    comp = init_lm_comp(model)
+    print(f"compressible units: {len(lm_comp_layers(model))}")
+
+    train_step = jax.jit(make_train_step(model, step_cfg))
+    data = SyntheticTokens(vocab=cfg.vocab, seed=0)
+    batch_size, seq = 8, 128
+
+    def data_fn(step):
+        x, y = data.batch(step, batch_size, seq)
+        return {"tokens": x, "labels": y}
+
+    def step_fn(state, batch):
+        return train_step(state, batch, comp)
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    monitor = StragglerMonitor()
+
+    half = args.steps // 2
+    state, rep1 = run_resilient_loop(
+        step_fn=step_fn, data_fn=data_fn, state=state, ckpt=ckpt,
+        n_steps=half, checkpoint_every=50, monitor=monitor)
+    print(f"phase 1 (unrestricted QAT): loss {rep1.losses[0]:.3f} -> "
+          f"{rep1.losses[-1]:.3f}")
+
+    # ---- apply the paper's weight-set restriction to the FFN matmuls
+    restricted = [-112, -80, -56, -40, -28, -16, -8, 0,
+                  8, 16, 28, 40, 56, 80, 112, 127]
+    for unit in lm_comp_layers(model):
+        if "/mlp/" in unit:
+            comp = set_codebook(comp, unit, restricted)
+    print(f"restricted every FFN matmul to {len(restricted)} weight values")
+
+    state, rep2 = run_resilient_loop(
+        step_fn=step_fn, data_fn=data_fn, state=state, ckpt=ckpt,
+        n_steps=args.steps - half, start_step=half, checkpoint_every=50,
+        monitor=monitor)
+    print(f"phase 2 (16-value FFN):     loss {rep2.losses[0]:.3f} -> "
+          f"{rep2.losses[-1]:.3f}")
+    print(f"checkpoints kept: {ckpt.all_steps()}  stragglers: "
+          f"{monitor.flagged}")
+    assert rep2.losses[-1] < rep1.losses[0], "training must make progress"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: energy-aware layer-wise weight selection framework (JAX).
+
+Reproduction + production framework for "Layer-wise Weight Selection for
+Power-Efficient Neural Network Acceleration" (Fang, Zhang, Huang; CS.AR 2025).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,185 @@
+"""Fault-tolerant checkpointing: atomic, async, mesh-elastic.
+
+Design (orbax-free, no external deps):
+
+  * a checkpoint is a directory ``step_<N>/`` holding npz shards (leaves are
+    gathered to host numpy) + ``manifest.json`` (flat name -> shard, shape,
+    dtype) — host arrays make restores *elastic*: any future mesh/device
+    count can consume them;
+  * writes go to ``step_<N>.tmp`` and are atomically renamed, then the
+    ``latest`` pointer file is atomically replaced — a crash mid-save never
+    corrupts the restore path;
+  * saves run on a background thread (training continues; ``wait()`` joins);
+  * ``keep`` bounds retained checkpoints (oldest pruned after a successful
+    save).
+
+Restore targets a sharding tree: leaves are ``jax.device_put`` onto the
+*current* mesh, so restarting on 2x fewer or more chips only changes the
+shardings passed in (see repro.distributed.elastic).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.nn.spec import flatten_with_names
+
+_SHARD_BYTES = 512 * 1024 * 1024  # max npz shard size
+
+
+def _unflatten(flat: Dict[str, Any]) -> Any:
+    tree: Dict[str, Any] = {}
+    for name, leaf in flat.items():
+        node = tree
+        parts = name.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---------------------------------------------------------------- save
+
+    def save(self, step: int, state: Any, *, block: bool = False) -> None:
+        """Snapshot `state` at `step`. Values are fetched to host *before*
+        the background write starts, so training may mutate them freely."""
+        self.wait()
+        flat = flatten_with_names(state)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+        def _write():
+            try:
+                self._write_sync(step, host)
+            except BaseException as e:  # surfaced on next wait()/save()
+                self._error = e
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def _write_sync(self, step: int, host: Dict[str, np.ndarray]) -> None:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+
+        manifest = {"step": step, "created": time.time(), "leaves": {}}
+        shard_idx, shard_bytes, shard_items = 0, 0, {}
+
+        def flush():
+            nonlocal shard_idx, shard_bytes, shard_items
+            if shard_items:
+                np.savez(tmp / f"shard_{shard_idx:04d}.npz", **shard_items)
+                shard_idx += 1
+                shard_bytes, shard_items = 0, {}
+
+        for name, arr in sorted(host.items()):
+            key = name.replace("/", "::")
+            if shard_bytes + arr.nbytes > _SHARD_BYTES and shard_items:
+                flush()
+            shard_items[key] = arr
+            shard_bytes += arr.nbytes
+            manifest["leaves"][name] = {
+                "shard": shard_idx,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        flush()
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+
+        # atomic latest pointer
+        ptr_tmp = self.dir / "latest.tmp"
+        ptr_tmp.write_text(final.name)
+        os.replace(ptr_tmp, self.dir / "latest")
+        self._prune()
+
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint save failed: {err!r}")
+
+    # -------------------------------------------------------------- restore
+
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp"):
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        ptr = self.dir / "latest"
+        if ptr.exists():
+            name = ptr.read_text().strip()
+            if (self.dir / name / "manifest.json").exists():
+                return int(name.split("_")[1])
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, *, shardings: Any = None
+                ) -> tuple[int, Any]:
+        """Returns (step, state). With `shardings` (a pytree of NamedSharding
+        matching the saved structure) every leaf is placed onto the current
+        mesh — the elastic-restart path."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+
+        shards: Dict[int, Any] = {}
+
+        def shard(i: int):
+            if i not in shards:
+                shards[i] = np.load(d / f"shard_{i:04d}.npz")
+            return shards[i]
+
+        flat = {}
+        for name, info in manifest["leaves"].items():
+            arr = shard(info["shard"])[name.replace("/", "::")]
+            flat[name] = arr
+        state = _unflatten(flat)
+
+        if shardings is not None:
+            flat_sh = flatten_with_names(shardings)
+            placed = {
+                name: jax.device_put(flat[name], flat_sh[name])
+                for name in flat
+            }
+            state = _unflatten(placed)
+        return step, state

@@ -1,0 +1,25 @@
+"""Core paper contribution: MAC energy modeling + layer-wise weight selection."""
+
+from repro.core.bitops import (  # noqa: F401
+    MASK16,
+    MASK22,
+    hamming_distance,
+    hamming_weight22,
+    msb22,
+    popcount,
+    to_bits8,
+)
+from repro.core.mac_model import (  # noqa: F401
+    DEFAULT_COEFFS,
+    MacEnergyCoeffs,
+    mac_transition_energy,
+)
+from repro.core.grouping import (  # noqa: F401
+    N_GROUPS,
+    N_HD_SUBGROUPS,
+    N_MSB_GROUPS,
+    group_id,
+    hd_subgroup,
+    msb_group,
+    stability_ratio,
+)

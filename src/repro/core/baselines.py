@@ -1,0 +1,170 @@
+"""Baselines the paper compares against.
+
+* ``powerpruning_global`` — PowerPruning-style [15]: a *global* MAC energy
+  model (layer-averaged LUT) drives a single network-wide restricted weight
+  set (default size 32) applied uniformly to every layer, plus a uniform
+  pruning ratio. No layer-wise scheduling, no greedy co-optimization.
+* ``naive_topk`` — pick the k lowest-energy weight values globally
+  (paper 5.3.3 Table 4). Demonstrates catastrophic accuracy collapse at k=16.
+* ``global_strategy`` — Table 3's "Global" arm: the co-optimized selection is
+  run once on network-aggregated statistics and the same (prune, K) applied
+  to all layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qat
+from repro.core.weight_selection import (
+    SelectionConfig,
+    greedy_backward_elimination,
+    initial_candidate_set,
+    naive_lowest_energy_set,
+)
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    name: str
+    codebook: List[int]
+    prune_ratio: float
+    acc_before: float
+    acc_after: float
+    energy_before: float
+    energy_after: float
+
+    @property
+    def energy_saving(self) -> float:
+        return 1.0 - self.energy_after / max(self.energy_before, 1e-12)
+
+
+def _global_lut_counts(models: Dict[str, object]):
+    """Energy-weighted global LUT + summed counts across layers (the 'global
+    activation model' simplification of prior work)."""
+    luts = jnp.stack([m.lut for m in models.values()])
+    counts = jnp.stack([m.counts for m in models.values()])
+    weights = counts.sum(axis=1, keepdims=True)
+    lut = (luts * weights).sum(0) / jnp.maximum(weights.sum(0), 1.0)
+    return lut, counts.sum(0)
+
+
+def _apply_global_codebook(runner, comp, values):
+    cb, k = qat.make_codebook(values)
+    new_comp = {}
+    for name, c in comp.items():
+        c2 = dict(c)
+        c2["codebook"], c2["codebook_k"] = cb, k
+        new_comp[name] = c2
+    return new_comp
+
+
+def _apply_uniform_prune(runner, params, comp, ratio: float):
+    new_comp = {}
+    for cl in runner.model.comp_layers:
+        c2 = dict(comp[cl.name])
+        w = runner.model.get_weight(params, cl.name)
+        c2["mask"] = qat.magnitude_prune_mask(w, ratio)
+        new_comp[cl.name] = c2
+    return new_comp
+
+
+def _total_energy(runner, params, comp, models) -> float:
+    refreshed = runner.refresh_counts(params, comp, models)
+    return float(sum(m.energy for m in refreshed.values()))
+
+
+def powerpruning_global(
+    runner, params, state, opt_state, comp, stats, *,
+    k: int = 32, prune_ratio: float = 0.5, finetune_steps: int = 100,
+    eval_batches: int = 4,
+) -> tuple:
+    """PowerPruning-style global selection. Returns (params, state, opt_state,
+    comp, BaselineResult)."""
+    models = runner.energy_models(params, comp, stats)
+    acc0 = runner.accuracy(params, state, comp, n_batches=eval_batches)
+    e0 = float(sum(m.energy for m in models.values()))
+
+    lut, counts = _global_lut_counts(models)
+    # global joint energy/usage ranking, but no greedy co-optimization
+    cfg = SelectionConfig(k_init=k, k_target=k)
+    values = initial_candidate_set(counts, lut, cfg)
+
+    comp = _apply_uniform_prune(runner, params, comp, prune_ratio)
+    comp = _apply_global_codebook(runner, comp, values)
+    params, state, opt_state, _ = runner.train(params, state, opt_state, comp,
+                                               finetune_steps)
+    acc1 = runner.accuracy(params, state, comp, n_batches=eval_batches)
+    e1 = _total_energy(runner, params, comp, models)
+    res = BaselineResult("powerpruning[15]", values, prune_ratio, acc0, acc1, e0, e1)
+    return params, state, opt_state, comp, res
+
+
+def naive_topk(
+    runner, params, state, opt_state, comp, stats, *,
+    k: int = 16, finetune_steps: int = 100, eval_batches: int = 4,
+) -> tuple:
+    """Naive lowest-energy top-k selection (Table 4)."""
+    models = runner.energy_models(params, comp, stats)
+    acc0 = runner.accuracy(params, state, comp, n_batches=eval_batches)
+    e0 = float(sum(m.energy for m in models.values()))
+
+    lut, _ = _global_lut_counts(models)
+    values = naive_lowest_energy_set(lut, k)
+    comp = _apply_global_codebook(runner, comp, values)
+    params, state, opt_state, _ = runner.train(params, state, opt_state, comp,
+                                               finetune_steps)
+    acc1 = runner.accuracy(params, state, comp, n_batches=eval_batches)
+    e1 = _total_energy(runner, params, comp, models)
+    res = BaselineResult(f"naive-top{k}", values, 0.0, acc0, acc1, e0, e1)
+    return params, state, opt_state, comp, res
+
+
+def global_strategy(
+    runner, params, state, opt_state, comp, stats, *,
+    prune_ratio: float = 0.5, k_target: int = 16, acc0: Optional[float] = None,
+    finetune_steps: int = 100, eval_batches: int = 4,
+    sel_cfg: Optional[SelectionConfig] = None,
+) -> tuple:
+    """Table 3 'Global' arm: co-optimized selection on aggregated stats,
+    uniform (prune, K) for every layer."""
+    models = runner.energy_models(params, comp, stats)
+    if acc0 is None:
+        acc0 = runner.accuracy(params, state, comp, n_batches=eval_batches)
+    e0 = float(sum(m.energy for m in models.values()))
+    sel_cfg = sel_cfg or SelectionConfig(k_target=k_target)
+    sel_cfg = dataclasses.replace(sel_cfg, k_target=k_target)
+
+    comp = _apply_uniform_prune(runner, params, comp, prune_ratio)
+    params, state, opt_state, _ = runner.train(params, state, opt_state, comp,
+                                               max(finetune_steps // 2, 1))
+
+    lut, counts = _global_lut_counts(runner.refresh_counts(params, comp, models))
+    init_set = initial_candidate_set(counts, lut, sel_cfg)
+
+    # single global elimination: build a pseudo layer model over summed counts
+    from repro.core.layer_energy import LayerEnergyModel, MatmulDims
+
+    total_n = sum(m.dims.n for m in models.values())
+    pseudo = LayerEnergyModel("global", MatmulDims(64, 64, max(total_n, 64)),
+                              lut, counts)
+
+    def eval_with_codebook(values, n_batches):
+        c2 = _apply_global_codebook(runner, comp, values)
+        return runner.accuracy(params, state, c2, n_batches=n_batches)
+
+    values, _ = greedy_backward_elimination(
+        pseudo, init_set, sel_cfg, acc0, eval_with_codebook=eval_with_codebook)
+
+    comp = _apply_global_codebook(runner, comp, values)
+    params, state, opt_state, _ = runner.train(params, state, opt_state, comp,
+                                               finetune_steps)
+    acc1 = runner.accuracy(params, state, comp, n_batches=eval_batches)
+    e1 = _total_energy(runner, params, comp, models)
+    res = BaselineResult(f"global-p{prune_ratio}-k{k_target}", values,
+                         prune_ratio, acc0, acc1, e0, e1)
+    return params, state, opt_state, comp, res

@@ -1,0 +1,77 @@
+"""Bit-level utilities for the MAC switching-activity model.
+
+All helpers operate on int32 arrays holding *bit patterns*:
+
+- 8-bit operands (weights / activations) are stored as their two's-complement
+  bit pattern in the low 8 bits (``x & 0xFF``).
+- 16-bit products use the low 16 bits.
+- 22-bit partial sums (the accumulator width of the paper's 64x64
+  weight-stationary array) use the low 22 bits.
+
+``jax.lax.population_count`` / ``jax.lax.clz`` give exact, vectorized bit
+counts, so everything here is jit/vmap/Pallas-compatible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Accumulator width of the systolic array in the paper (Section 3.1):
+# 8b x 8b products accumulated over a 64-row column need 16 + log2(64) = 22 bits.
+PSUM_BITS = 22
+MASK22 = (1 << PSUM_BITS) - 1  # 0x3FFFFF
+MASK16 = (1 << 16) - 1
+MASK8 = (1 << 8) - 1
+
+
+def to_bits8(x: jax.Array) -> jax.Array:
+    """Two's-complement 8-bit pattern of an int array, as int32 in [0, 255]."""
+    return jnp.asarray(x, jnp.int32) & MASK8
+
+
+def to_bits16(x: jax.Array) -> jax.Array:
+    """Two's-complement 16-bit pattern (products of 8b x 8b)."""
+    return jnp.asarray(x, jnp.int32) & MASK16
+
+
+def to_bits22(x: jax.Array) -> jax.Array:
+    """Two's-complement 22-bit pattern (partial sums)."""
+    return jnp.asarray(x, jnp.int32) & MASK22
+
+
+def popcount(x: jax.Array) -> jax.Array:
+    """Number of set bits (int32 in, int32 out)."""
+    return jax.lax.population_count(jnp.asarray(x, jnp.int32))
+
+
+def hamming_distance(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Hamming distance between two equally-masked bit patterns."""
+    return popcount(jnp.bitwise_xor(jnp.asarray(x, jnp.int32), jnp.asarray(y, jnp.int32)))
+
+
+def hamming_weight22(p: jax.Array) -> jax.Array:
+    """Hamming weight of the 22-bit pattern of a partial sum."""
+    return popcount(to_bits22(p))
+
+
+def msb22(p: jax.Array) -> jax.Array:
+    """Index of the most significant set bit of the 22-bit pattern.
+
+    Returns -1 for zero (no bit set), else a value in [0, 21].
+    """
+    masked = to_bits22(p)
+    # clz on int32: for masked != 0, msb = 31 - clz.
+    msb = 31 - jax.lax.clz(masked)
+    return jnp.where(masked == 0, jnp.int32(-1), msb.astype(jnp.int32))
+
+
+def carry_chain_length(p_prev: jax.Array, p_cur: jax.Array) -> jax.Array:
+    """Length of the accumulator region disturbed by a transition.
+
+    Approximated as (1 + msb of the toggled-bit pattern): a ripple through the
+    adder propagates up to the highest toggled bit. Zero-toggle transitions
+    disturb nothing.
+    """
+    diff = to_bits22(jnp.bitwise_xor(jnp.asarray(p_prev, jnp.int32), jnp.asarray(p_cur, jnp.int32)))
+    return (msb22(diff) + 1).astype(jnp.int32)

@@ -1,0 +1,134 @@
+"""End-to-end compression pipeline orchestration (paper Section 5 protocol).
+
+    1. quantization-aware training of the base model (8-bit W/A),
+    2. per-layer systolic-trace profiling -> energy LUTs + layer energies,
+    3. energy-prioritized layer-wise compression (pruning + weight selection),
+    4. final fine-tune + report.
+
+`CompressionPipeline.run()` returns a `PipelineResult` with everything the
+paper's tables report: accuracy before/after, conv-layer energy saving,
+selected weight counts, and per-layer decisions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional
+
+from repro.core.runner import CnnRunner
+from repro.core.schedule import (
+    ScheduleConfig,
+    ScheduleResult,
+    energy_prioritized_compression,
+)
+from repro.core.weight_selection import SelectionConfig
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    qat_steps: int = 300
+    profile_batches: int = 1
+    profile_max_tiles: int = 16
+    final_finetune_steps: int = 100
+    eval_batches: int = 4
+    schedule: ScheduleConfig = dataclasses.field(default_factory=ScheduleConfig)
+    selection: SelectionConfig = dataclasses.field(default_factory=SelectionConfig)
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    acc_base: float
+    acc_final: float
+    energy_before: float
+    energy_after: float
+    max_codebook: int
+    schedule: ScheduleResult
+    wall_seconds: float
+
+    @property
+    def energy_saving(self) -> float:
+        return 1.0 - self.energy_after / max(self.energy_before, 1e-12)
+
+    @property
+    def accuracy_drop(self) -> float:
+        return self.acc_base - self.acc_final
+
+    def summary(self) -> Dict:
+        return {
+            "acc_base": round(self.acc_base, 4),
+            "acc_final": round(self.acc_final, 4),
+            "accuracy_drop": round(self.accuracy_drop, 4),
+            "energy_saving": round(self.energy_saving, 4),
+            "max_codebook": self.max_codebook,
+            "layers": [
+                {
+                    "layer": d.layer,
+                    "share": round(d.share, 4),
+                    "prune": d.prune_ratio,
+                    "k": d.k,
+                    "saving": round(d.saving, 4),
+                    "accepted": d.accepted,
+                }
+                for d in self.schedule.decisions
+            ],
+            "wall_seconds": round(self.wall_seconds, 1),
+        }
+
+
+class CompressionPipeline:
+    def __init__(self, runner: CnnRunner, cfg: Optional[PipelineConfig] = None):
+        self.runner = runner
+        self.cfg = cfg or PipelineConfig()
+
+    def run(self, *, verbose: bool = False) -> PipelineResult:
+        t0 = time.time()
+        cfg = self.cfg
+        runner = self.runner
+
+        # 1. QAT base training
+        params, state, opt_state, comp = runner.init()
+        params, state, opt_state, loss = runner.train(
+            params, state, opt_state, comp, cfg.qat_steps)
+        acc_base = runner.accuracy(params, state, comp,
+                                   n_batches=cfg.eval_batches)
+        if verbose:
+            print(f"[pipeline] QAT base: loss={loss:.4f} acc={acc_base:.3f}")
+
+        # 2. profile
+        stats = runner.profile(params, state, comp,
+                               n_batches=cfg.profile_batches,
+                               max_tiles=cfg.profile_max_tiles)
+
+        # 3. energy-prioritized layer-wise compression
+        params, state, opt_state, comp, sched = energy_prioritized_compression(
+            runner, params, state, opt_state, comp, stats, cfg.schedule,
+            cfg.selection, verbose=verbose)
+
+        # 4. final fine-tune
+        if cfg.final_finetune_steps:
+            params, state, opt_state, _ = runner.train(
+                params, state, opt_state, comp, cfg.final_finetune_steps)
+        acc_final = runner.accuracy(params, state, comp,
+                                    n_batches=cfg.eval_batches)
+
+        models = runner.refresh_counts(
+            params, comp, runner.energy_models(params, comp, stats))
+        e_after = sum(m.energy for m in models.values())
+
+        ks = [int(d.k) for d in sched.decisions if d.k is not None]
+        result = PipelineResult(
+            acc_base=acc_base,
+            acc_final=acc_final,
+            energy_before=sched.energy_before,
+            energy_after=float(e_after),
+            max_codebook=max(ks) if ks else 256,
+            schedule=sched,
+            wall_seconds=time.time() - t0,
+        )
+        self.params, self.state, self.opt_state, self.comp = params, state, opt_state, comp
+        self.stats = stats
+        if verbose:
+            print(json.dumps(result.summary(), indent=2))
+        return result

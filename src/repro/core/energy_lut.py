@@ -1,0 +1,122 @@
+"""Per-layer, per-weight-value MAC energy LUTs (paper 3.1).
+
+Two routes to the 256-entry LUT ``E_l(w)``:
+
+1. ``trace`` — exact average over the sampled systolic trace
+   (`LayerStats.trace_lut`). This is the ground truth our grouped model is
+   validated against.
+
+2. ``grouped`` — the paper's contribution: synthesize MAC input traces by
+   sampling independently from (i) the layer's activation transition
+   histogram and (ii) the 50x50 MSB/HD grouped partial-sum transition
+   histogram, using per-group representative values. The resulting Monte
+   Carlo estimate only needs the compact (256^2 + 50^2) statistics rather
+   than the 2^44 raw transition space.
+
+`grouped_model_lut` is deterministic given a PRNG key. `model_fidelity`
+reports the correlation between the two LUTs (used by tests + benchmarks to
+show the grouping preserves per-weight ordering, which is all the selection
+algorithm consumes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grouping import N_GROUPS, group_representatives
+from repro.core.mac_model import DEFAULT_COEFFS, MacEnergyCoeffs, mac_transition_energy
+from repro.core.stats import N_WVALS, LayerStats
+
+_REP_CACHE: dict[int, jax.Array] = {}
+
+
+def _reps(samples_per_group: int = 8, seed: int = 17) -> jax.Array:
+    kk = (samples_per_group, seed)
+    h = hash(kk)
+    if h not in _REP_CACHE:
+        _REP_CACHE[h] = group_representatives(jax.random.PRNGKey(seed), samples_per_group)
+    return _REP_CACHE[h]
+
+
+def grouped_model_lut(
+    stats: LayerStats,
+    *,
+    n_mc: int = 4096,
+    key: jax.Array | None = None,
+    coeffs: MacEnergyCoeffs = DEFAULT_COEFFS,
+    samples_per_group: int = 8,
+) -> jax.Array:
+    """Paper's grouped statistical per-weight LUT, shape (256,) float32."""
+    if key is None:
+        key = jax.random.PRNGKey(1)
+    k_a, k_g, k_r1, k_r2 = jax.random.split(key, 4)
+
+    act_logits = jnp.log(stats.act_hist.reshape(-1) + 1e-20)
+    grp_logits = jnp.log(stats.group_hist.reshape(-1) + 1e-20)
+
+    a_idx = jax.random.categorical(k_a, act_logits, shape=(n_mc,))
+    a_prev = (a_idx // N_WVALS).astype(jnp.int32) - 128
+    a_cur = (a_idx % N_WVALS).astype(jnp.int32) - 128
+
+    g_idx = jax.random.categorical(k_g, grp_logits, shape=(n_mc,))
+    g_prev = (g_idx // N_GROUPS).astype(jnp.int32)
+    g_cur = (g_idx % N_GROUPS).astype(jnp.int32)
+
+    reps = _reps(samples_per_group)  # (50, R)
+    r1 = jax.random.randint(k_r1, (n_mc,), 0, reps.shape[1])
+    r2 = jax.random.randint(k_r2, (n_mc,), 0, reps.shape[1])
+    p_prev = reps[g_prev, r1]
+    p_cur = reps[g_cur, r2]
+
+    w_values = jnp.arange(-128, 128, dtype=jnp.int32)
+
+    def per_weight(w):
+        e = mac_transition_energy(w, a_prev, a_cur, p_prev, p_cur, coeffs)
+        return jnp.mean(e)
+
+    return jax.vmap(per_weight)(w_values)
+
+
+def trace_lut(stats: LayerStats) -> jax.Array:
+    """Ground-truth per-weight LUT from the sampled trace, shape (256,)."""
+    return stats.trace_lut()
+
+
+def blended_lut(stats: LayerStats, **grouped_kwargs) -> jax.Array:
+    """LUT used by the compression pipeline: trace where observed, grouped
+    model as fallback for weight values never seen in the trace."""
+    t = stats.trace_lut()
+    g = grouped_model_lut(stats, **grouped_kwargs)
+    seen = stats.count > 0
+    return jnp.where(seen, t, g)
+
+
+def model_fidelity(stats: LayerStats, **grouped_kwargs) -> dict:
+    """Correlation diagnostics between trace LUT and grouped-model LUT.
+
+    Restricted to weight values actually observed in the trace. Returns
+    pearson r, spearman (rank) r, and mean relative error.
+    """
+    t = stats.trace_lut()
+    g = grouped_model_lut(stats, **grouped_kwargs)
+    seen = stats.count > 0
+    tv = t[seen]
+    gv = g[seen]
+
+    def _pearson(x, y):
+        xm = x - x.mean()
+        ym = y - y.mean()
+        denom = jnp.sqrt(jnp.sum(xm**2) * jnp.sum(ym**2))
+        return jnp.sum(xm * ym) / jnp.maximum(denom, 1e-12)
+
+    def _rank(x):
+        order = jnp.argsort(x)
+        ranks = jnp.zeros_like(order).at[order].set(jnp.arange(x.shape[0]))
+        return ranks.astype(jnp.float32)
+
+    pearson = float(_pearson(tv, gv))
+    spearman = float(_pearson(_rank(tv), _rank(gv)))
+    rel_err = float(jnp.mean(jnp.abs(tv - gv) / jnp.maximum(tv, 1e-9)))
+    return {"pearson": pearson, "spearman": spearman, "mean_rel_err": rel_err,
+            "n_seen": int(jnp.sum(seen))}

@@ -1,0 +1,129 @@
+"""MSB x Hamming-weight grouping of the 22-bit partial-sum space (paper 3.1.1).
+
+The 22-bit accumulator has a 2^22 x 2^22 transition space; the paper
+approximates it with a two-stage grouping:
+
+  Stage 1: MSB position (range 0..22, where "0" means value zero / no MSB)
+           uniformly partitioned into ``N_MSB_GROUPS = 10`` groups —
+           similar MSB => similar carry-propagation activity.
+  Stage 2: within each MSB group, Hamming weight partitioned into
+           ``N_HD_SUBGROUPS = 5`` subgroups — same subgroup => small HD.
+
+=> 50 groups total. Grouping quality is scored by the *stability ratio*:
+variance of inter-group means / mean intra-group variance (higher = better).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitops import PSUM_BITS, hamming_weight22, msb22
+
+N_MSB_GROUPS = 10
+N_HD_SUBGROUPS = 5
+N_GROUPS = N_MSB_GROUPS * N_HD_SUBGROUPS
+
+# MSB "value" in the paper's 0..22 range: 0 <=> zero value, k <=> msb index k-1.
+_N_MSB_VALUES = PSUM_BITS + 1  # 23
+_N_HW_VALUES = PSUM_BITS + 1   # Hamming weight in 0..22
+
+
+def msb_group(p: jax.Array) -> jax.Array:
+    """Stage-1 group in [0, N_MSB_GROUPS) from the 22-bit pattern of ``p``."""
+    msb_val = msb22(p) + 1  # 0..22, 0 for zero
+    g = (msb_val * N_MSB_GROUPS) // _N_MSB_VALUES
+    return jnp.minimum(g, N_MSB_GROUPS - 1).astype(jnp.int32)
+
+
+def hd_subgroup(p: jax.Array) -> jax.Array:
+    """Stage-2 subgroup in [0, N_HD_SUBGROUPS) by Hamming weight."""
+    hw = hamming_weight22(p)  # 0..22
+    g = (hw * N_HD_SUBGROUPS) // _N_HW_VALUES
+    return jnp.minimum(g, N_HD_SUBGROUPS - 1).astype(jnp.int32)
+
+
+def group_id(p: jax.Array) -> jax.Array:
+    """Full group id in [0, 50) for a 22-bit partial sum pattern."""
+    return msb_group(p) * N_HD_SUBGROUPS + hd_subgroup(p)
+
+
+def group_transition_id(p_prev: jax.Array, p_cur: jax.Array) -> jax.Array:
+    """Id in [0, 2500) of the (group(p_prev) -> group(p_cur)) transition."""
+    return group_id(p_prev) * N_GROUPS + group_id(p_cur)
+
+
+def stability_ratio(values: jax.Array, groups: jax.Array, n_groups: int = N_GROUPS) -> jax.Array:
+    """Grouping-quality score: var(inter-group means) / mean(intra-group var).
+
+    ``values`` are per-sample scalars (e.g. measured MAC energies), ``groups``
+    the group id of each sample. Empty groups are excluded from both terms.
+    Higher is better (tight groups, well-separated means).
+    """
+    values = jnp.asarray(values, jnp.float32)
+    groups = jnp.asarray(groups, jnp.int32)
+    ones = jnp.ones_like(values)
+    counts = jax.ops.segment_sum(ones, groups, num_segments=n_groups)
+    sums = jax.ops.segment_sum(values, groups, num_segments=n_groups)
+    sq_sums = jax.ops.segment_sum(values * values, groups, num_segments=n_groups)
+
+    nonempty = counts > 0
+    safe_counts = jnp.maximum(counts, 1.0)
+    means = sums / safe_counts
+    # biased intra-group variance
+    variances = sq_sums / safe_counts - means * means
+    variances = jnp.maximum(variances, 0.0)
+
+    n_nonempty = jnp.maximum(jnp.sum(nonempty), 1)
+    grand_mean = jnp.sum(jnp.where(nonempty, means, 0.0)) / n_nonempty
+    inter_var = (
+        jnp.sum(jnp.where(nonempty, (means - grand_mean) ** 2, 0.0)) / n_nonempty
+    )
+    intra_var = jnp.sum(jnp.where(nonempty, variances, 0.0)) / n_nonempty
+    return inter_var / jnp.maximum(intra_var, 1e-12)
+
+
+def group_representatives(key: jax.Array, samples_per_group: int = 8) -> jax.Array:
+    """Representative 22-bit values for each of the 50 groups.
+
+    Rejection-free construction: for each (msb_group, hw_subgroup) pick an MSB
+    position and Hamming weight inside the cell, then scatter the remaining
+    set bits uniformly below the MSB. Returns (N_GROUPS, samples_per_group)
+    int32. Groups that are combinatorially empty (hw > msb+1) fall back to the
+    closest feasible Hamming weight.
+    """
+    reps = []
+    for mg in range(N_MSB_GROUPS):
+        # msb values covered by this group (in the 0..22 "msb value" space)
+        lo = -(-mg * _N_MSB_VALUES // N_MSB_GROUPS)  # ceil
+        msb_vals = [v for v in range(23) if (v * N_MSB_GROUPS) // _N_MSB_VALUES == mg]
+        del lo
+        for hg in range(N_HD_SUBGROUPS):
+            hw_vals = [
+                v for v in range(_N_HW_VALUES)
+                if min((v * N_HD_SUBGROUPS) // _N_HW_VALUES, N_HD_SUBGROUPS - 1) == hg
+            ]
+            cell = []
+            key, sub = jax.random.split(key)
+            sub_keys = jax.random.split(sub, samples_per_group)
+            for i in range(samples_per_group):
+                k1, k2, k3 = jax.random.split(sub_keys[i], 3)
+                msb_val = int(msb_vals[int(jax.random.randint(k1, (), 0, len(msb_vals)))])
+                hw = int(hw_vals[int(jax.random.randint(k2, (), 0, len(hw_vals)))])
+                if msb_val == 0:
+                    cell.append(0)
+                    continue
+                msb_pos = msb_val - 1
+                hw = max(1, min(hw, msb_pos + 1))  # feasibility clamp
+                # choose hw-1 extra bit positions below msb_pos
+                if msb_pos == 0 or hw == 1:
+                    cell.append(1 << msb_pos)
+                    continue
+                perm = jax.random.permutation(k3, msb_pos)
+                extra = perm[: hw - 1]
+                val = 1 << msb_pos
+                for b in list(jax.device_get(extra)):
+                    val |= 1 << int(b)
+                cell.append(val)
+            reps.append(cell)
+    return jnp.asarray(reps, jnp.int32)

@@ -1,0 +1,158 @@
+"""Convolution/linear layer energy via the tile-level systolic mapping (3.2).
+
+im2col turns each conv into ``Y = W_mat @ X_col`` with
+``W_mat in R^{M x K}``, ``X_col in R^{K x N}`` (M = C_out, K = C_in*k^2,
+N = H_out*W_out). The matmul is partitioned into 64x64 weight-stationary
+tiles; each (m, k) weight tile is streamed with ceil(N/64) activation blocks,
+each taking 128 cycles (64 fill + 64 drain at clock f):
+
+    T       = 64 / f                  (we use f = 1: unit clock)
+    E_tile  = 2 * P_tile * T
+    E_layer = N_tiles * E_tile        (linear accumulation, no inter-tile reuse)
+
+``P_tile`` is the summed per-cycle MAC power of the tile's 64x64 stationary
+weights, read from the layer's per-weight LUT, so the whole formula collapses
+to a weight-value histogram dot product:
+
+    E_layer = sum_w counts_padded(w) * LUT(w) * (2 * T) * ceil(N/64)
+
+where ``counts_padded`` counts each weight once per (m, k) tile including the
+zero padding of partial tiles (padded MACs hold w = 0 and still clock).
+This makes the scheduler's ΔE queries O(256).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stats import N_WVALS, TILE
+
+CLOCK_F = 1.0
+T_CYCLES = TILE / CLOCK_F          # paper: T = 64 / f
+PASS_ENERGY_SCALE = 2.0 * T_CYCLES  # paper: E_tile = 2 * P_tile * T
+
+
+@dataclass(frozen=True)
+class MatmulDims:
+    """Dimensions of a layer's matmul as mapped on the systolic array."""
+
+    m: int  # output channels / features
+    k: int  # reduction (C_in * k_h * k_w, or fan-in)
+    n: int  # streamed columns (H_out * W_out * batch, or tokens)
+
+    @property
+    def m_tiles(self) -> int:
+        return -(-self.m // TILE)
+
+    @property
+    def k_tiles(self) -> int:
+        return -(-self.k // TILE)
+
+    @property
+    def n_tiles(self) -> int:
+        return -(-self.n // TILE)
+
+    @property
+    def total_tiles(self) -> int:
+        return self.m_tiles * self.k_tiles * self.n_tiles
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n
+
+
+def conv_matmul_dims(
+    c_in: int,
+    c_out: int,
+    kernel_hw: Tuple[int, int],
+    out_hw: Tuple[int, int],
+    batch: int = 1,
+) -> MatmulDims:
+    kh, kw = kernel_hw
+    ho, wo = out_hw
+    return MatmulDims(m=c_out, k=c_in * kh * kw, n=ho * wo * batch)
+
+
+def dense_matmul_dims(fan_in: int, fan_out: int, n_tokens: int) -> MatmulDims:
+    return MatmulDims(m=fan_out, k=fan_in, n=n_tokens)
+
+
+def weight_value_counts(w_int: jax.Array, dims: MatmulDims) -> jax.Array:
+    """Histogram (256,) of int8 weight values over the *padded* weight matrix.
+
+    ``w_int`` is the (M, K) integer weight matrix (any layout reshapable to
+    M*K). Zero padding of partial tiles adds to the count of w = 0.
+    """
+    w_flat = jnp.asarray(w_int, jnp.int32).reshape(-1)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(w_flat, jnp.float32), w_flat + 128, num_segments=N_WVALS
+    )
+    padded = dims.m_tiles * dims.k_tiles * TILE * TILE
+    pad_zeros = padded - w_flat.shape[0]
+    return counts.at[128].add(jnp.float32(pad_zeros))
+
+
+def layer_energy_from_counts(counts: jax.Array, lut: jax.Array, dims: MatmulDims) -> jax.Array:
+    """E_layer = sum_w counts(w) * LUT(w) * 2T * ceil(N/64)  (scalar, eu)."""
+    per_pass_power = jnp.sum(counts * lut)  # sum of per-cycle MAC powers
+    return per_pass_power * PASS_ENERGY_SCALE * dims.n_tiles
+
+
+def layer_energy(w_int: jax.Array, lut: jax.Array, dims: MatmulDims) -> jax.Array:
+    return layer_energy_from_counts(weight_value_counts(w_int, dims), lut, dims)
+
+
+def tile_power(counts: jax.Array, lut: jax.Array, dims: MatmulDims) -> jax.Array:
+    """P_tile^(l): average per-tile power (paper 3.2), for reporting."""
+    n_weight_tiles = jnp.maximum(dims.m_tiles * dims.k_tiles, 1)
+    return jnp.sum(counts * lut) / n_weight_tiles
+
+
+def tile_energy(counts: jax.Array, lut: jax.Array, dims: MatmulDims) -> jax.Array:
+    """E_tile = 2 * P_tile * T."""
+    return PASS_ENERGY_SCALE * tile_power(counts, lut, dims)
+
+
+def delta_energy_remove(
+    counts: jax.Array,
+    lut: jax.Array,
+    dims: MatmulDims,
+    w_value: int | jax.Array,
+    nearest_value: int | jax.Array,
+) -> jax.Array:
+    """Energy delta (>0 = saving) of disallowing ``w_value`` in this layer.
+
+    All occurrences are remapped to ``nearest_value`` (paper 4.2.2 (i)).
+    """
+    w_idx = jnp.asarray(w_value, jnp.int32) + 128
+    n_idx = jnp.asarray(nearest_value, jnp.int32) + 128
+    moved = counts[w_idx]
+    per_pass = moved * (lut[w_idx] - lut[n_idx])
+    return per_pass * PASS_ENERGY_SCALE * dims.n_tiles
+
+
+@dataclass
+class LayerEnergyModel:
+    """Everything the scheduler needs to reason about one layer's energy."""
+
+    name: str
+    dims: MatmulDims
+    lut: jax.Array          # (256,) per-weight-value per-cycle energy
+    counts: jax.Array       # (256,) current weight-value histogram (padded)
+
+    @property
+    def energy(self) -> float:
+        return float(layer_energy_from_counts(self.counts, self.lut, self.dims))
+
+    def with_counts(self, counts: jax.Array) -> "LayerEnergyModel":
+        return LayerEnergyModel(self.name, self.dims, self.lut, counts)
+
+
+def energy_shares(models: list[LayerEnergyModel]) -> jax.Array:
+    """rho_l = E_l / sum_j E_j (paper 4.3)."""
+    e = jnp.asarray([m.energy for m in models], jnp.float32)
+    return e / jnp.maximum(jnp.sum(e), 1e-12)

@@ -1,0 +1,138 @@
+"""LM-side compression state: per-layer masks + codebooks for scanned blocks.
+
+Builds a comp tree mirroring the LM's grouped parameter layout:
+
+    comp = {
+      "blocks":     {"g0": {"attn/wq": CompState, "mlp/w_gate": ...}, ...}
+                    with leaves stacked over the scan (layers) axis,
+      "tail":       {"t0": {...}},           # unstacked
+      "enc_blocks": {...},                   # whisper encoder (stacked)
+    }
+
+Eligible tensors are exactly the matmul weights that occupy systolic
+weight-stationary registers (DESIGN.md §Arch-applicability): attention
+projections, FFN/expert matrices, SSM/RG-LRU projections and gate matrices.
+Router weights, depthwise-conv taps, per-head scalars (A/dt/Lambda), biases
+and norms are excluded. Masks are stored int8 to bound the footprint at 26B+
+scale (cast to the weight dtype inside `repro.core.qat`).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat
+from repro.models.lm import LMModel
+from repro.nn.spec import ParamSpec, is_spec
+
+# sub-module name -> weight keys eligible for weight-value restriction
+ELIGIBLE: Dict[str, Tuple[str, ...]] = {
+    "attn": ("wq", "wk", "wv", "wo"),
+    "xattn": ("wq", "wk", "wv", "wo"),
+    "mlp": ("w_gate", "w_up", "w_down"),
+    "moe": ("w_gate", "w_up", "w_down",
+            "shared_gate", "shared_up", "shared_down"),
+    "ssm": ("in_proj", "out_proj"),
+    "rglru": ("in_proj", "gate_proj", "w_a", "w_x", "out_proj"),
+}
+
+
+def _block_comp_spec(block_spec: dict) -> dict:
+    """{'attn/wq': comp-spec-dict} for one (possibly stacked) block spec."""
+    out = {}
+    for sub, keys in ELIGIBLE.items():
+        if sub not in block_spec:
+            continue
+        for key in keys:
+            if key not in block_spec[sub]:
+                continue
+            p: ParamSpec = block_spec[sub][key]
+            stacked = p.axes and p.axes[0] == "layers"
+            cb_shape = (p.shape[0], qat.K_MAX) if stacked else (qat.K_MAX,)
+            k_shape = (p.shape[0],) if stacked else ()
+            out[f"{sub}/{key}"] = {
+                "mask": ParamSpec(p.shape, jnp.int8, p.axes,
+                                  lambda k, s, t: jnp.ones(s, t)),
+                "codebook": ParamSpec(cb_shape, jnp.int32,
+                                      ("layers", None) if stacked else (None,),
+                                      lambda k, s, t: jnp.zeros(s, t)),
+                "codebook_k": ParamSpec(k_shape, jnp.int32,
+                                        ("layers",) if stacked else (),
+                                        lambda k, s, t: jnp.zeros(s, t)),
+            }
+    return out
+
+
+def make_lm_comp_spec(model: LMModel) -> dict:
+    """Comp spec tree (ParamSpec leaves) for the whole LM."""
+    comp: dict = {}
+    spec = model.spec
+    if "blocks" in spec:
+        comp["blocks"] = {
+            g: _block_comp_spec(spec["blocks"][g]) for g in spec["blocks"]
+        }
+    if "tail" in spec:
+        comp["tail"] = {
+            t: _block_comp_spec(spec["tail"][t]) for t in spec["tail"]
+        }
+    if "enc_blocks" in spec:
+        comp["enc_blocks"] = _block_comp_spec(spec["enc_blocks"])
+    return comp
+
+
+def init_lm_comp(model: LMModel) -> dict:
+    """Concrete identity comp (all-ones masks, empty codebooks)."""
+    from repro.nn.spec import init_params
+
+    return init_params(jax.random.PRNGKey(0), make_lm_comp_spec(model))
+
+
+def lm_comp_layers(model: LMModel) -> List[str]:
+    """Flat names of compressible units ('blocks/g0/attn/wq', ...)."""
+    spec = make_lm_comp_spec(model)
+    names = []
+    for top, groups in spec.items():
+        if top == "enc_blocks":
+            names.extend(f"{top}/{k}" for k in groups)
+        else:
+            for g, entries in groups.items():
+                names.extend(f"{top}/{g}/{k}" for k in entries)
+    return names
+
+
+def set_codebook(comp: dict, path: str, values, layer: Optional[int] = None) -> dict:
+    """Functional codebook update for unit `path` ('blocks/g0/mlp/w_down').
+
+    For stacked (scanned) units, `layer` selects the repeat index; None
+    applies the same codebook to every layer of the stack.
+    """
+    cb, k = qat.make_codebook(values)
+    parts = path.split("/")
+    unit = "/".join(parts[-2:])
+    node_path = parts[:-2]
+
+    def update(tree, keys):
+        if not keys:
+            entry = dict(tree[unit])
+            if entry["codebook"].ndim == 2:  # stacked
+                if layer is None:
+                    entry["codebook"] = jnp.broadcast_to(
+                        cb, entry["codebook"].shape).copy()
+                    entry["codebook_k"] = jnp.full_like(entry["codebook_k"], k)
+                else:
+                    entry["codebook"] = entry["codebook"].at[layer].set(cb)
+                    entry["codebook_k"] = entry["codebook_k"].at[layer].set(k)
+            else:
+                entry["codebook"] = cb
+                entry["codebook_k"] = jnp.asarray(k)
+            out = dict(tree)
+            out[unit] = entry
+            return out
+        out = dict(tree)
+        out[keys[0]] = update(tree[keys[0]], keys[1:])
+        return out
+
+    return update(comp, node_path)

@@ -1,0 +1,148 @@
+"""Quantization-aware training with weight-set restriction (paper 4.2).
+
+All compressible layers train with int8 symmetric fake-quantization
+(straight-through estimator), per the paper's setup ("weights and activations
+quantized to 8-bit precision"). On top of plain QAT we support the two
+compression mechanisms the paper composes:
+
+  * **pruning**: a binary mask zeroes weights before quantization (zeroed
+    MACs are zero-gated in the energy model);
+  * **weight-set restriction**: the quantized integer weights are projected
+    to the nearest member of a per-layer *codebook* ``C_l`` of allowed int8
+    values (the restricted weight set the selection algorithm constructs).
+
+The compression state of a layer is a plain pytree dict so it can be threaded
+through jit/scan and checkpointed:
+
+    comp = {
+      "mask":       float array, same shape as w (all-ones = no pruning)
+      "codebook":   (K_MAX,) int32 sorted allowed values (padded by repeats)
+      "codebook_k": () int32, number of valid entries; 0 = unrestricted
+    }
+
+Weight layout convention: the *last* axis of a weight tensor is the output
+channel; quantization scales are per-output-channel over all other axes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import ad_checkpoint as _adc
+
+K_MAX = 32          # maximum codebook size the pipeline ever uses (paper: 32)
+QMAX = 127          # symmetric int8 range [-127, 127]
+
+
+CompState = Dict[str, jax.Array]
+
+
+def identity_comp(w_shape: Tuple[int, ...], dtype=jnp.float32) -> CompState:
+    """No-op compression state (no pruning, no restriction)."""
+    return {
+        "mask": jnp.ones(w_shape, dtype),
+        "codebook": jnp.zeros((K_MAX,), jnp.int32),
+        "codebook_k": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_codebook(values) -> Tuple[jax.Array, jax.Array]:
+    """Build a padded sorted codebook from a python/array list of int values."""
+    vals = sorted(int(v) for v in values)
+    k = len(vals)
+    if k == 0:
+        return jnp.zeros((K_MAX,), jnp.int32), jnp.zeros((), jnp.int32)
+    if k > K_MAX:
+        raise ValueError(f"codebook size {k} exceeds K_MAX={K_MAX}")
+    padded = vals + [vals[-1]] * (K_MAX - k)
+    return jnp.asarray(padded, jnp.int32), jnp.asarray(k, jnp.int32)
+
+
+def weight_scale(w: jax.Array) -> jax.Array:
+    """Per-output-channel symmetric scale, broadcastable against ``w``."""
+    reduce_axes = tuple(range(w.ndim - 1))
+    amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / QMAX
+
+
+def project_to_codebook(q: jax.Array, codebook: jax.Array, k: jax.Array) -> jax.Array:
+    """Map integer weights to the nearest of the first ``k`` codebook values.
+
+    ``q`` int32 of any shape, ``codebook`` (K_MAX,) int32 sorted. ``k == 0``
+    means unrestricted (identity). Ties break toward the smaller value.
+    """
+    valid = jnp.arange(K_MAX) < jnp.maximum(k, 1)
+    dist = jnp.abs(q[..., None] - codebook[(None,) * q.ndim])
+    dist = jnp.where(valid, dist, jnp.int32(1 << 20))
+    idx = jnp.argmin(dist, axis=-1)
+    projected = codebook[idx]
+    return jnp.where(k > 0, projected, q)
+
+
+def quantize_weight_int(w: jax.Array, comp: Optional[CompState] = None) -> jax.Array:
+    """Integer (int32-valued int8) view of a weight tensor after mask/quant/
+    projection — what actually sits in the MAC weight registers."""
+    if comp is not None:
+        w = w * comp["mask"].astype(w.dtype)
+    scale = weight_scale(w)
+    q = jnp.clip(jnp.round(w / scale), -QMAX, QMAX).astype(jnp.int32)
+    if comp is not None:
+        q = project_to_codebook(q, comp["codebook"], comp["codebook_k"])
+    return q
+
+
+def fake_quant_weight(
+    w: jax.Array, comp: Optional[CompState] = None
+) -> jax.Array:
+    """Fake-quantized (float) weights with STE; applies mask + codebook.
+
+    Masks may be stored in a narrow dtype (int8 on the LM path to bound the
+    dry-run memory footprint); they are cast to the weight dtype here.
+    """
+    wm = w * comp["mask"].astype(w.dtype) if comp is not None else w
+    scale = weight_scale(wm)
+    q = jnp.clip(jnp.round(wm / scale), -QMAX, QMAX)
+    if comp is not None:
+        qi = project_to_codebook(q.astype(jnp.int32), comp["codebook"], comp["codebook_k"])
+        q = qi.astype(wm.dtype)
+    wq = q * scale
+    # named for remat policies: saving 'qat_weights' across the checkpoint
+    # boundary skips re-running the quantize+project chain in the backward
+    # pass (opt-in via StepConfig.remat_save_qat; §Perf cell A-H4)
+    wq = _adc.checkpoint_name(wq, "qat_weights")
+    # straight-through: forward value wq, gradient of identity wrt wm
+    return wm + jax.lax.stop_gradient(wq - wm)
+
+
+def fake_quant_act(a: jax.Array) -> jax.Array:
+    """Dynamic per-tensor symmetric int8 fake-quantization of activations."""
+    amax = jnp.max(jnp.abs(a))
+    scale = jnp.maximum(amax, 1e-8) / QMAX
+    q = jnp.clip(jnp.round(a / scale), -QMAX, QMAX) * scale
+    return a + jax.lax.stop_gradient(q - a)
+
+
+def quantize_act_int(a: jax.Array) -> jax.Array:
+    """Integer int8 view of activations (for energy-trace profiling)."""
+    amax = jnp.max(jnp.abs(a))
+    scale = jnp.maximum(amax, 1e-8) / QMAX
+    return jnp.clip(jnp.round(a / scale), -QMAX, QMAX).astype(jnp.int32)
+
+
+def magnitude_prune_mask(w: jax.Array, ratio: float) -> jax.Array:
+    """Unstructured magnitude pruning mask keeping the top (1-ratio) weights."""
+    if ratio <= 0.0:
+        return jnp.ones_like(w)
+    flat = jnp.abs(w).reshape(-1)
+    k = int(round(ratio * flat.shape[0]))
+    k = min(max(k, 0), flat.shape[0] - 1)
+    thresh = jnp.sort(flat)[k]
+    return (jnp.abs(w) >= thresh).astype(w.dtype)
+
+
+def apply_comp_dtype(comp: CompState, dtype) -> CompState:
+    out = dict(comp)
+    out["mask"] = comp["mask"].astype(dtype)
+    return out

@@ -1,0 +1,197 @@
+"""CNN training/eval/profiling runner used by the compression pipeline.
+
+Bundles a `CNNModel`, a synthetic dataset, and jitted train/eval steps. The
+compression state `comp` ({layer_name: CompState}) is a *data* argument of
+every jitted function — its structure is fixed at init (identity comps), so
+codebook/mask edits made by the scheduler never trigger recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat
+from repro.core.layer_energy import LayerEnergyModel, MatmulDims
+from repro.core.stats import (
+    LayerStats,
+    collect_layer_stats,
+    conv_weight_matrix,
+    im2col,
+)
+from repro.data.synthetic import SyntheticImages
+from repro.nn.cnn import CNNModel
+from repro.nn.layers import QuantConfig
+from repro.nn.spec import init_params
+from repro.optim.optimizers import adamw, apply_updates
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+@dataclasses.dataclass
+class CnnRunner:
+    model: CNNModel
+    dataset: SyntheticImages
+    batch_size: int = 128
+    lr: float = 1e-3
+    qcfg: QuantConfig = QuantConfig.on()
+    seed: int = 0
+    use_kernel_stats: bool = False
+
+    def __post_init__(self):
+        self.optimizer = adamw(self.lr)
+        model = self.model
+        qcfg = self.qcfg
+
+        def loss_fn(params, state, comp, batch):
+            x, y = batch
+            logits, new_state, _ = model.apply(
+                params, state, x, train=True, qcfg=qcfg, comp=comp)
+            return cross_entropy(logits, y), new_state
+
+        def train_step(params, state, opt_state, comp, batch):
+            (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, state, comp, batch)
+            updates, opt_state = self.optimizer.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, new_state, opt_state, loss
+
+        def eval_step(params, state, comp, batch):
+            x, y = batch
+            logits, _, _ = model.apply(
+                params, state, x, train=False, qcfg=qcfg, comp=comp)
+            return jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.int32))
+
+        self._train_step = jax.jit(train_step)
+        self._eval_step = jax.jit(eval_step)
+        self._tap_fn = jax.jit(
+            lambda params, state, comp, x: model.apply(
+                params, state, x, train=False, qcfg=qcfg, comp=comp,
+                capture_taps=True)[2]
+        )
+
+    # ------------------------------------------------------------------ setup
+
+    def init(self):
+        key = jax.random.PRNGKey(self.seed)
+        params = init_params(key, self.model.spec)
+        state = init_params(key, self.model.state_spec)
+        opt_state = self.optimizer.init(params)
+        comp = self.identity_comp(params)
+        return params, state, opt_state, comp
+
+    def identity_comp(self, params) -> Dict[str, qat.CompState]:
+        comp = {}
+        for cl in self.model.comp_layers:
+            w = self.model.get_weight(params, cl.name)
+            comp[cl.name] = qat.identity_comp(w.shape, w.dtype)
+        return comp
+
+    # ------------------------------------------------------------------ train
+
+    def train(self, params, state, opt_state, comp, n_steps: int,
+              start_step: int = 0, log_every: int = 0):
+        loss = jnp.nan
+        for i in range(n_steps):
+            batch = self.dataset.batch(start_step + i, self.batch_size, "train")
+            params, state, opt_state, loss = self._train_step(
+                params, state, opt_state, comp, batch)
+            if log_every and (i + 1) % log_every == 0:
+                print(f"  step {start_step + i + 1}: loss={float(loss):.4f}")
+        return params, state, opt_state, float(loss)
+
+    def accuracy(self, params, state, comp, n_batches: int = 8,
+                 split: str = "val") -> float:
+        correct = 0
+        for i in range(n_batches):
+            batch = self.dataset.batch(i, self.batch_size, split)
+            correct += int(self._eval_step(params, state, comp, batch))
+        return correct / (n_batches * self.batch_size)
+
+    # ---------------------------------------------------------------- profile
+
+    def capture_taps(self, params, state, comp, n_batches: int = 1):
+        """Merged taps {layer: {a_int, w_int}} over a few val batches."""
+        taps_all: Dict[str, dict] = {}
+        for i in range(n_batches):
+            x, _ = self.dataset.batch(i, self.batch_size, "val")
+            taps = self._tap_fn(params, state, comp, x)
+            for name, t in taps.items():
+                if name in taps_all:
+                    taps_all[name]["a_int"] = jnp.concatenate(
+                        [taps_all[name]["a_int"], t["a_int"]], axis=0)
+                else:
+                    taps_all[name] = dict(t)
+        return taps_all
+
+    def layer_trace_inputs(self, cl, tap):
+        """(W_mat (M,K) int, X_col (K,N) int) for one compressible layer."""
+        if cl.kind == "conv":
+            w_mat = conv_weight_matrix(tap["w_int"])
+            x_col = im2col(tap["a_int"], (cl.kernel, cl.kernel), cl.stride,
+                           cl.padding)
+        else:
+            w_mat = tap["w_int"].T  # dense w is (in, out) -> (M=out, K=in)
+            a = tap["a_int"].reshape(-1, tap["a_int"].shape[-1])
+            x_col = a.T
+        return w_mat, x_col
+
+    def profile(self, params, state, comp, *, n_batches: int = 1,
+                max_tiles: int = 24) -> Dict[str, LayerStats]:
+        """Per-layer systolic trace statistics from captured activations."""
+        taps = self.capture_taps(params, state, comp, n_batches)
+        out: Dict[str, LayerStats] = {}
+        for cl in self.model.comp_layers:
+            w_mat, x_col = self.layer_trace_inputs(cl, taps[cl.name])
+            out[cl.name] = collect_layer_stats(
+                w_mat, x_col, max_tiles=max_tiles,
+                key=jax.random.PRNGKey(hash(cl.name) % (2**31)),
+                use_kernel=self.use_kernel_stats,
+            )
+        return out
+
+    def energy_models(self, params, comp, stats: Dict[str, LayerStats],
+                      batch: int = 1) -> Dict[str, LayerEnergyModel]:
+        """LayerEnergyModel per compressible layer at inference batch size."""
+        from repro.core.energy_lut import blended_lut
+        from repro.core.layer_energy import weight_value_counts
+
+        out = {}
+        for cl in self.model.comp_layers:
+            dims = cl.matmul_dims(batch)
+            lut = blended_lut(stats[cl.name])
+            w = self.model.get_weight(params, cl.name)
+            w_int = qat.quantize_weight_int(w, comp[cl.name])
+            if cl.kind == "conv":
+                w_int = conv_weight_matrix(w_int)
+            else:
+                w_int = w_int.T
+            counts = weight_value_counts(w_int, dims)
+            out[cl.name] = LayerEnergyModel(cl.name, dims, lut, counts)
+        return out
+
+    def refresh_counts(self, params, comp,
+                       models: Dict[str, LayerEnergyModel]) -> Dict[str, LayerEnergyModel]:
+        """Recompute weight-value histograms after params/comp changed."""
+        from repro.core.layer_energy import weight_value_counts
+
+        out = {}
+        for cl in self.model.comp_layers:
+            m = models[cl.name]
+            w = self.model.get_weight(params, cl.name)
+            w_int = qat.quantize_weight_int(w, comp[cl.name])
+            w_int = conv_weight_matrix(w_int) if cl.kind == "conv" else w_int.T
+            out[cl.name] = m.with_counts(weight_value_counts(w_int, m.dims))
+        return out
+
+
+def total_energy(models: Dict[str, LayerEnergyModel]) -> float:
+    return float(sum(m.energy for m in models.values()))

@@ -1,0 +1,193 @@
+"""Energy-prioritized layer-wise compression schedule (paper 4.3).
+
+Layers are sorted by normalized energy share ρ_l = E_l / Σ_j E_j and
+processed in descending order. For each layer we try candidate configurations
+(prune ratio × target codebook size), most aggressive first (ranked by
+estimated energy saving), and accept the first whose post-finetune *global*
+validation accuracy stays above ``acc0 - δ``. Low-energy layers therefore
+naturally receive milder compression — exactly the behaviour of Table 2.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import qat
+from repro.core.layer_energy import LayerEnergyModel, layer_energy_from_counts
+from repro.core.weight_selection import (
+    SelectionConfig,
+    SelectionReport,
+    codebook_comp,
+    greedy_backward_elimination,
+    initial_candidate_set,
+)
+
+
+@dataclasses.dataclass
+class ScheduleConfig:
+    # candidate configurations, aggressive -> mild (paper: ratios {0.3,0.5,0.7},
+    # sizes {32,24,16})
+    prune_ratios: Tuple[float, ...] = (0.7, 0.5, 0.3)
+    k_targets: Tuple[int, ...] = (16, 24, 32)
+    delta_acc: float = 0.03
+    finetune_steps: int = 60        # after each accepted layer config
+    trial_finetune_steps: int = 30  # inside a trial, before the accept check
+    eval_batches: int = 4
+    min_energy_share: float = 0.01  # skip layers below this ρ (tiny fc heads)
+    max_layers: Optional[int] = None  # cap processed layers (tests)
+
+
+@dataclasses.dataclass
+class LayerDecision:
+    layer: str
+    share: float
+    prune_ratio: Optional[float]
+    k: Optional[int]
+    energy_before: float
+    energy_after: float
+    accuracy: float
+    accepted: bool
+    tried: List[Tuple[float, int]] = dataclasses.field(default_factory=list)
+
+    @property
+    def saving(self) -> float:
+        if self.energy_before <= 0:
+            return 0.0
+        return 1.0 - self.energy_after / self.energy_before
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    decisions: List[LayerDecision]
+    acc0: float
+    acc_final: float
+    energy_before: float
+    energy_after: float
+    selection_reports: List[SelectionReport]
+
+    @property
+    def energy_saving(self) -> float:
+        return 1.0 - self.energy_after / max(self.energy_before, 1e-12)
+
+
+def _config_order(cfg: ScheduleConfig) -> List[Tuple[float, int]]:
+    """All (prune, k) combos, most aggressive (highest expected saving) first."""
+    combos = [(p, k) for p in cfg.prune_ratios for k in cfg.k_targets]
+    # higher prune + smaller k first
+    return sorted(combos, key=lambda pk: (-pk[0], pk[1]))
+
+
+def energy_prioritized_compression(
+    runner,
+    params,
+    state,
+    opt_state,
+    comp: Dict[str, qat.CompState],
+    stats,
+    cfg: ScheduleConfig,
+    sel_cfg: Optional[SelectionConfig] = None,
+    *,
+    verbose: bool = False,
+) -> Tuple[object, object, object, Dict[str, qat.CompState], ScheduleResult]:
+    """Run the full layer-wise schedule. Returns updated (params, state,
+    opt_state, comp, result)."""
+    sel_cfg = sel_cfg or SelectionConfig(delta_acc=cfg.delta_acc)
+
+    acc0 = runner.accuracy(params, state, comp, n_batches=cfg.eval_batches)
+    models = runner.energy_models(params, comp, stats)
+    e_total_before = sum(m.energy for m in models.values())
+    shares = {n: m.energy / max(e_total_before, 1e-12) for n, m in models.items()}
+    order = sorted(shares, key=lambda n: -shares[n])
+    if cfg.max_layers is not None:
+        order = order[: cfg.max_layers]
+
+    decisions: List[LayerDecision] = []
+    reports: List[SelectionReport] = []
+
+    for layer in order:
+        share = shares[layer]
+        e_before = models[layer].energy
+        if share < cfg.min_energy_share:
+            decisions.append(LayerDecision(layer, share, None, None, e_before,
+                                           e_before, acc0, False))
+            continue
+        if verbose:
+            print(f"[schedule] layer={layer} share={share:.3f}")
+
+        accepted = False
+        tried: List[Tuple[float, int]] = []
+        for prune, k_target in _config_order(cfg):
+            tried.append((prune, k_target))
+            t0 = time.time()
+            # --- trial state (rollback on reject)
+            t_params, t_state, t_opt = params, state, opt_state
+            t_comp = {n: dict(c) for n, c in comp.items()}
+
+            # 1. prune
+            w = runner.model.get_weight(t_params, layer)
+            t_comp[layer]["mask"] = qat.magnitude_prune_mask(w, prune)
+
+            # 2. fine-tune with the mask (paper: pruning first, then finetune)
+            if cfg.trial_finetune_steps:
+                t_params, t_state, t_opt, _ = runner.train(
+                    t_params, t_state, t_opt, t_comp, cfg.trial_finetune_steps)
+
+            # 3. weight-set selection on the pruned layer
+            t_models = runner.refresh_counts(t_params, t_comp, models)
+            lsel = dataclasses.replace(sel_cfg, k_target=k_target)
+            init_set = initial_candidate_set(
+                t_models[layer].counts, t_models[layer].lut, lsel)
+
+            def eval_with_codebook(values, n_batches, _layer=layer,
+                                   _params=t_params, _state=t_state,
+                                   _comp=t_comp):
+                c2 = codebook_comp(_comp, _layer, values)
+                return runner.accuracy(_params, _state, c2, n_batches=n_batches)
+
+            final_set, rep = greedy_backward_elimination(
+                t_models[layer], init_set, lsel, acc0,
+                eval_with_codebook=eval_with_codebook)
+            t_comp = codebook_comp(t_comp, layer, final_set)
+
+            # 4. short fine-tune with the restriction active, then accept check
+            if cfg.finetune_steps:
+                t_params, t_state, t_opt, _ = runner.train(
+                    t_params, t_state, t_opt, t_comp, cfg.finetune_steps)
+            acc = runner.accuracy(t_params, t_state, t_comp,
+                                  n_batches=cfg.eval_batches)
+            if verbose:
+                print(f"  try prune={prune} k={k_target}: acc={acc:.3f} "
+                      f"(floor {acc0 - cfg.delta_acc:.3f}) "
+                      f"[{time.time() - t0:.1f}s]")
+            if acc >= acc0 - cfg.delta_acc:
+                params, state, opt_state, comp = t_params, t_state, t_opt, t_comp
+                models = runner.refresh_counts(params, comp, models)
+                e_after = models[layer].energy
+                decisions.append(LayerDecision(
+                    layer, share, prune, k_target, e_before, e_after, acc,
+                    True, tried))
+                reports.append(rep)
+                accepted = True
+                break
+
+        if not accepted:
+            decisions.append(LayerDecision(layer, share, None, None, e_before,
+                                           e_before, acc0, False, tried))
+
+    models = runner.refresh_counts(params, comp, models)
+    e_total_after = sum(m.energy for m in models.values())
+    acc_final = runner.accuracy(params, state, comp, n_batches=cfg.eval_batches)
+    result = ScheduleResult(
+        decisions=decisions,
+        acc0=acc0,
+        acc_final=acc_final,
+        energy_before=e_total_before,
+        energy_after=e_total_after,
+        selection_reports=reports,
+    )
+    return params, state, opt_state, comp, result

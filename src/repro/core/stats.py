@@ -1,0 +1,246 @@
+"""Layer-specific activation & partial-sum transition statistics (paper 3.1.2).
+
+For every convolution/linear layer we collect, from traced int8 activations
+and the layer's int8 weights:
+
+  * the activation transition histogram  ``act_hist[256, 256]``
+    (indexed by ``a_prev + 128`` / ``a_cur + 128``),
+  * the grouped partial-sum transition histogram ``group_hist[50, 50]``
+    (MSB x Hamming-weight groups of `repro.core.grouping`),
+  * the per-weight-value trace energy accumulators
+    ``energy_sum[256]`` / ``count[256]``.
+
+The trace follows the weight-stationary 64x64 systolic mapping: the weight
+matrix W (M x K) is tiled into (64-K x 64-M) stationary tiles, an activation
+block X (64-K x T) streams through, and MAC (r, c) holds
+``S[r, c, t] = sum_{r' <= r} W_tile[r', c] * A[r', t]`` in its accumulator.
+Transitions are taken along t (the streaming axis). Skewed streaming only
+time-shifts each MAC's sequence, so the transition *multiset* is identical to
+the unskewed prefix-sum trace we compute.
+
+This file is the pure-jnp oracle; `repro.kernels.transition_energy` provides
+the Pallas TPU kernel for the same computation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grouping import N_GROUPS, group_id
+from repro.core.mac_model import DEFAULT_COEFFS, MacEnergyCoeffs, mac_transition_energy
+
+TILE = 64  # systolic array dimension (64x64 weight-stationary, paper 3.2)
+N_WVALS = 256  # int8 weight values, indexed by w + 128
+
+
+@dataclass
+class LayerStats:
+    """Accumulated transition statistics for one layer."""
+
+    act_hist: jax.Array        # (256, 256) float32 counts
+    group_hist: jax.Array      # (50, 50) float32 counts
+    energy_sum: jax.Array      # (256,) float32, summed transition energy per weight value
+    count: jax.Array           # (256,) float32, number of transitions per weight value
+    n_transitions: int         # total transitions traced
+
+    def act_probs(self) -> jax.Array:
+        total = jnp.maximum(jnp.sum(self.act_hist), 1.0)
+        return self.act_hist / total
+
+    def group_probs(self) -> jax.Array:
+        total = jnp.maximum(jnp.sum(self.group_hist), 1.0)
+        return self.group_hist / total
+
+    def trace_lut(self) -> jax.Array:
+        """Per-weight-value average transition energy; zero-count -> mean fill."""
+        counts = jnp.maximum(self.count, 1.0)
+        lut = self.energy_sum / counts
+        seen = self.count > 0
+        mean_seen = jnp.sum(jnp.where(seen, lut, 0.0)) / jnp.maximum(jnp.sum(seen), 1)
+        return jnp.where(seen, lut, mean_seen)
+
+
+def empty_stats() -> LayerStats:
+    return LayerStats(
+        act_hist=jnp.zeros((N_WVALS, N_WVALS), jnp.float32),
+        group_hist=jnp.zeros((N_GROUPS, N_GROUPS), jnp.float32),
+        energy_sum=jnp.zeros((N_WVALS,), jnp.float32),
+        count=jnp.zeros((N_WVALS,), jnp.float32),
+        n_transitions=0,
+    )
+
+
+def tile_psum_trace(w_tile: jax.Array, a_block: jax.Array) -> jax.Array:
+    """Partial-sum trace S[r, c, t] of one weight-stationary tile.
+
+    w_tile: (K_t, M_t) int  — stationary weights (rows = reduction dim)
+    a_block: (K_t, T) int   — streamed activation columns
+    returns (K_t, M_t, T) int32 partial sums (22-bit range by construction).
+    """
+    w_tile = jnp.asarray(w_tile, jnp.int32)
+    a_block = jnp.asarray(a_block, jnp.int32)
+    prods = w_tile[:, :, None] * a_block[:, None, :]  # (K, M, T)
+    return jnp.cumsum(prods, axis=0)
+
+
+def tile_transition_stats(
+    w_tile: jax.Array,
+    a_block: jax.Array,
+    coeffs: MacEnergyCoeffs = DEFAULT_COEFFS,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Trace one tile; return (energy_sum[256], count[256], group_hist, act_hist).
+
+    Shapes as in `tile_psum_trace`. Differentiable nowhere; int statistics.
+    """
+    w_tile = jnp.asarray(w_tile, jnp.int32)
+    a_block = jnp.asarray(a_block, jnp.int32)
+    k_t, m_t = w_tile.shape
+    t_len = a_block.shape[1]
+
+    psums = tile_psum_trace(w_tile, a_block)  # (K, M, T)
+    p_prev, p_cur = psums[:, :, :-1], psums[:, :, 1:]
+    a_prev, a_cur = a_block[:, None, :-1], a_block[:, None, 1:]
+    w = w_tile[:, :, None]
+
+    energy = mac_transition_energy(w, a_prev, a_cur, p_prev, p_cur, coeffs)  # (K, M, T-1)
+
+    w_bins = jnp.broadcast_to(w + 128, energy.shape).reshape(-1)
+    energy_flat = energy.reshape(-1)
+    energy_sum = jax.ops.segment_sum(energy_flat, w_bins, num_segments=N_WVALS)
+    count = jax.ops.segment_sum(jnp.ones_like(energy_flat), w_bins, num_segments=N_WVALS)
+
+    g_prev = group_id(p_prev).reshape(-1)
+    g_cur = group_id(p_cur).reshape(-1)
+    g_bins = g_prev * N_GROUPS + g_cur
+    group_hist = jax.ops.segment_sum(
+        jnp.ones_like(g_bins, jnp.float32), g_bins, num_segments=N_GROUPS * N_GROUPS
+    ).reshape(N_GROUPS, N_GROUPS)
+
+    ap = (a_block[:, :-1] + 128).reshape(-1)
+    ac = (a_block[:, 1:] + 128).reshape(-1)
+    a_bins = ap * N_WVALS + ac
+    act_hist = jax.ops.segment_sum(
+        jnp.ones_like(a_bins, jnp.float32), a_bins, num_segments=N_WVALS * N_WVALS
+    ).reshape(N_WVALS, N_WVALS)
+
+    del k_t, m_t, t_len
+    return energy_sum, count, group_hist, act_hist
+
+
+_tile_transition_stats_jit = jax.jit(tile_transition_stats, static_argnames=("coeffs",))
+
+
+def pad_to_tiles(w_mat: jax.Array, x_cols: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Zero-pad W (M, K) and X (K, N) up to multiples of TILE."""
+    m, k = w_mat.shape
+    k2, n = x_cols.shape
+    assert k == k2, f"contraction mismatch: {k} vs {k2}"
+    mp = (-m) % TILE
+    kp = (-k) % TILE
+    np_ = (-n) % TILE
+    w_pad = jnp.pad(w_mat, ((0, mp), (0, kp)))
+    x_pad = jnp.pad(x_cols, ((0, kp), (0, np_)))
+    return w_pad, x_pad
+
+
+def collect_layer_stats(
+    w_mat: jax.Array,
+    x_cols: jax.Array,
+    *,
+    max_tiles: int = 48,
+    key: jax.Array | None = None,
+    coeffs: MacEnergyCoeffs = DEFAULT_COEFFS,
+    use_kernel: bool = False,
+) -> LayerStats:
+    """Trace a layer's matmul on the 64x64 array and accumulate statistics.
+
+    w_mat: (M, K) int8-valued weights (already quantized to ints).
+    x_cols: (K, N) int8-valued streamed activations (im2col for convs).
+    max_tiles: number of (m, k, n) tiles to sample (paper also samples).
+    use_kernel: route the per-tile trace through the Pallas kernel wrapper.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    w_pad, x_pad = pad_to_tiles(jnp.asarray(w_mat, jnp.int32), jnp.asarray(x_cols, jnp.int32))
+    mp, kp = w_pad.shape
+    _, np_ = x_pad.shape
+    mt, kt, nt = mp // TILE, kp // TILE, np_ // TILE
+    total_tiles = mt * kt * nt
+
+    n_sample = min(max_tiles, total_tiles)
+    choice = jax.random.choice(key, total_tiles, (n_sample,), replace=False)
+    choice = jax.device_get(choice)
+
+    if use_kernel:
+        from repro.kernels.transition_energy import ops as te_ops
+
+        tile_fn = lambda w, a: te_ops.tile_transition_stats(w, a, coeffs)  # noqa: E731
+    else:
+        tile_fn = lambda w, a: _tile_transition_stats_jit(w, a, coeffs)  # noqa: E731
+
+    stats = empty_stats()
+    e_sum, cnt, g_hist, a_hist = stats.energy_sum, stats.count, stats.group_hist, stats.act_hist
+    n_trans = 0
+    for idx in choice:
+        idx = int(idx)
+        mi, rest = divmod(idx, kt * nt)
+        ki, ni = divmod(rest, nt)
+        w_tile = w_pad[mi * TILE:(mi + 1) * TILE, ki * TILE:(ki + 1) * TILE].T  # (K_t, M_t)
+        a_block = x_pad[ki * TILE:(ki + 1) * TILE, ni * TILE:(ni + 1) * TILE]  # (K_t, T)
+        es, c, gh, ah = tile_fn(w_tile, a_block)
+        e_sum = e_sum + es
+        cnt = cnt + c
+        g_hist = g_hist + gh
+        a_hist = a_hist + ah
+        n_trans += TILE * TILE * (TILE - 1)
+
+    return LayerStats(
+        act_hist=a_hist, group_hist=g_hist, energy_sum=e_sum, count=cnt,
+        n_transitions=n_trans,
+    )
+
+
+def im2col(x: jax.Array, kernel_hw: Tuple[int, int], stride: int = 1,
+           padding: str = "SAME") -> jax.Array:
+    """im2col for NHWC input -> (kh*kw*Cin, N*Hout*Wout) columns.
+
+    Row ordering is ``k = (kh_i * kw + kw_i) * C_in + c`` so that a kernel
+    reshaped as ``w.transpose(3, 0, 1, 2).reshape(C_out, -1)`` satisfies
+    ``W_mat @ X_col == conv(x, w)`` exactly (verified in tests). Works on
+    integer-valued (quantized) activations — the ordering must match because
+    the systolic trace pairs W_mat[m, k] with X_col[k, n].
+    """
+    x = jnp.asarray(x)
+    kh, kw = kernel_hw
+    n, h, w, c = x.shape
+    if padding == "SAME":
+        ho = -(-h // stride)
+        wo = -(-w // stride)
+        pad_h = max((ho - 1) * stride + kh - h, 0)
+        pad_w = max((wo - 1) * stride + kw - w, 0)
+        x = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    elif padding == "VALID":
+        ho = (h - kh) // stride + 1
+        wo = (w - kw) // stride + 1
+    else:
+        raise ValueError(padding)
+    windows = []
+    for i in range(kh):
+        for j in range(kw):
+            windows.append(
+                x[:, i:i + (ho - 1) * stride + 1:stride,
+                  j:j + (wo - 1) * stride + 1:stride, :]
+            )  # (N, Hout, Wout, C)
+    patches = jnp.stack(windows, axis=3)  # (N, Hout, Wout, kh*kw, C)
+    cols = patches.reshape(n * ho * wo, kh * kw * c).T  # (K, N_cols)
+    return cols
+
+
+def conv_weight_matrix(w: jax.Array) -> jax.Array:
+    """HWIO conv kernel -> (C_out, kh*kw*C_in) matrix matching `im2col` rows."""
+    return jnp.transpose(w, (3, 0, 1, 2)).reshape(w.shape[3], -1)

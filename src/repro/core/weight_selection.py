@@ -1,0 +1,176 @@
+"""Energy-accuracy co-optimized weight-set selection (paper 4.2).
+
+Two stages per layer:
+
+1. **Safe initial candidate set** (4.2.1): rank all int8 weight values by a
+   joint score favoring *low energy* and *high usage* in this layer, take the
+   top ``k_init`` (default 32). Zero is force-included (pruned weights must
+   stay representable).
+
+2. **Greedy backward elimination** (4.2.2): repeatedly score every removable
+   value ``w`` by ``S(w) = ΔE(w) / (ΔAcc(w) + ε)`` where ΔE remaps all
+   occurrences of ``w`` to the nearest remaining value (O(256) via the
+   histogram energy model) and ΔAcc is measured by a cheap calibration pass
+   (jitted eval on a scoring batch). The best-scoring removal is accepted iff
+   the full validation accuracy stays above ``acc0 - δ``; otherwise the value
+   is marked *essential* and skipped thereafter. Terminates at ``k_target``
+   or when nothing is removable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qat
+from repro.core.layer_energy import (
+    LayerEnergyModel,
+    delta_energy_remove,
+    layer_energy_from_counts,
+)
+
+
+@dataclasses.dataclass
+class SelectionConfig:
+    k_init: int = 32
+    k_target: int = 16
+    delta_acc: float = 0.03          # δ: allowed global accuracy drop
+    epsilon: float = 1e-3            # ε in S(w)
+    usage_weight: float = 0.5        # λ: usage vs energy in the initial joint score
+    score_batches: int = 1           # cheap calibration pass for ΔAcc scoring
+    accept_batches: int = 4          # fuller eval for the accept check
+    max_score_candidates: int = 32   # score at most this many removal candidates
+
+
+@dataclasses.dataclass
+class SelectionReport:
+    layer: str
+    initial: List[int]
+    final: List[int]
+    removed: List[int]
+    essential: List[int]
+    energy_before: float
+    energy_after: float
+    acc_checks: int = 0
+
+
+def initial_candidate_set(
+    counts: jnp.ndarray, lut: jnp.ndarray, cfg: SelectionConfig
+) -> List[int]:
+    """Joint low-energy / high-usage ranking (paper 4.2.1)."""
+    counts = np.asarray(counts, np.float64)
+    lut = np.asarray(lut, np.float64)
+    e_min, e_max = lut.min(), lut.max()
+    norm_e = (lut - e_min) / max(e_max - e_min, 1e-12)
+    norm_u = counts / max(counts.max(), 1.0)
+    score = cfg.usage_weight * norm_u - (1.0 - cfg.usage_weight) * norm_e
+    order = np.argsort(-score)
+    chosen = [int(i) - 128 for i in order[: cfg.k_init]]
+    if 0 not in chosen:
+        chosen[-1] = 0
+    return sorted(chosen)
+
+
+def nearest_other(values: Sequence[int], w: int) -> int:
+    others = [v for v in values if v != w]
+    return min(others, key=lambda v: (abs(v - w), v))
+
+
+def _counts_after_remove(counts: jnp.ndarray, w: int, nearest: int) -> jnp.ndarray:
+    wi, ni = w + 128, nearest + 128
+    moved = counts[wi]
+    return counts.at[ni].add(moved).at[wi].set(0.0)
+
+
+def greedy_backward_elimination(
+    model: LayerEnergyModel,
+    candidate: List[int],
+    cfg: SelectionConfig,
+    acc0: float,
+    *,
+    eval_with_codebook,   # (codebook_values: List[int], n_batches: int) -> float
+) -> Tuple[List[int], SelectionReport]:
+    """Paper 4.2.2. ``eval_with_codebook`` measures global val accuracy with
+    this layer restricted to the given values (other layers unchanged)."""
+    values = sorted(candidate)
+    counts = model.counts
+    lut = model.lut
+    dims = model.dims
+    e_before = float(layer_energy_from_counts(counts, lut, dims))
+    essential: set[int] = set()
+    removed: List[int] = []
+    acc_checks = 0
+
+    acc_ref = eval_with_codebook(values, cfg.score_batches)
+    acc_checks += 1
+
+    while len(values) > cfg.k_target:
+        removable = [w for w in values if w not in essential and w != 0]
+        if not removable:
+            break
+
+        # cheap ΔE for every candidate; rank, then score ΔAcc for the top few
+        d_es = {}
+        for w in removable:
+            nb = nearest_other(values, w)
+            d_es[w] = float(delta_energy_remove(counts, lut, dims, w, nb))
+        by_de = sorted(removable, key=lambda w: -d_es[w])
+        to_score = by_de[: cfg.max_score_candidates]
+
+        scores = {}
+        for w in to_score:
+            trial = [v for v in values if v != w]
+            acc_w = eval_with_codebook(trial, cfg.score_batches)
+            acc_checks += 1
+            d_acc = max(acc_ref - acc_w, 0.0)
+            scores[w] = d_es[w] / (d_acc + cfg.epsilon)
+
+        w_star = max(scores, key=scores.get)
+        trial = [v for v in values if v != w_star]
+        acc_new = eval_with_codebook(trial, cfg.accept_batches)
+        acc_checks += 1
+        if acc_new >= acc0 - cfg.delta_acc:
+            nb = nearest_other(values, w_star)
+            counts = _counts_after_remove(counts, w_star, nb)
+            values = trial
+            removed.append(w_star)
+            acc_ref = eval_with_codebook(values, cfg.score_batches)
+            acc_checks += 1
+        else:
+            essential.add(w_star)
+
+    e_after = float(layer_energy_from_counts(counts, lut, dims))
+    report = SelectionReport(
+        layer=model.name,
+        initial=sorted(candidate),
+        final=sorted(values),
+        removed=removed,
+        essential=sorted(essential),
+        energy_before=e_before,
+        energy_after=e_after,
+        acc_checks=acc_checks,
+    )
+    return sorted(values), report
+
+
+def naive_lowest_energy_set(lut: jnp.ndarray, k: int) -> List[int]:
+    """Baseline (paper 5.3.3): the k lowest-energy weight values, ignoring
+    representational importance."""
+    order = np.argsort(np.asarray(lut))
+    vals = sorted(int(i) - 128 for i in order[:k])
+    return vals
+
+
+def codebook_comp(
+    comp: Dict[str, qat.CompState], layer: str, values: Sequence[int]
+) -> Dict[str, qat.CompState]:
+    """Functional update: new comp dict with ``layer`` restricted to values."""
+    cb, k = qat.make_codebook(values)
+    new_layer = dict(comp[layer])
+    new_layer["codebook"], new_layer["codebook_k"] = cb, k
+    out = dict(comp)
+    out[layer] = new_layer
+    return out

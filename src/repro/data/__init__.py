@@ -1,0 +1,3 @@
+"""Deterministic, resumable, shardable synthetic data pipelines."""
+
+from repro.data.synthetic import SyntheticImages, SyntheticTokens  # noqa: F401

@@ -1,0 +1,8 @@
+"""Distribution: sharding rules, collectives, elasticity, fault tolerance."""
+
+from repro.distributed.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    ShardingRules,
+    logical_to_spec,
+    make_param_shardings,
+)

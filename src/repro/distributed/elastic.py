@@ -1,0 +1,51 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+Checkpoints are host-side numpy (see repro.checkpoint.manager), so elastic
+restarts reduce to: build the new mesh from the devices that are actually
+healthy, re-derive shardings from the (unchanged) logical axis rules, and
+device_put. Because our sharding rules guard on divisibility per tensor, the
+same rules produce valid placements at any power-of-two slice of the fleet —
+a 2x16x16 job can resume on 16x16 or 8x16 without code changes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import DEFAULT_RULES, ShardingRules
+
+
+def available_mesh(model_parallel: int, *, axis_names=("data", "model"),
+                   devices=None) -> Mesh:
+    """Largest (data, model) mesh the healthy devices support."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    assert n % model_parallel == 0, (n, model_parallel)
+    arr = np.asarray(devices[: (n // model_parallel) * model_parallel])
+    return Mesh(arr.reshape(n // model_parallel, model_parallel), axis_names)
+
+
+def elastic_restore(
+    ckpt,                       # CheckpointManager
+    model,                      # LMModel (for sharding re-derivation)
+    mesh: Mesh,
+    *,
+    step: Optional[int] = None,
+    rules: ShardingRules = DEFAULT_RULES,
+) -> tuple[int, Any]:
+    """Restore a train state onto `mesh` regardless of the mesh it was saved
+    under."""
+    from repro.launch.train import train_state_shardings
+
+    shardings = train_state_shardings(model, mesh, rules)
+    return ckpt.restore(step, shardings=shardings)
+
+
+def reshard(state_host: Any, shardings: Any) -> Any:
+    """device_put a host-side state tree onto new shardings."""
+    return jax.tree.map(jax.device_put, state_host, shardings)

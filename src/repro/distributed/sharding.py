@@ -1,0 +1,242 @@
+"""Logical-axis -> mesh sharding rules with a divisibility guard.
+
+Parameters/caches carry *logical* axis names (see `repro.nn.spec.ParamSpec`);
+this module maps them onto mesh axes:
+
+    batch    -> ("pod", "data")   (data parallel, across pods too)
+    vocab    -> "model"           (vocab is padded to 256 so it always divides)
+    heads    -> "model"           (tensor parallel attention)
+    kv_heads -> "model"
+    mlp      -> "model"           (tensor parallel FFN)
+    expert   -> "model"           (expert parallel MoE)
+    inner    -> "model"           (SSM/RG-LRU inner dim)
+    embed    -> "data"            (FSDP: parameters+optimizer sharded over
+                                   the data axis; gathered per layer)
+    layers   -> None              (scan axis; a future PP axis would go here)
+
+**Divisibility guard**: a logical axis whose dimension does not divide the
+product of its mesh axes falls back to replication for that tensor (logged).
+E.g. recurrentgemma's 10 heads or whisper's 20 heads on a 16-way model axis
+replicate, while their mlp/inner dims still shard 16-way. This is what makes
+one rule set serve all 10 assigned architectures without per-arch special
+cases — and the guard report is part of the dry-run manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.nn.spec import ParamSpec, is_spec, param_axes
+
+log = logging.getLogger(__name__)
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Tuple[Tuple[str, AxisVal], ...]
+
+    def lookup(self, logical: Optional[str]) -> AxisVal:
+        if logical is None:
+            return None
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+    def replace(self, **kw) -> "ShardingRules":
+        new = []
+        for k, v in self.rules:
+            new.append((k, kw.pop(k, v)))
+        for k, v in kw.items():
+            new.append((k, v))
+        return ShardingRules(tuple(new))
+
+
+DEFAULT_RULES = ShardingRules((
+    ("batch", ("pod", "data")),
+    ("seq", "model"),        # sequence parallelism opt-in (see §Perf log:
+                             # hurts on this XLA pipeline, kept as a knob)
+    ("kv_seq", "model"),     # decode-cache sequence sharding (opt-in; used
+                             # when kv_heads cannot divide the model axis)
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("expert", "model"),
+    ("moe_ff", None),        # expert FFN dim; switch with expert=None,
+                             # moe_ff=model for tensor-parallel experts
+    ("moe_embed", "data"),   # expert d_model dim (FSDP by default; experts
+                             # are E-sharded already, so moe_embed=None drops
+                             # the per-layer expert weight gathers)
+    ("inner", "model"),
+    ("embed", "data"),
+    ("layers", None),
+))
+
+
+def _mesh_size(mesh: Mesh, axis: AxisVal) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis] if axis in mesh.axis_names else 1
+    return int(np.prod([mesh.shape[a] for a in axis if a in mesh.axis_names]))
+
+
+def _present(mesh: Mesh, axis: AxisVal) -> AxisVal:
+    """Drop mesh axes that don't exist in this mesh (e.g. 'pod' single-pod)."""
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in mesh.axis_names else None
+    kept = tuple(a for a in axis if a in mesh.axis_names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: ShardingRules = DEFAULT_RULES,
+    *,
+    guard_report: Optional[List[str]] = None,
+    tensor_name: str = "",
+) -> PartitionSpec:
+    """PartitionSpec for one tensor, applying the divisibility guard and
+    ensuring no mesh axis is consumed twice."""
+    used: set = set()
+    parts = []
+    for dim, logical in zip(shape, logical_axes):
+        axis = _present(mesh, rules.lookup(logical))
+        if axis is None:
+            parts.append(None)
+            continue
+        axis_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
+        if any(a in used for a in axis_tuple):
+            parts.append(None)
+            continue
+        size = _mesh_size(mesh, axis)
+        if size <= 1:
+            parts.append(None)
+            continue
+        if dim % size != 0:
+            if guard_report is not None:
+                guard_report.append(
+                    f"{tensor_name}: dim {dim} (logical '{logical}') not "
+                    f"divisible by mesh axis {axis} (size {size}); replicated")
+            parts.append(None)
+            continue
+        parts.append(axis)
+        used.update(axis_tuple)
+    # trailing Nones can be dropped but are harmless
+    return PartitionSpec(*parts)
+
+
+def make_param_shardings(
+    spec_tree,
+    mesh: Mesh,
+    rules: ShardingRules = DEFAULT_RULES,
+    *,
+    guard_report: Optional[List[str]] = None,
+):
+    """NamedSharding tree for a ParamSpec tree."""
+
+    def one(s: ParamSpec) -> NamedSharding:
+        axes = s.axes if s.axes else (None,) * len(s.shape)
+        spec = logical_to_spec(axes, s.shape, mesh, rules,
+                               guard_report=guard_report,
+                               tensor_name="x".join(map(str, s.shape)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, spec_tree, is_leaf=is_spec)
+
+
+def shardings_from_axes_tree(
+    axes_tree,
+    shape_tree,
+    mesh: Mesh,
+    rules: ShardingRules = DEFAULT_RULES,
+    *,
+    guard_report: Optional[List[str]] = None,
+):
+    """NamedShardings for an arbitrary pytree given parallel axes/shape trees
+    (used for caches and batches). Axes-tree leaves are tuples."""
+    is_tup = lambda x: isinstance(x, tuple) or x is None  # noqa: E731
+    axes_leaves, treedef = jax.tree.flatten(axes_tree, is_leaf=is_tup)
+    shape_leaves = jax.tree.leaves(shape_tree)
+    assert len(axes_leaves) == len(shape_leaves), (
+        len(axes_leaves), len(shape_leaves))
+    out = []
+    for axes, sds in zip(axes_leaves, shape_leaves):
+        axes = axes if axes is not None else (None,) * len(sds.shape)
+        spec = logical_to_spec(axes, sds.shape, mesh, rules,
+                               guard_report=guard_report,
+                               tensor_name="x".join(map(str, sds.shape)))
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree.unflatten(treedef, out)
+
+
+def batch_sharding(mesh: Mesh, shape: Sequence[int],
+                   rules: ShardingRules = DEFAULT_RULES,
+                   batch_dim: int = 0) -> NamedSharding:
+    """Shard only the batch dim of an activation/batch tensor (guarded:
+    a batch that does not divide the data axes replicates, e.g. batch=1
+    long-context decode)."""
+    axis = _present(mesh, rules.lookup("batch"))
+    parts: list = [None] * len(shape)
+    if axis is not None and shape[batch_dim] % _mesh_size(mesh, axis) == 0:
+        parts[batch_dim] = axis
+    return NamedSharding(mesh, PartitionSpec(*parts))
+
+
+def logits_constraint(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
+    """Callable for (B, S, V) logits: batch over ("pod","data"), vocab over
+    "model" — keeps the fp32 logits (the largest train-time tensor) fully
+    sharded instead of replicated over the model axis."""
+    b_axis = _present(mesh, rules.lookup("batch"))
+    v_axis = _present(mesh, rules.lookup("vocab"))
+
+    def shard(x):
+        parts = [b_axis] + [None] * (x.ndim - 2) + [v_axis]
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(*parts)))
+
+    return shard
+
+
+def activation_constraint(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES,
+                          *, sequence_parallel: bool = False):
+    """Callable applied to (B, S, d) residual-stream activations inside the
+    model: batch over ("pod","data"); with ``sequence_parallel`` the seq dim
+    is additionally sharded over "model" (Megatron-SP style) — this is what
+    keeps the per-layer saved residuals (the dominant train-time buffer,
+    O(L x B x S x D)) sharded 16-ways instead of replicated on the model
+    axis. Attention/collectives re-gather transiently inside the layer.
+
+    Divisibility guards run per call: decode steps (S=1) and odd shapes fall
+    back to batch-only sharding automatically.
+    """
+    b_axis = _present(mesh, rules.lookup("batch"))
+    s_axis = _present(mesh, rules.lookup("seq")) if sequence_parallel else None
+    b_size = _mesh_size(mesh, b_axis)
+    s_size = _mesh_size(mesh, s_axis)
+
+    def shard(x):
+        ba = b_axis if (b_axis and x.shape[0] % b_size == 0 and b_size > 1) else None
+        sa = None
+        if x.ndim >= 3 and s_axis and s_size > 1 and x.shape[1] % s_size == 0:
+            sa = s_axis
+        parts = [ba, sa] + [None] * (x.ndim - 2)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(*parts[:x.ndim])))
+
+    return shard

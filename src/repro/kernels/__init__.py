@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots of the paper's pipeline.
+
+  lut_matmul         4-bit codebook-index GEMM (deploys the restricted
+                     weight sets of Section 4 on the MXU)
+  transition_energy  systolic partial-sum transition statistics (replaces
+                     the paper's gate-level MAC profiling loop)
+  fake_quant         fused mask+quantize+codebook-project (QAT hot path)
+
+Each kernel ships `<name>.py` (pl.pallas_call + BlockSpec), `ops.py` (jit'd
+wrapper + custom VJP where applicable) and `ref.py` (pure-jnp oracle).
+Kernels target TPU VMEM/MXU tiling and are validated with interpret=True on
+CPU (per-kernel allclose tests sweep shapes and dtypes).
+"""

@@ -1,0 +1,42 @@
+"""jit'd wrapper + straight-through-estimator custom VJP."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fake_quant.fake_quant import fake_quant_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def fake_quant_project(w, mask, scale, codebook, k, *, block_m: int = 256,
+                       block_n: int = 256, interpret: bool = True):
+    """Forward fused mask+quant+project; pads to block multiples."""
+    m, n = w.shape
+    pm, pn = (-m) % block_m, (-n) % block_n
+    wp = jnp.pad(w, ((0, pm), (0, pn)))
+    mp = jnp.pad(mask, ((0, pm), (0, pn)))
+    sp = jnp.pad(scale, (0, pn), constant_values=1.0)
+    out = fake_quant_pallas(wp, mp, sp, codebook, k, block_m=block_m,
+                            block_n=block_n, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def ste_fake_quant(w, mask, scale, codebook, k, interpret=True):
+    return fake_quant_project(w, mask, scale, codebook, k, interpret=interpret)
+
+
+def _fwd(w, mask, scale, codebook, k, interpret):
+    out = fake_quant_project(w, mask, scale, codebook, k, interpret=interpret)
+    return out, mask
+
+
+def _bwd(interpret, mask, g):
+    # straight-through: grad flows to w where unmasked; nothing else trains
+    return (g * mask.astype(g.dtype), None, None, None, None)
+
+
+ste_fake_quant.defvjp(_fwd, _bwd)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused fake-quant kernel = repro.core.qat path."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat
+
+
+def fake_quant_ref(w, mask, scale, codebook, k):
+    """Same math as qat.fake_quant_weight but with an externally supplied
+    per-column scale (matching the kernel's contract)."""
+    wm = w.astype(jnp.float32) * mask.astype(jnp.float32)
+    q = jnp.clip(jnp.round(wm / scale[None, :]), -qat.QMAX, qat.QMAX)
+    qi = qat.project_to_codebook(q.astype(jnp.int32), codebook, k)
+    return (qi.astype(jnp.float32) * scale[None, :]).astype(w.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.lut_matmul.ops import (  # noqa: F401
+    encode_weights,
+    lut_matmul,
+    pack_indices,
+)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: 4-bit codebook-index GEMM.
+
+The compressed layer of Section 4 stores, per weight, only a 4-bit index into
+the layer's restricted set C_l (|C_l| <= 16 int8 values) plus a per-output-
+channel dequant scale. This kernel streams the packed indices HBM->VMEM,
+dequantizes in-register via a 16-way select (no gather — MXU-adjacent VPU
+work), and feeds the MXU with bf16/f32 tiles:
+
+    Y[m, n] = sum_k X[m, k] * (codebook[idx[k, n]] * scale[n])
+
+Packing layout (TPU-friendly: unpack is a concat along K, no interleave):
+row pair (k, k + K/2) shares byte k of the packed array —
+    packed[k, n] = (idx[k, n] & 0xF) | (idx[k + K/2, n] << 4),  k < K/2.
+Block shapes keep the unpack aligned: block_k is even and the K grid walks
+the *packed* rows, so each (block_k//2, block_n) byte tile expands to a
+(block_k, block_n) index tile entirely inside VMEM.
+
+Grid: (M/bm, N/bn, K/bk) with K-innermost accumulation into the output tile
+(pl.when(k == 0) zero-init; the output block index ignores k, so the same
+VMEM tile is revisited across the K loop).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_CODES = 16
+
+
+def _kernel(x_ref, packed_ref, cb_ref, scale_ref, o_ref, *, block_k: int,
+            out_dtype):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                      # (bm, bk)
+    packed = packed_ref[...]            # (bk//2, bn) int8 bit patterns
+    packed_u = packed.astype(jnp.int32) & 0xFF
+    low = packed_u & 0xF                # rows [0, bk/2)
+    high = (packed_u >> 4) & 0xF        # rows [bk/2, bk)
+    idx = jnp.concatenate([low, high], axis=0)  # (bk, bn)
+
+    # 16-way select instead of gather: w = sum_c (idx == c) * cb[c]
+    w = jnp.zeros(idx.shape, jnp.float32)
+    for c in range(N_CODES):
+        w = w + jnp.where(idx == c, cb_ref[c].astype(jnp.float32), 0.0)
+    w = w * scale_ref[...].astype(jnp.float32)[None, :]  # per-out-channel
+
+    acc = jnp.dot(x.astype(jnp.float32), w,
+                  preferred_element_type=jnp.float32)
+    o_ref[...] += acc.astype(out_dtype)
+
+
+def lut_matmul_pallas(
+    x: jax.Array,            # (M, K) float
+    packed: jax.Array,       # (K//2, N) int8 packed 4-bit indices
+    codebook: jax.Array,     # (16,) int8/int32 codebook values
+    scale: jax.Array,        # (N,) float per-channel dequant scale
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    k2, n = packed.shape
+    assert k == 2 * k2, (x.shape, packed.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    assert block_k % 2 == 0
+    out_dtype = x.dtype if x.dtype != jnp.bfloat16 else jnp.float32
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    kernel = functools.partial(_kernel, block_k=block_k, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k // 2, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((N_CODES,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((block_n,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(x, packed, codebook, scale)

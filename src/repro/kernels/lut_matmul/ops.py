@@ -1,0 +1,86 @@
+"""jit'd wrappers + weight encode/pack utilities for the LUT GEMM."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lut_matmul.lut_matmul import N_CODES, lut_matmul_pallas
+from repro.kernels.lut_matmul.ref import lut_matmul_ref
+
+
+def encode_weights(w_int: jax.Array, codebook: jax.Array):
+    """Map int8-valued weights to nearest-codebook indices.
+
+    w_int: (K, N) int weights already restricted (or to be snapped) to the
+    codebook; codebook: (16,) sorted int values. Returns (K, N) int32 indices.
+    """
+    dist = jnp.abs(w_int[..., None].astype(jnp.int32)
+                   - codebook[None, None, :].astype(jnp.int32))
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+def pack_indices(idx: jax.Array, block_k: int = 128) -> jax.Array:
+    """(K, N) 4-bit indices -> (K//2, N) int8, block-local pairing.
+
+    Within each K block of ``block_k`` rows, byte row j packs index rows j
+    (low nibble) and j + block_k/2 (high nibble) so the kernel's unpack is a
+    VMEM-internal concat (no cross-block shuffling).
+    """
+    k, n = idx.shape
+    assert k % block_k == 0 and block_k % 2 == 0
+    blocks = idx.reshape(k // block_k, block_k, n).astype(jnp.int32)
+    low = blocks[:, : block_k // 2]
+    high = blocks[:, block_k // 2:]
+    packed = (low & 0xF) | ((high & 0xF) << 4)
+    return packed.reshape(k // 2, n).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret", "use_ref"))
+def lut_matmul(
+    x: jax.Array,
+    packed: jax.Array,
+    codebook: jax.Array,
+    scale: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Y = X @ dequant(packed) — pads M/N/K to block multiples as needed."""
+    if use_ref:
+        return lut_matmul_ref(x, packed, codebook, scale, block_k=block_k)
+    m, k = x.shape
+    _, n = packed.shape
+    pm, pn, pk = (-m) % block_m, (-n) % block_n, (-k) % block_k
+    assert pk == 0, "K must already be a multiple of block_k (packing is block-local)"
+    xp = jnp.pad(x, ((0, pm), (0, 0))) if pm else x
+    pp = jnp.pad(packed, ((0, 0), (0, pn))) if pn else packed
+    sp = jnp.pad(scale, (0, pn)) if pn else scale
+    out = lut_matmul_pallas(xp, pp, codebook, sp, block_m=block_m,
+                            block_n=block_n, block_k=block_k,
+                            interpret=interpret)
+    return out[:m, :n]
+
+
+def compress_layer_weights(w: jax.Array, codebook_values, *, block_k: int = 128):
+    """End-to-end encode of a float (K, N) weight matrix for serving.
+
+    Returns (packed, codebook_arr, scale): per-output-channel symmetric scale,
+    int8 snap to the restricted set, 4-bit pack.
+    """
+    from repro.core import qat
+
+    scale = qat.weight_scale(w)[0]                      # (N,)
+    q = jnp.clip(jnp.round(w / scale[None, :]), -qat.QMAX, qat.QMAX)
+    cb = jnp.asarray(sorted(int(v) for v in codebook_values), jnp.int32)
+    assert cb.shape[0] <= N_CODES
+    cb = jnp.pad(cb, (0, N_CODES - cb.shape[0]), constant_values=cb[-1])
+    idx = encode_weights(q.astype(jnp.int32), cb)
+    packed = pack_indices(idx, block_k)
+    return packed, cb.astype(jnp.int8), scale

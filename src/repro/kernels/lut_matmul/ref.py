@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the 4-bit codebook-index GEMM."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+N_CODES = 16
+
+
+def unpack_indices(packed: jax.Array, block_k: int) -> jax.Array:
+    """Invert `ops.pack_indices`: (K//2, N) int8 -> (K, N) int32 indices.
+
+    Packing is block-local over K blocks of ``block_k``: within each block,
+    byte row j holds index rows j (low nibble) and j + block_k/2 (high).
+    """
+    k2, n = packed.shape
+    k = 2 * k2
+    assert k % block_k == 0
+    p = packed.astype(jnp.int32) & 0xFF
+    p = p.reshape(k // block_k, block_k // 2, n)
+    low = p & 0xF
+    high = (p >> 4) & 0xF
+    blocks = jnp.concatenate([low, high], axis=1)  # (nblk, block_k, n)
+    return blocks.reshape(k, n)
+
+
+def lut_matmul_ref(
+    x: jax.Array,
+    packed: jax.Array,
+    codebook: jax.Array,
+    scale: jax.Array,
+    *,
+    block_k: int = 128,
+) -> jax.Array:
+    """Y = X @ (codebook[idx] * scale) with fp32 accumulation."""
+    idx = unpack_indices(packed, block_k)
+    w = codebook.astype(jnp.float32)[idx] * scale.astype(jnp.float32)[None, :]
+    out = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    out_dtype = x.dtype if x.dtype != jnp.bfloat16 else jnp.float32
+    return out.astype(out_dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.transition_energy.ops import tile_transition_stats  # noqa: F401

@@ -1,0 +1,26 @@
+"""jit'd wrapper matching the `repro.core.stats.tile_transition_stats` API."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.mac_model import DEFAULT_COEFFS, MacEnergyCoeffs
+from repro.kernels.transition_energy.transition_energy import (
+    transition_stats_pallas,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("coeffs", "interpret"))
+def tile_transition_stats(
+    w_tile: jax.Array,
+    a_block: jax.Array,
+    coeffs: MacEnergyCoeffs = DEFAULT_COEFFS,
+    *,
+    interpret: bool = True,
+):
+    """Returns (energy_sum[256], count[256], group_hist[50,50],
+    act_hist[256,256]) — drop-in for the pure-jnp oracle."""
+    return transition_stats_pallas(w_tile, a_block, coeffs,
+                                   interpret=interpret)

@@ -1,0 +1,3 @@
+"""Oracle for the transition-statistics kernel = the core stats module."""
+
+from repro.core.stats import tile_transition_stats as tile_transition_stats_ref  # noqa: F401

@@ -1,0 +1,222 @@
+"""Loop-corrected HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once*,
+regardless of trip count — scan-over-layers models therefore under-report
+FLOPs/bytes by ~n_layers (verified: a scanned 8-step matmul reports 1/8 the
+flops of its unrolled twin). This walker re-derives costs from the optimized
+HLO text with loop multiplicity:
+
+  * builds name -> shape for every instruction,
+  * per computation sums dot FLOPs (2 * prod(result) * contracted_size,
+    batch dims handled) and a bytes-accessed estimate (operands + result of
+    top-level ops, mirroring XLA's convention for fusions),
+  * resolves the call graph (fusions via calls=, while body/condition with
+    the trip count parsed from the canonical `compare(iv, constant), LT`
+    condition, conditionals take the max branch),
+  * multiplies through and returns entry-computation totals.
+
+Collective result bytes are multiplied the same way (a collective inside the
+layer scan fires once per layer).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DEF_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"^\(?(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*{\s*$")
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_DOT_DIMS = {
+    "lhs_contracting_dims": re.compile(r"lhs_contracting_dims=\{([\d,]*)\}"),
+    "lhs_batch_dims": re.compile(r"lhs_batch_dims=\{([\d,]*)\}"),
+}
+
+
+def _parse_shape(rhs: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    m = _SHAPE_RE.match(rhs)
+    if not m:
+        return None
+    dt, dims = m.group(1), m.group(2)
+    if dt == "tuple":
+        return None
+    shape = tuple(int(x) for x in dims.split(",") if x)
+    return dt, shape
+
+
+def _nelem(shape) -> int:
+    return math.prod(shape) if shape else 1
+
+
+def _bytes_of(sig) -> int:
+    if sig is None:
+        return 0
+    dt, shape = sig
+    return _nelem(shape) * _DTYPE_BYTES.get(dt, 4)
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.ops_by_comp: Dict[str, List[dict]] = {}
+        self.shapes: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, dict] = {}
+
+    # ------------------------------------------------------------- parsing
+
+    def _parse(self, text: str) -> None:
+        comp = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            hdr = _COMP_HDR_RE.match(line.strip())
+            if hdr and ("{" in line):
+                comp = hdr.group(1)
+                self.ops_by_comp.setdefault(comp, [])
+                if line.strip().startswith("ENTRY"):
+                    self.entry = comp
+                continue
+            if comp is None:
+                continue
+            if line.strip() == "}":
+                comp = None
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(2), m.group(3)
+            sig = _parse_shape(rhs)
+            if sig:
+                self.shapes[name] = sig
+            self.ops_by_comp[comp].append({"name": name, "rhs": rhs,
+                                           "sig": sig})
+
+    # ---------------------------------------------------------- per-op cost
+
+    def _dot_flops(self, op) -> float:
+        rhs = op["rhs"]
+        if " dot(" not in rhs:
+            return 0.0
+        sig = op["sig"]
+        if sig is None:
+            return 0.0
+        operands = _OPERAND_RE.findall(rhs.split("dot(", 1)[1])
+        lhs_sig = self.shapes.get(operands[0]) if operands else None
+        contracted = 1
+        m = _DOT_DIMS["lhs_contracting_dims"].search(rhs)
+        if lhs_sig and m:
+            for d in m.group(1).split(","):
+                if d:
+                    contracted *= lhs_sig[1][int(d)]
+        return 2.0 * _nelem(sig[1]) * contracted
+
+    def _op_bytes(self, op) -> int:
+        rhs = op["rhs"]
+        total = _bytes_of(op["sig"])
+        inner = rhs.split("(", 1)
+        if len(inner) == 2:
+            for name in _OPERAND_RE.findall(inner[1]):
+                if name in self.shapes:
+                    total += _bytes_of(self.shapes[name])
+        return total
+
+    def _trip_count(self, cond_comp: str) -> int:
+        consts = []
+        for op in self.ops_by_comp.get(cond_comp, []):
+            m = _CONST_RE.search("= " + op["rhs"]) or _CONST_RE.search(op["rhs"])
+            if "constant(" in op["rhs"] and op["rhs"].startswith("s32[]"):
+                mm = re.search(r"constant\((\d+)\)", op["rhs"])
+                if mm:
+                    consts.append(int(mm.group(1)))
+            del m
+        # canonical scan condition: iv < N; take the largest s32 constant
+        return max(consts) if consts else 1
+
+    # --------------------------------------------------------- aggregation
+
+    def comp_cost(self, comp: str) -> dict:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = {"flops": 0.0, "bytes": 0.0,
+                            "collectives": {k: 0.0 for k in _COLLECTIVES}}
+        flops = 0.0
+        bytes_ = 0.0
+        coll = {k: 0.0 for k in _COLLECTIVES}
+        for op in self.ops_by_comp.get(comp, []):
+            rhs = op["rhs"]
+            if " while(" in rhs:
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", rhs)
+                mc = re.search(r"condition=%?([\w\.\-]+)", rhs)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = self._trip_count(cond) if cond else 1
+                if body:
+                    sub = self.comp_cost(body)
+                    flops += sub["flops"] * trips
+                    bytes_ += sub["bytes"] * trips
+                    for k in coll:
+                        coll[k] += sub["collectives"][k] * trips
+                continue
+            if " conditional(" in rhs:
+                m = _BRANCH_RE.search(rhs)
+                if m:
+                    subs = [self.comp_cost(c.strip().lstrip("%"))
+                            for c in m.group(1).split(",")]
+                    if subs:
+                        best = max(subs, key=lambda s: s["flops"] + s["bytes"])
+                        flops += best["flops"]
+                        bytes_ += best["bytes"]
+                        for k in coll:
+                            coll[k] += best["collectives"][k]
+                continue
+            called = _CALL_RE.search(rhs)
+            if called and (" fusion(" in rhs or " call(" in rhs
+                           or " custom-call(" in rhs or " map(" in rhs
+                           or " reduce(" in rhs or " sort(" in rhs
+                           or " scatter(" in rhs or " select-and-scatter(" in rhs):
+                sub = self.comp_cost(called.group(1))
+                flops += sub["flops"]
+                for k in coll:
+                    coll[k] += sub["collectives"][k]
+                # bytes: fusion counts its own operands/result, not internals
+                bytes_ += self._op_bytes(op)
+                continue
+            flops += self._dot_flops(op)
+            is_coll = False
+            for kind in _COLLECTIVES:
+                if f" {kind}(" in rhs or f" {kind}-start(" in rhs:
+                    coll[kind] += _bytes_of(op["sig"])
+                    is_coll = True
+                    break
+            if "-done(" in rhs and is_coll:
+                coll[kind] -= _bytes_of(op["sig"])  # avoid double count
+            bytes_ += self._op_bytes(op)
+        out = {"flops": flops, "bytes": bytes_, "collectives": coll}
+        self._memo[comp] = out
+        return out
+
+    def entry_cost(self) -> dict:
+        assert self.entry, "no ENTRY computation found"
+        out = dict(self.comp_cost(self.entry))
+        out["collective_total_bytes"] = sum(out["collectives"].values())
+        return out
+
+
+def loop_corrected_cost(hlo_text: str) -> dict:
+    return HloCost(hlo_text).entry_cost()

@@ -1,0 +1,42 @@
+"""Production meshes.
+
+Exposed as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required for the dry-run's
+``xla_force_host_platform_device_count`` trick to keep working.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axis names: ("data", "model") single-pod, ("pod", "data", "model") across
+    pods. Robust to the host exposing *more* devices than the mesh needs
+    (the dry-run forces 512 host devices; single-pod uses the first 256).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count (dry-run) or "
+            "launch on the pod slice")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def make_host_mesh(*, model_parallel: int = 1) -> Mesh:
+    """Mesh over whatever this host actually has (tests, examples)."""
+    devices = jax.devices()
+    n = len(devices)
+    assert n % model_parallel == 0
+    dev_array = np.asarray(devices).reshape(n // model_parallel, model_parallel)
+    return Mesh(dev_array, ("data", "model"))

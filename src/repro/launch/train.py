@@ -1,0 +1,334 @@
+"""Train / prefill / serve step factories + input specs + sharding assembly.
+
+Everything here is mesh-agnostic until `lower()` time: abstract state trees
+come from the spec system (no allocation), shardings from the logical-axis
+rules, so the same code drives the real trainer, the smoke tests, and the
+512-device dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import Shape
+from repro.core.lm_compress import make_lm_comp_spec
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    activation_constraint,
+    batch_sharding,
+    logical_to_spec,
+    logits_constraint,
+    make_param_shardings,
+    shardings_from_axes_tree,
+)
+from repro.models.config import ArchConfig
+from repro.models.lm import LMModel
+from repro.nn.layers import QuantConfig
+from repro.nn.spec import abstract_params, init_params
+from repro.optim.optimizers import Optimizer, adamw, apply_updates
+
+WHISPER_DECODER_LEN = 448  # whisper's decoder context (enc length = seq_len)
+
+
+# ===================================================================== steps
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    qat: bool = True            # paper setup: int8 QAT on all matmuls
+    with_comp: bool = True      # thread masks/codebooks through the step
+    remat: bool = True
+    q_block: int = 512
+    kv_block: int = 512
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    grad_accum: int = 1         # microbatching: divides activation memory
+    flash: bool = False         # flash-attention custom VJP (see nn/flash.py)
+    remat_save_qat: bool = False  # save fake-quantized weights across remat
+
+    @property
+    def qcfg(self) -> QuantConfig:
+        return QuantConfig(enabled=self.qat)
+
+
+def make_optimizer(step_cfg: StepConfig) -> Optimizer:
+    return adamw(step_cfg.lr, weight_decay=step_cfg.weight_decay,
+                 max_grad_norm=1.0)
+
+
+def moe_dispatch_constraint(mesh: Mesh, rules: ShardingRules):
+    """Dispatch-buffer constraint hook (see repro.nn.moe): 'scatter' pins
+    the (B, E, C, d) buffer model-replicated so the capacity scatter computes
+    locally; 'expert' re-shards E over model (a local slice)."""
+    from repro.distributed.sharding import _mesh_size, _present
+
+    b_axis = _present(mesh, rules.lookup("batch"))
+    e_axis = _present(mesh, rules.lookup("expert"))
+
+    def hook(t, kind):
+        b_ok = b_axis if (b_axis and t.shape[0] % _mesh_size(mesh, b_axis) == 0) else None
+        e_ok = None
+        if kind == "expert" and e_axis and t.shape[1] % _mesh_size(mesh, e_axis) == 0:
+            e_ok = e_axis
+        parts = [b_ok, e_ok] + [None] * (t.ndim - 2)
+        return jax.lax.with_sharding_constraint(
+            t, NamedSharding(mesh, PartitionSpec(*parts)))
+
+    return hook
+
+
+def make_train_step(model: LMModel, step_cfg: StepConfig,
+                    mesh: Optional[Mesh] = None,
+                    rules: ShardingRules = DEFAULT_RULES,
+                    moe_local_dispatch: bool = False) -> Callable:
+    """train_step(state, batch[, comp]) -> (state, metrics)."""
+    optimizer = make_optimizer(step_cfg)
+    shard = activation_constraint(mesh, rules) if mesh is not None else None
+    shard_lg = logits_constraint(mesh, rules) if mesh is not None else None
+    if moe_local_dispatch and mesh is not None:
+        from repro.nn.moe import set_dispatch_constraint
+
+        set_dispatch_constraint(moe_dispatch_constraint(mesh, rules))
+
+    def loss_fn(params, batch, comp):
+        return model.loss(params, batch, qcfg=step_cfg.qcfg, comp=comp,
+                          remat=step_cfg.remat, q_block=step_cfg.q_block,
+                          kv_block=step_cfg.kv_block, shard=shard,
+                          shard_logits=shard_lg, use_flash=step_cfg.flash,
+                          remat_policy=("save_qat" if step_cfg.remat_save_qat
+                                        else None))
+
+    if step_cfg.grad_accum > 1:
+        n_micro = step_cfg.grad_accum
+        base_loss_fn = loss_fn
+
+        def loss_grad(params, batch, comp):
+            """Microbatched grads: scan over batch slices, accumulate fp32."""
+            def split(x):
+                b = x.shape[0]
+                assert b % n_micro == 0, (b, n_micro)
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def one(carry, mb):
+                g_acc, l_acc, m_acc = carry
+                (l, m), g = jax.value_and_grad(base_loss_fn, has_aux=True)(
+                    params, mb, comp)
+                g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, l_acc + l, m_acc), None
+
+            g0 = jax.tree.map(jnp.zeros_like, params)
+            m0 = {"ce": jnp.zeros(()), "lb_loss": jnp.zeros(()),
+                  "z_loss": jnp.zeros(())}
+            (g, loss, metrics), _ = jax.lax.scan(one, (g0, jnp.zeros(()), m0),
+                                                 micro)
+            scale = 1.0 / n_micro
+            g = jax.tree.map(lambda x: x * scale, g)
+            metrics = jax.tree.map(lambda x: x * scale, metrics)
+            return (loss * scale, metrics), g
+    else:
+        def loss_grad(params, batch, comp):
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, comp)
+
+    if step_cfg.with_comp:
+        def train_step(state, batch, comp):
+            (loss, metrics), grads = loss_grad(state["params"], batch, comp)
+            updates, opt = optimizer.update(grads, state["opt"], state["params"])
+            params = apply_updates(state["params"], updates)
+            metrics = dict(metrics, loss=loss)
+            return {"params": params, "opt": opt}, metrics
+    else:
+        def train_step(state, batch):
+            (loss, metrics), grads = loss_grad(state["params"], batch, None)
+            updates, opt = optimizer.update(grads, state["opt"], state["params"])
+            params = apply_updates(state["params"], updates)
+            metrics = dict(metrics, loss=loss)
+            return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: LMModel, step_cfg: StepConfig,
+                      mesh: Optional[Mesh] = None,
+                      rules: ShardingRules = DEFAULT_RULES) -> Callable:
+    """prefill_step(params, batch) -> logits (inference forward at length S)."""
+    shard = activation_constraint(mesh, rules) if mesh is not None else None
+    shard_lg = logits_constraint(mesh, rules) if mesh is not None else None
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(
+            params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            qcfg=QuantConfig.off(), remat=False,
+            q_block=step_cfg.q_block, kv_block=step_cfg.kv_block, shard=shard,
+            shard_logits=shard_lg)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(model: LMModel, step_cfg: StepConfig,
+                    mesh: Optional[Mesh] = None,
+                    rules: ShardingRules = DEFAULT_RULES) -> Callable:
+    """serve_step(params, cache, tokens) -> (logits, cache): one decode step."""
+    shard = activation_constraint(mesh, rules) if mesh is not None else None
+    shard_lg = logits_constraint(mesh, rules) if mesh is not None else None
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens,
+                                 qcfg=QuantConfig.off(), shard=shard,
+                                 shard_logits=shard_lg)
+
+    return serve_step
+
+
+# ================================================================== state
+
+
+def abstract_train_state(model: LMModel) -> dict:
+    params = abstract_params(model.spec)
+    zeros_like = lambda t: jax.tree.map(  # noqa: E731
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), t)
+    return {
+        "params": params,
+        "opt": {
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+            "mu": zeros_like(params),
+            "nu": zeros_like(params),
+        },
+    }
+
+
+def init_train_state(model: LMModel, step_cfg: StepConfig, seed: int = 0) -> dict:
+    params = init_params(jax.random.PRNGKey(seed), model.spec)
+    opt = make_optimizer(step_cfg).init(params)
+    return {"params": params, "opt": opt}
+
+
+def train_state_shardings(model: LMModel, mesh: Mesh,
+                          rules: ShardingRules = DEFAULT_RULES,
+                          guard_report=None) -> dict:
+    p_sh = make_param_shardings(model.spec, mesh, rules,
+                                guard_report=guard_report)
+    return {
+        "params": p_sh,
+        "opt": {
+            "step": NamedSharding(mesh, PartitionSpec()),
+            "mu": p_sh,
+            "nu": p_sh,
+        },
+    }
+
+
+def abstract_serve_params(model: LMModel):
+    """Serve-time parameters in bf16."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+        abstract_params(model.spec))
+
+
+def comp_abstract(model: LMModel):
+    return abstract_params(make_lm_comp_spec(model))
+
+
+def comp_shardings(model: LMModel, mesh: Mesh,
+                   rules: ShardingRules = DEFAULT_RULES, guard_report=None):
+    return make_param_shardings(make_lm_comp_spec(model), mesh, rules,
+                                guard_report=guard_report)
+
+
+# ================================================================== inputs
+
+
+def batch_specs(cfg: ArchConfig, shape: Shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract batch for a (train | prefill) cell."""
+    b = shape.batch
+    s = shape.seq
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.encoder_decoder:
+        s_dec = min(s, WHISPER_DECODER_LEN)
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.bfloat16)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_dec), jnp.int32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_dec), jnp.int32)
+        return specs
+    s_tok = s - cfg.prefix_len
+    if cfg.prefix_len:
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s_tok), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s_tok), jnp.int32)
+    return specs
+
+
+def batch_shardings(specs, mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
+    return {k: batch_sharding(mesh, v.shape, rules) for k, v in specs.items()}
+
+
+def decode_cache_specs(model: LMModel, shape: Shape,
+                       dtype=jnp.bfloat16) -> dict:
+    cfg = model.cfg
+    if cfg.encoder_decoder:
+        # self-cache bounded by the decoder context; cross-KV over seq_len
+        return model.cache_spec(shape.batch, WHISPER_DECODER_LEN, dtype,
+                                cross_len=shape.seq)
+    return model.cache_spec(shape.batch, shape.seq, dtype)
+
+
+_CACHE_AXES_BY_NAME = {
+    "k": ("batch", None, "kv_heads", None),
+    "v": ("batch", None, "kv_heads", None),
+    "xk": ("batch", None, "kv_heads", None),
+    "xv": ("batch", None, "kv_heads", None),
+    "state": ("batch", "inner", None, None),
+    "conv": ("batch", None, "inner"),
+    "h": ("batch", "inner"),
+    "pos": (),
+}
+
+
+def cache_axes(cache_spec, *, kv_seq_shard: bool = False) -> Any:
+    """Logical axes tree for a cache spec (layer-stacked leaves detected by
+    rank: stacked leaves get a leading None for the scan axis).
+
+    ``kv_seq_shard`` shards the K/V cache *sequence* dim over the model axis
+    instead of the head dim — the production fallback when kv_heads does not
+    divide the TP degree (MQA/GQA with few KV heads): the cache stops being
+    replicated 16x and decode attention becomes a sharded reduction.
+    """
+    kv_axes = (("batch", "kv_seq", None, None) if kv_seq_shard
+               else ("batch", None, "kv_heads", None))
+    by_name = dict(_CACHE_AXES_BY_NAME)
+    for key in ("k", "v", "xk", "xv"):
+        by_name[key] = kv_axes
+
+    def walk(node, name=None):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        base = by_name[name]
+        extra = len(node.shape) - len(base)
+        assert extra in (0, 1), (name, node.shape)
+        return (None,) * extra + base
+
+    return walk(cache_spec)
+
+
+def cache_shardings(model: LMModel, shape: Shape, mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES, dtype=jnp.bfloat16,
+                    guard_report=None, *, kv_seq_shard: bool = False):
+    spec = decode_cache_specs(model, shape, dtype)
+    axes = cache_axes(spec, kv_seq_shard=kv_seq_shard)
+    return shardings_from_axes_tree(axes, spec, mesh, rules,
+                                    guard_report=guard_report)

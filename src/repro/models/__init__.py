@@ -1,0 +1,3 @@
+"""Architecture configs + LM assembly."""
+
+from repro.models.config import ArchConfig  # noqa: F401

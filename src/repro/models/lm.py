@@ -1,0 +1,452 @@
+"""LM assembly: ArchConfig -> spec tree + forward / prefill / decode.
+
+Layers are grouped by the config's repeating block `pattern`; each pattern
+position's parameters are stacked over the repeat count and iterated with
+`jax.lax.scan` (keeps HLO size O(pattern) instead of O(n_layers), which is
+what makes 512-device SPMD lowering of 26-48 layer models tractable).
+Remainder layers (n_layers % len(pattern)) are unrolled as "tail" blocks.
+
+Whisper-style encoder-decoder stacks an extra (non-causal, no-RoPE) encoder
+scan and gives decoder blocks cross-attention; VLM (internvl2) prepends stub
+patch embeddings to the token embeddings (the frontend is an input, per the
+assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.nn import transformer as T
+from repro.nn.layers import QuantConfig
+from repro.nn.spec import ParamSpec, normal_init, stack_specs
+from repro.nn.transformer import (
+    apply_block,
+    apply_block_decode,
+    block_cache_spec,
+    make_block_spec,
+)
+
+NEG_INF = -1e30
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """(B, S) int positions -> (B, S, d) sinusoidal embeddings (whisper)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+@dataclasses.dataclass
+class LMModel:
+    cfg: ArchConfig
+    spec: dict
+
+    # ------------------------------------------------------------ structure
+
+    @property
+    def n_pattern(self) -> int:
+        return len(self.cfg.pattern)
+
+    @property
+    def n_rep(self) -> int:
+        return self.cfg.n_layers // self.n_pattern
+
+    @property
+    def n_tail(self) -> int:
+        return self.cfg.n_layers % self.n_pattern
+
+    # ------------------------------------------------------------- encoder
+
+    def _encode(self, params, enc_embeds, *, qcfg, comp, remat, q_block, kv_block,
+                shard=None):
+        cfg = self.cfg
+        x = enc_embeds.astype(cfg.cdtype)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+        if shard is not None:
+            x = shard(x)
+        enc_comp = None if comp is None else comp.get("enc_blocks")
+
+        def body(carry, xs):
+            layer_params, layer_comp = xs if enc_comp is not None else (xs, None)
+            h, _ = apply_block(layer_params, carry, cfg, "attn", positions=pos,
+                               qcfg=qcfg, comp=layer_comp, q_block=q_block,
+                               kv_block=kv_block, encoder=True)
+            if shard is not None:
+                h = shard(h)
+            return h, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        xs = (params["enc_blocks"], enc_comp) if enc_comp is not None \
+            else params["enc_blocks"]
+        x, _ = jax.lax.scan(body, x, xs)
+        return T.apply_norm(params["enc_norm"], x, cfg)
+
+    # ------------------------------------------------------------- forward
+
+    def forward(
+        self,
+        params,
+        tokens: jax.Array,                      # (B, S) int32
+        *,
+        prefix_embeds: Optional[jax.Array] = None,   # (B, P, d) stub frontend
+        enc_embeds: Optional[jax.Array] = None,      # (B, S_enc, d) whisper frames
+        qcfg: QuantConfig = QuantConfig.off(),
+        comp=None,
+        remat: bool = False,
+        q_block: int = 512,
+        kv_block: int = 512,
+        shard: Optional[Callable] = None,
+        shard_logits: Optional[Callable] = None,
+        use_flash: bool = False,
+        remat_policy: Optional[str] = None,   # None | "save_qat"
+    ) -> Tuple[jax.Array, dict]:
+        """Returns (logits (B, S_total, padded_vocab), aux)."""
+        cfg = self.cfg
+        b, s_tok = tokens.shape
+        x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.cdtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(cfg.cdtype), x], axis=1)
+        if cfg.encoder_decoder:
+            pos_ids = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
+            x = x + _sinusoid(pos_ids, cfg.d_model).astype(x.dtype)
+        if shard is not None:
+            x = shard(x)
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        enc_out = None
+        if cfg.encoder_decoder:
+            assert enc_embeds is not None
+            enc_out = self._encode(params, enc_embeds, qcfg=qcfg, comp=comp,
+                                   remat=remat, q_block=q_block,
+                                   kv_block=kv_block, shard=shard)
+
+        aux0 = {"lb_loss": jnp.zeros((), jnp.float32),
+                "z_loss": jnp.zeros((), jnp.float32)}
+        blocks_comp = None if comp is None else comp.get("blocks")
+        tail_comp = None if comp is None else comp.get("tail")
+
+        def macro_body(carry, xs):
+            layer_params, layer_comp = xs if blocks_comp is not None else (xs, None)
+            h, aux_c = carry
+            # Barrier: stops XLA from hoisting the bf16->f32 convert of the
+            # rematerialization-saved carry *stack* out of the backward loop
+            # (which would materialize an O(L*B*S*D) f32 buffer).
+            h = jax.lax.optimization_barrier(h)
+            aux_new = dict(aux_c)
+            for i, bt in enumerate(cfg.pattern):
+                ci = None if layer_comp is None else layer_comp.get(f"g{i}")
+                h, aux = apply_block(
+                    layer_params[f"g{i}"], h, cfg, bt, positions=positions,
+                    qcfg=qcfg, comp=ci, enc_out=enc_out,
+                    q_block=q_block, kv_block=kv_block, use_flash=use_flash)
+                aux_new = {k: aux_new[k] + aux[k] for k in aux_new}
+            if shard is not None:
+                h = shard(h)
+            return (h, aux_new), None
+
+        if remat and remat_policy == "save_qat":
+            policy = jax.checkpoint_policies.save_only_these_names("qat_weights")
+            body = jax.checkpoint(macro_body, policy=policy)
+        elif remat:
+            body = jax.checkpoint(macro_body)
+        else:
+            body = macro_body
+        if self.n_rep > 0:
+            xs = (params["blocks"], blocks_comp) if blocks_comp is not None \
+                else params["blocks"]
+            (x, aux), _ = jax.lax.scan(body, (x, aux0), xs)
+        else:
+            aux = aux0
+        for j in range(self.n_tail):
+            bt = cfg.pattern[j]
+            cj = None if tail_comp is None else tail_comp.get(f"t{j}")
+            x, a = apply_block(params["tail"][f"t{j}"], x, cfg, bt,
+                               positions=positions, qcfg=qcfg, comp=cj,
+                               enc_out=enc_out, q_block=q_block,
+                               kv_block=kv_block, use_flash=use_flash)
+            aux = {k: aux[k] + a[k] for k in aux}
+
+        x = T.apply_norm(params["final_norm"], x, cfg)
+        logits = self._unembed(params, x, shard_logits)
+        return logits, aux
+
+    def _unembed(self, params, x, shard_logits=None):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x,
+                                params["embed"]["table"].astype(x.dtype))
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x,
+                                params["lm_head"]["w"].astype(x.dtype))
+        # mask the vocab padding
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, NEG_INF, logits.astype(jnp.float32))
+        if shard_logits is not None:
+            logits = shard_logits(logits)
+        return logits
+
+    # ---------------------------------------------------------------- loss
+
+    def loss(self, params, batch: Dict[str, jax.Array], **fwd_kwargs):
+        """Causal LM loss. batch: tokens, labels (+prefix/enc embeds)."""
+        logits, aux = self.forward(
+            params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            **fwd_kwargs)
+        labels = batch["labels"]
+        # with a prefix, loss applies to the trailing token positions only
+        logits_tok = logits[:, logits.shape[1] - labels.shape[1]:]
+        logp = jax.nn.log_softmax(logits_tok, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            loss = jnp.mean(nll)
+        total = loss + 0.01 * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+        metrics = {"ce": loss, "lb_loss": aux["lb_loss"], "z_loss": aux["z_loss"]}
+        return total, metrics
+
+    # --------------------------------------------------------------- caches
+
+    def cache_spec(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   cross_len: int = 0) -> dict:
+        cfg = self.cfg
+        spec: Dict[str, Any] = {"groups": {}, "tail": {}}
+        for i, bt in enumerate(cfg.pattern):
+            one = block_cache_spec(cfg, bt, batch, max_len, dtype,
+                                   cross_len=cross_len)
+            spec["groups"][f"g{i}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((self.n_rep, *s.shape), s.dtype),
+                one)
+        for j in range(self.n_tail):
+            bt = cfg.pattern[j]
+            spec["tail"][f"t{j}"] = block_cache_spec(
+                cfg, bt, batch, max_len, dtype, cross_len=cross_len)
+        spec["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        return spec
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   cross_len: int = 0) -> dict:
+        spec = self.cache_spec(batch, max_len, dtype, cross_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+    # --------------------------------------------------------------- decode
+
+    def decode_step(
+        self,
+        params,
+        cache: dict,
+        tokens: jax.Array,          # (B, 1) int32
+        *,
+        qcfg: QuantConfig = QuantConfig.off(),
+        comp=None,
+        shard: Optional[Callable] = None,
+        shard_logits: Optional[Callable] = None,
+    ) -> Tuple[jax.Array, dict]:
+        """One token for every sequence in the batch. Returns (logits, cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.cdtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+        if cfg.encoder_decoder:
+            pos_ids = jnp.broadcast_to(pos.astype(jnp.int32), x.shape[:2])
+            x = x + _sinusoid(pos_ids, cfg.d_model).astype(x.dtype)
+        if shard is not None:
+            x = shard(x)
+
+        blocks_comp = None if comp is None else comp.get("blocks")
+        tail_comp = None if comp is None else comp.get("tail")
+
+        def macro_body(carry, xs):
+            h = carry
+            if blocks_comp is not None:
+                layer_params, layer_cache, layer_comp = xs
+            else:
+                (layer_params, layer_cache), layer_comp = xs, None
+            new_caches = {}
+            for i, bt in enumerate(cfg.pattern):
+                ci = None if layer_comp is None else layer_comp.get(f"g{i}")
+                h, c_new = apply_block_decode(
+                    layer_params[f"g{i}"], h, layer_cache[f"g{i}"], pos, cfg,
+                    bt, qcfg=qcfg, comp=ci)
+                new_caches[f"g{i}"] = c_new
+            return h, new_caches
+
+        new_cache = {"groups": cache["groups"], "tail": {}, "pos": pos + 1}
+        if self.n_rep > 0:
+            xs = (params["blocks"], cache["groups"])
+            if blocks_comp is not None:
+                xs = (params["blocks"], cache["groups"], blocks_comp)
+            x, group_caches = jax.lax.scan(macro_body, x, xs)
+            new_cache["groups"] = group_caches
+        for j in range(self.n_tail):
+            bt = cfg.pattern[j]
+            cj = None if tail_comp is None else tail_comp.get(f"t{j}")
+            x, c_new = apply_block_decode(
+                params["tail"][f"t{j}"], x, cache["tail"][f"t{j}"], pos, cfg,
+                bt, qcfg=qcfg, comp=cj)
+            new_cache["tail"][f"t{j}"] = c_new
+
+        x = T.apply_norm(params["final_norm"], x, cfg)
+        logits = self._unembed(params, x, shard_logits)
+        return logits, new_cache
+
+    # --------------------------------------------------------------- prefill
+
+    def prefill(
+        self,
+        params,
+        tokens: jax.Array,
+        max_len: int,
+        *,
+        prefix_embeds: Optional[jax.Array] = None,
+        enc_embeds: Optional[jax.Array] = None,
+        qcfg: QuantConfig = QuantConfig.off(),
+        comp=None,
+        cache_dtype=jnp.bfloat16,
+        q_block: int = 512,
+        kv_block: int = 512,
+    ) -> Tuple[jax.Array, dict]:
+        """Forward over the prompt, capturing per-layer state into a decode
+        cache. Returns (logits (B, S, V), cache ready at pos = S)."""
+        cfg = self.cfg
+        b, s_tok = tokens.shape
+        x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.cdtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(cfg.cdtype), x], axis=1)
+        if cfg.encoder_decoder:
+            pos_ids = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
+            x = x + _sinusoid(pos_ids, cfg.d_model).astype(x.dtype)
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        enc_out = None
+        if cfg.encoder_decoder:
+            assert enc_embeds is not None
+            enc_out = self._encode(params, enc_embeds, qcfg=qcfg, comp=comp,
+                                   remat=False, q_block=q_block,
+                                   kv_block=kv_block)
+        cross_len = enc_out.shape[1] if enc_out is not None else 0
+
+        # Blocks run unrolled for prefill (state capture per layer); prefill
+        # happens once per request and serve-time models ship a fixed cfg, so
+        # the larger HLO is acceptable. (The dry-run decode path uses the
+        # scanned decode_step.)
+        cache = {"groups": {}, "tail": {}, "pos": jnp.asarray(s, jnp.int32)}
+        group_states: Dict[str, list] = {f"g{i}": [] for i in range(self.n_pattern)}
+        blocks_comp = None if comp is None else comp.get("blocks")
+        tail_comp = None if comp is None else comp.get("tail")
+
+        def run_block(block_params, h, bt, block_comp):
+            return apply_block(block_params, h, cfg, bt, positions=positions,
+                               qcfg=qcfg, comp=block_comp, enc_out=enc_out,
+                               q_block=q_block, kv_block=kv_block,
+                               return_state=True)
+
+        for r in range(self.n_rep):
+            layer_params = jax.tree.map(lambda p: p[r], params["blocks"])
+            layer_comp = None if blocks_comp is None else jax.tree.map(
+                lambda c: c[r], blocks_comp)
+            for i, bt in enumerate(cfg.pattern):
+                ci = None if layer_comp is None else layer_comp.get(f"g{i}")
+                (x, _), st = run_block(layer_params[f"g{i}"], x, bt, ci)
+                group_states[f"g{i}"].append(
+                    self._state_to_cache(st, bt, max_len, cache_dtype, enc_out,
+                                         layer_params[f"g{i}"], qcfg, ci))
+        for key, sts in group_states.items():
+            if sts:
+                cache["groups"][key] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *sts)
+        for j in range(self.n_tail):
+            bt = cfg.pattern[j]
+            cj = None if tail_comp is None else tail_comp.get(f"t{j}")
+            (x, _), st = run_block(params["tail"][f"t{j}"], x, bt, cj)
+            cache["tail"][f"t{j}"] = self._state_to_cache(
+                st, bt, max_len, cache_dtype, enc_out,
+                params["tail"][f"t{j}"], qcfg, cj)
+
+        x = T.apply_norm(params["final_norm"], x, cfg)
+        logits = self._unembed(params, x)
+        return logits, cache
+
+    def _state_to_cache(self, st, bt, max_len, dtype, enc_out, block_params,
+                        qcfg, comp):
+        cfg = self.cfg
+        if bt in ("attn", "local"):
+            dims = cfg.attn_dims(bt == "local")
+            cache_len = min(max_len, dims.window) if dims.window else max_len
+            k, v = st["k"], st["v"]
+            s = k.shape[1]
+            take = min(s, cache_len)
+            pos_range = jnp.arange(s - take, s, dtype=jnp.int32)
+            slots = jnp.mod(pos_range, cache_len)
+            b = k.shape[0]
+            kc = jnp.zeros((b, cache_len, *k.shape[2:]), dtype)
+            vc = jnp.zeros((b, cache_len, *v.shape[2:]), dtype)
+            kc = kc.at[:, slots].set(k[:, s - take:].astype(dtype))
+            vc = vc.at[:, slots].set(v[:, s - take:].astype(dtype))
+            out = {"k": kc, "v": vc}
+            if enc_out is not None and "xattn" in block_params:
+                xk, xv = T._cross_kv(block_params["xattn"], enc_out, cfg, qcfg,
+                                     comp)
+                out["xk"] = xk.astype(dtype)
+                out["xv"] = xv.astype(dtype)
+            return out
+        return st  # rglru / ssm states already in cache layout
+
+
+def build_lm(cfg: ArchConfig) -> LMModel:
+    spec: Dict[str, Any] = {
+        "embed": {
+            "table": ParamSpec((cfg.padded_vocab, cfg.d_model), cfg.pdtype,
+                               ("vocab", "embed"), normal_init(0.02)),
+        },
+        "final_norm": T.make_norm_spec(cfg),
+    }
+    n_pat = len(cfg.pattern)
+    n_rep = cfg.n_layers // n_pat
+    n_tail = cfg.n_layers % n_pat
+    cross = cfg.encoder_decoder
+
+    if n_rep > 0:
+        group = {
+            f"g{i}": make_block_spec(cfg, bt, cross_attn=cross)
+            for i, bt in enumerate(cfg.pattern)
+        }
+        spec["blocks"] = stack_specs(group, n_rep, "layers")
+    if n_tail:
+        spec["tail"] = {
+            f"t{j}": make_block_spec(cfg, cfg.pattern[j], cross_attn=cross)
+            for j in range(n_tail)
+        }
+    if cfg.encoder_decoder:
+        enc_block = make_block_spec(cfg, "attn", cross_attn=False)
+        spec["enc_blocks"] = stack_specs(enc_block, cfg.n_enc_layers, "layers")
+        spec["enc_norm"] = T.make_norm_spec(cfg)
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = {
+            "w": ParamSpec((cfg.d_model, cfg.padded_vocab), cfg.pdtype,
+                           ("embed", "vocab"), normal_init(0.02)),
+        }
+    return LMModel(cfg, spec)

@@ -1,0 +1,9 @@
+"""Model substrate: spec-first parameter system + layers + architectures."""
+
+from repro.nn.spec import (  # noqa: F401
+    ParamSpec,
+    abstract_params,
+    init_params,
+    param_axes,
+    spec_bytes,
+)

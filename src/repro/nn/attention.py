@@ -1,0 +1,334 @@
+"""Attention substrate: GQA/MQA/MHA + RoPE + sliding window + KV cache.
+
+Training/prefill uses a double-blocked, online-softmax attention (pure-JAX
+flash-attention schedule: outer scan over query blocks, inner scan over
+key/value blocks) so activation memory is O(B * qblk * H * kblk) regardless
+of sequence length — this is what lets 32k prefill lower/compile within HBM
+on the production mesh. Decode is a single-query gather over the cache.
+
+All attention projections are *compressible units*: they accept the same
+optional (qcfg, comp) pair as Dense layers (see `repro.core.qat`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat
+from repro.nn.layers import QuantConfig
+from repro.nn.spec import ParamSpec, fan_in_init, zeros_init
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: int = 0          # 0 => full attention; > 0 => sliding window
+    causal: bool = True
+    softcap: float = 0.0     # attention logit softcap (gemma-style), 0 = off
+
+
+def make_attention_spec(dims: AttnDims, dtype=jnp.float32) -> dict:
+    d, hq, hkv, hd = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.head_dim
+    spec = {
+        "wq": ParamSpec((d, hq, hd), dtype, ("embed", "heads", None), fan_in_init(in_axis=0)),
+        "wk": ParamSpec((d, hkv, hd), dtype, ("embed", "kv_heads", None), fan_in_init(in_axis=0)),
+        "wv": ParamSpec((d, hkv, hd), dtype, ("embed", "kv_heads", None), fan_in_init(in_axis=0)),
+        "wo": ParamSpec((hq, hd, d), dtype, ("heads", None, "embed"), fan_in_init(in_axis=0)),
+    }
+    if dims.qkv_bias:
+        spec["bq"] = ParamSpec((hq, hd), dtype, ("heads", None), zeros_init)
+        spec["bk"] = ParamSpec((hkv, hd), dtype, ("kv_heads", None), zeros_init)
+        spec["bv"] = ParamSpec((hkv, hd), dtype, ("kv_heads", None), zeros_init)
+    return spec
+
+
+# ----------------------------------------------------------------------- rope
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D), positions: (B, S) int32. Rotates first/second half pairs."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf1 * sin + xf2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ projections
+
+
+def _project(params, x, qcfg: QuantConfig, comp, name: str, key: str,
+             bias_key: Optional[str] = None):
+    w = params[key]  # (d, H, hd) or (H, hd, d)
+    c = None if comp is None else comp.get(f"{name}/{key}")
+    if qcfg.enabled:
+        if qcfg.act_quant:
+            x = qat.fake_quant_act(x)
+        w = qat.fake_quant_weight(w, c)
+    if key == "wo":
+        y = jnp.einsum("bshd,hdm->bsm", x, w.astype(x.dtype))
+    else:
+        y = jnp.einsum("bsm,mhd->bshd", x, w.astype(x.dtype))
+    if bias_key and bias_key in params:
+        y = y + params[bias_key].astype(y.dtype)
+    return y
+
+
+# ------------------------------------------------------------ blocked attention
+
+
+def _block_mask(q_pos, k_pos, dims: AttnDims):
+    """(Sq, Sk) boolean mask for one (q-block, k-block) pair."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if dims.causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if dims.window > 0:
+        m &= k_pos[None, :] > q_pos[:, None] - dims.window
+    return m
+
+
+def blocked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, dims: AttnDims, *,
+    q_offset: int = 0, q_block: int = 512, kv_block: int = 512,
+    kv_positions: Optional[jax.Array] = None,
+    use_flash: bool = False,
+) -> jax.Array:
+    """Online-softmax attention. q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D).
+
+    GQA handled by reshaping queries to (B, S, Hkv, G, D). Memory per step is
+    one (B, q_block, Hkv, G, kv_block) score tile. Works for any Sq/Sk that
+    are multiples of the block sizes (callers pad).
+    """
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    assert sq % q_block == 0 and sk % kv_block == 0, (sq, sk, q_block, kv_block)
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(b, sq, hkv, g, hd)
+    nq, nk = sq // q_block, sk // kv_block
+    q_positions = q_offset + jnp.arange(sq, dtype=jnp.int32)
+    if kv_positions is None:
+        kv_positions = jnp.arange(sk, dtype=jnp.int32)
+
+    if use_flash and dims.softcap == 0:
+        # FlashAttention-style custom VJP: O(S) residuals instead of the
+        # O(S^2/blk) probability stacks autodiff saves (see nn/flash.py)
+        from repro.nn.flash import flash_attention
+
+        out = flash_attention(qg, k, v, q_positions, kv_positions,
+                              dims.causal, dims.window, q_block, kv_block)
+        return out.reshape(b, sq, hq, hd)
+
+    def q_step(_, qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * q_block, q_block, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_positions, qi * q_block, q_block)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kv_block, kv_block, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kv_block, kv_block, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_positions, ki * kv_block, kv_block)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk).astype(jnp.float32)
+            s = s * scale
+            if dims.softcap > 0:
+                s = dims.softcap * jnp.tanh(s / dims.softcap)
+            mask = _block_mask(qp, kp, dims)  # (qblk, kblk)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_block, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(nk, dtype=jnp.int32))
+        out = acc / jnp.maximum(l_f[..., None], 1e-20)  # (b, hkv, g, qblk, hd)
+        out = jnp.transpose(out, (0, 3, 1, 2, 4))       # (b, qblk, hkv, g, hd)
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_step, None, jnp.arange(nq, dtype=jnp.int32))
+    # blocks: (nq, b, q_block, hkv, g, hd)
+    out = jnp.transpose(blocks, (1, 0, 2, 3, 4, 5)).reshape(b, sq, hq, hd)
+    return out
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, dims: AttnDims, *,
+    cur_pos: jax.Array, cache_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Single-step attention over a cache.
+
+    q: (B, 1, Hq, D); k_cache/v_cache: (B, Smax, Hkv, D); cur_pos: () or (B,)
+    is the position of the new token. Cache entries at slot i hold position
+    ``cache_positions[i]`` (default: identity, i.e. contiguous cache).
+    """
+    b, _, hq, hd = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32) * scale
+    if dims.softcap > 0:
+        s = dims.softcap * jnp.tanh(s / dims.softcap)
+    pos = cache_positions if cache_positions is not None else jnp.arange(smax)
+    cur = jnp.asarray(cur_pos)
+    cur = cur[..., None] if cur.ndim else cur
+    # slots that were never written carry negative positions -> invalid
+    valid = (pos[None, :] <= cur) & (pos[None, :] >= 0)  # (B or 1, Smax)
+    if dims.window > 0:
+        valid &= pos[None, :] > cur - dims.window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, hq, hd)
+
+
+# ----------------------------------------------------------------- full layer
+
+
+def apply_attention(
+    params,
+    x: jax.Array,
+    dims: AttnDims,
+    *,
+    positions: Optional[jax.Array] = None,
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp=None,
+    name: str = "attn",
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,   # cross-attention K/V source
+    q_block: int = 512,
+    kv_block: int = 512,
+    return_kv: bool = False,
+    use_flash: bool = False,
+):
+    """Training/prefill attention over (B, S, d_model).
+
+    Returns the block output, or (output, (k, v)) with post-RoPE K/V when
+    ``return_kv`` (prefill cache capture).
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q = _project(params, x, qcfg, comp, name, "wq", "bq")
+    if kv is None:
+        k = _project(params, x, qcfg, comp, name, "wk", "bk")
+        v = _project(params, x, qcfg, comp, name, "wv", "bv")
+        kv_positions = None
+        if dims.rope_theta > 0:
+            q = apply_rope(q, positions, dims.rope_theta)
+            k = apply_rope(k, positions, dims.rope_theta)
+    else:
+        k, v = kv
+        kv_positions = jnp.arange(k.shape[1], dtype=jnp.int32)
+    k_ret, v_ret = k, v
+
+    # pad S to block multiples
+    pad_q = (-s) % q_block
+    pad_k = (-k.shape[1]) % kv_block
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        if kv_positions is not None:
+            kv_positions = jnp.pad(kv_positions, (0, pad_k),
+                                   constant_values=jnp.int32(1 << 30))
+    out = blocked_attention(q, k, v, dims, q_block=q_block, kv_block=kv_block,
+                            kv_positions=kv_positions, use_flash=use_flash)
+    if pad_q:
+        out = out[:, :s]
+    out = _project(params, out, qcfg, comp, name, "wo")
+    if return_kv:
+        return out, (k_ret, v_ret)
+    return out
+
+
+def init_kv_cache(batch: int, max_len: int, dims: AttnDims, dtype=jnp.bfloat16):
+    shape = (batch, max_len, dims.n_kv_heads, dims.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def kv_cache_spec(batch: int, max_len: int, dims: AttnDims, dtype=jnp.bfloat16):
+    shape = (batch, max_len, dims.n_kv_heads, dims.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+    }
+
+
+def apply_attention_decode(
+    params,
+    x: jax.Array,              # (B, 1, d_model)
+    cache: dict,               # {"k": (B, Smax, Hkv, D), "v": ...}
+    pos: jax.Array,            # () int32 current position
+    dims: AttnDims,
+    *,
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp=None,
+    name: str = "attn",
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, dict]:
+    """One decode step; returns (output (B, 1, d), updated cache)."""
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    q = _project(params, x, qcfg, comp, name, "wq", "bq")
+
+    if cross_kv is not None:
+        out = decode_attention(
+            q, cross_kv[0], cross_kv[1],
+            dataclasses.replace(dims, causal=False, window=0),
+            cur_pos=jnp.int32(1 << 30))
+        return _project(params, out, qcfg, comp, name, "wo"), cache
+
+    k_new = _project(params, x, qcfg, comp, name, "wk", "bk")
+    v_new = _project(params, x, qcfg, comp, name, "wv", "bv")
+    if dims.rope_theta > 0:
+        q = apply_rope(q, positions, dims.rope_theta)
+        k_new = apply_rope(k_new, positions, dims.rope_theta)
+
+    smax = cache["k"].shape[1]
+    # ring-buffer write for windowed layers, linear write otherwise
+    slot = jnp.mod(pos, smax)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    # slot i holds the largest position congruent to i (mod smax) that is
+    # <= pos; slots never written yet resolve to negative positions, which
+    # the validity mask in decode_attention rejects.
+    idx = jnp.arange(smax, dtype=jnp.int32)
+    cache_positions = idx + ((pos - idx) // smax) * smax
+    out = decode_attention(q, k_cache, v_cache, dims, cur_pos=pos,
+                           cache_positions=cache_positions)
+    out = _project(params, out, qcfg, comp, name, "wo")
+    return out, {"k": k_cache, "v": v_cache}

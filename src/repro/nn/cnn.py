@@ -1,0 +1,382 @@
+"""CNN zoo for the paper's experiments: LeNet-5, ResNet-20, ResNet-50 (CIFAR).
+
+Each model is a `CNNModel` bundling the param/state spec trees, a pure apply
+function, and the list of compressible layers with their systolic matmul
+dimensions (used by the energy model / scheduler). Conv layers are mapped to
+matmuls with im2col dims per paper 3.2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layer_energy import MatmulDims, conv_matmul_dims, dense_matmul_dims
+from repro.nn import layers as L
+from repro.nn.layers import QuantConfig
+from repro.nn.spec import ParamSpec, fan_in_init
+
+
+@dataclasses.dataclass(frozen=True)
+class CompLayer:
+    """A compressible (weight-bearing matmul) layer."""
+
+    name: str
+    kind: str                      # "conv" | "dense"
+    c_in: int
+    c_out: int
+    kernel: int = 1                # conv kernel size (1 for dense)
+    stride: int = 1
+    out_hw: Tuple[int, int] = (1, 1)  # spatial dims of the *output* map
+    padding: str = "SAME"
+
+    def matmul_dims(self, batch: int = 1) -> MatmulDims:
+        if self.kind == "conv":
+            return conv_matmul_dims(
+                self.c_in, self.c_out, (self.kernel, self.kernel), self.out_hw, batch
+            )
+        return dense_matmul_dims(self.c_in, self.c_out, batch)
+
+
+@dataclasses.dataclass
+class CNNModel:
+    name: str
+    num_classes: int
+    spec: dict
+    state_spec: dict
+    apply: Callable  # (params, state, x, *, train, qcfg, comp, capture_taps) -> (logits, state, taps)
+    comp_layers: List[CompLayer]
+
+    def comp_layer(self, name: str) -> CompLayer:
+        for cl in self.comp_layers:
+            if cl.name == name:
+                return cl
+        raise KeyError(name)
+
+    def weight_path(self, name: str) -> Tuple[str, ...]:
+        return tuple(name.split("/")) + ("w",)
+
+    def get_weight(self, params, name: str):
+        node = params
+        for k in self.weight_path(name):
+            node = node[k]
+        return node
+
+
+def _maybe(comp: Optional[Dict], name: str):
+    return None if comp is None else comp.get(name)
+
+
+# ===================================================================== LeNet-5
+
+
+def lenet5(num_classes: int = 10, in_channels: int = 3) -> CNNModel:
+    """LeNet-5 for 32x32 inputs (paper: LeNet-5 / CIFAR-10)."""
+    spec = {
+        "conv1": L.make_conv_spec(in_channels, 6, 5),
+        "conv2": L.make_conv_spec(6, 16, 5),
+        "fc1": L.make_dense_spec(16 * 5 * 5, 120),
+        "fc2": L.make_dense_spec(120, 84),
+        "fc3": L.make_dense_spec(84, num_classes),
+    }
+    comp_layers = [
+        CompLayer("conv1", "conv", in_channels, 6, 5, 1, (28, 28), "VALID"),
+        CompLayer("conv2", "conv", 6, 16, 5, 1, (10, 10), "VALID"),
+        CompLayer("fc1", "dense", 400, 120),
+        CompLayer("fc2", "dense", 120, 84),
+        CompLayer("fc3", "dense", 84, num_classes),
+    ]
+
+    def apply(params, state, x, *, train=False, qcfg=QuantConfig.off(),
+              comp=None, capture_taps=False):
+        tap = {} if capture_taps else None
+        h = L.apply_conv(params["conv1"], x, padding="VALID", qcfg=qcfg,
+                         comp=_maybe(comp, "conv1"), tap=tap, tap_name="conv1")
+        h = jax.nn.relu(h)
+        h = L.max_pool(h)
+        h = L.apply_conv(params["conv2"], h, padding="VALID", qcfg=qcfg,
+                         comp=_maybe(comp, "conv2"), tap=tap, tap_name="conv2")
+        h = jax.nn.relu(h)
+        h = L.max_pool(h)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(L.apply_dense(params["fc1"], h, qcfg=qcfg,
+                                      comp=_maybe(comp, "fc1"), tap=tap, tap_name="fc1"))
+        h = jax.nn.relu(L.apply_dense(params["fc2"], h, qcfg=qcfg,
+                                      comp=_maybe(comp, "fc2"), tap=tap, tap_name="fc2"))
+        logits = L.apply_dense(params["fc3"], h, qcfg=qcfg,
+                               comp=_maybe(comp, "fc3"), tap=tap, tap_name="fc3")
+        return logits, state, (tap or {})
+
+    return CNNModel("lenet5", num_classes, spec, {}, apply, comp_layers)
+
+
+# ===================================================================== ResNets
+
+
+def _basic_block_spec(c_in: int, c_out: int, stride: int):
+    spec = {
+        "conv1": L.make_conv_spec(c_in, c_out, 3, use_bias=False),
+        "bn1": L.make_batchnorm_spec(c_out),
+        "conv2": L.make_conv_spec(c_out, c_out, 3, use_bias=False),
+        "bn2": L.make_batchnorm_spec(c_out),
+    }
+    state = {
+        "bn1": L.make_batchnorm_state(c_out),
+        "bn2": L.make_batchnorm_state(c_out),
+    }
+    if stride != 1 or c_in != c_out:
+        spec["down"] = L.make_conv_spec(c_in, c_out, 1, use_bias=False)
+        spec["down_bn"] = L.make_batchnorm_spec(c_out)
+        state["down_bn"] = L.make_batchnorm_state(c_out)
+    return spec, state
+
+
+def _apply_basic_block(params, state, x, *, prefix, stride, train, qcfg, comp, tap):
+    h = L.apply_conv(params["conv1"], x, stride=stride, qcfg=qcfg,
+                     comp=_maybe(comp, f"{prefix}/conv1"), tap=tap,
+                     tap_name=f"{prefix}/conv1")
+    h, s1 = L.apply_batchnorm(params["bn1"], state["bn1"], h, train=train)
+    h = jax.nn.relu(h)
+    h = L.apply_conv(params["conv2"], h, qcfg=qcfg,
+                     comp=_maybe(comp, f"{prefix}/conv2"), tap=tap,
+                     tap_name=f"{prefix}/conv2")
+    h, s2 = L.apply_batchnorm(params["bn2"], state["bn2"], h, train=train)
+    new_state = {"bn1": s1, "bn2": s2}
+    if "down" in params:
+        skip = L.apply_conv(params["down"], x, stride=stride, qcfg=qcfg,
+                            comp=_maybe(comp, f"{prefix}/down"), tap=tap,
+                            tap_name=f"{prefix}/down")
+        skip, s3 = L.apply_batchnorm(params["down_bn"], state["down_bn"], skip,
+                                     train=train)
+        new_state["down_bn"] = s3
+    else:
+        skip = x
+    return jax.nn.relu(h + skip), new_state
+
+
+def resnet20(num_classes: int = 10, in_channels: int = 3) -> CNNModel:
+    """CIFAR ResNet-20: 3 stages x 3 BasicBlocks, widths 16/32/64."""
+    widths = [16, 32, 64]
+    blocks_per_stage = 3
+    spec = {
+        "conv1": L.make_conv_spec(in_channels, 16, 3, use_bias=False),
+        "bn1": L.make_batchnorm_spec(16),
+        "fc": L.make_dense_spec(64, num_classes),
+    }
+    state_spec = {"bn1": L.make_batchnorm_state(16)}
+    comp_layers = [CompLayer("conv1", "conv", in_channels, 16, 3, 1, (32, 32))]
+
+    hw = 32
+    c_in = 16
+    strides = {}
+    for si, width in enumerate(widths, start=1):
+        for bi in range(1, blocks_per_stage + 1):
+            stride = 2 if (si > 1 and bi == 1) else 1
+            if stride == 2:
+                hw //= 2
+            name = f"s{si}b{bi}"
+            bspec, bstate = _basic_block_spec(c_in, width, stride)
+            spec[name] = bspec
+            state_spec[name] = bstate
+            strides[name] = stride
+            comp_layers.append(
+                CompLayer(f"{name}/conv1", "conv", c_in, width, 3, stride, (hw, hw)))
+            comp_layers.append(
+                CompLayer(f"{name}/conv2", "conv", width, width, 3, 1, (hw, hw)))
+            if stride != 1 or c_in != width:
+                comp_layers.append(
+                    CompLayer(f"{name}/down", "conv", c_in, width, 1, stride, (hw, hw)))
+            c_in = width
+    comp_layers.append(CompLayer("fc", "dense", 64, num_classes))
+
+    def apply(params, state, x, *, train=False, qcfg=QuantConfig.off(),
+              comp=None, capture_taps=False):
+        tap = {} if capture_taps else None
+        h = L.apply_conv(params["conv1"], x, qcfg=qcfg,
+                         comp=_maybe(comp, "conv1"), tap=tap, tap_name="conv1")
+        h, s0 = L.apply_batchnorm(params["bn1"], state["bn1"], h, train=train)
+        h = jax.nn.relu(h)
+        new_state = {"bn1": s0}
+        for si in range(1, 4):
+            for bi in range(1, blocks_per_stage + 1):
+                name = f"s{si}b{bi}"
+                h, bs = _apply_basic_block(
+                    params[name], state[name], h, prefix=name,
+                    stride=strides[name], train=train, qcfg=qcfg, comp=comp, tap=tap)
+                new_state[name] = bs
+        h = L.avg_pool_global(h)
+        logits = L.apply_dense(params["fc"], h, qcfg=qcfg,
+                               comp=_maybe(comp, "fc"), tap=tap, tap_name="fc")
+        return logits, new_state, (tap or {})
+
+    return CNNModel("resnet20", num_classes, spec, state_spec, apply, comp_layers)
+
+
+def _bottleneck_spec(c_in: int, width: int, stride: int):
+    c_out = width * 4
+    spec = {
+        "conv1": L.make_conv_spec(c_in, width, 1, use_bias=False),
+        "bn1": L.make_batchnorm_spec(width),
+        "conv2": L.make_conv_spec(width, width, 3, use_bias=False),
+        "bn2": L.make_batchnorm_spec(width),
+        "conv3": L.make_conv_spec(width, c_out, 1, use_bias=False),
+        "bn3": L.make_batchnorm_spec(c_out),
+    }
+    state = {
+        "bn1": L.make_batchnorm_state(width),
+        "bn2": L.make_batchnorm_state(width),
+        "bn3": L.make_batchnorm_state(c_out),
+    }
+    if stride != 1 or c_in != c_out:
+        spec["down"] = L.make_conv_spec(c_in, c_out, 1, use_bias=False)
+        spec["down_bn"] = L.make_batchnorm_spec(c_out)
+        state["down_bn"] = L.make_batchnorm_state(c_out)
+    return spec, state
+
+
+def _apply_bottleneck(params, state, x, *, prefix, stride, train, qcfg, comp, tap):
+    h = L.apply_conv(params["conv1"], x, qcfg=qcfg,
+                     comp=_maybe(comp, f"{prefix}/conv1"), tap=tap,
+                     tap_name=f"{prefix}/conv1")
+    h, s1 = L.apply_batchnorm(params["bn1"], state["bn1"], h, train=train)
+    h = jax.nn.relu(h)
+    h = L.apply_conv(params["conv2"], h, stride=stride, qcfg=qcfg,
+                     comp=_maybe(comp, f"{prefix}/conv2"), tap=tap,
+                     tap_name=f"{prefix}/conv2")
+    h, s2 = L.apply_batchnorm(params["bn2"], state["bn2"], h, train=train)
+    h = jax.nn.relu(h)
+    h = L.apply_conv(params["conv3"], h, qcfg=qcfg,
+                     comp=_maybe(comp, f"{prefix}/conv3"), tap=tap,
+                     tap_name=f"{prefix}/conv3")
+    h, s3 = L.apply_batchnorm(params["bn3"], state["bn3"], h, train=train)
+    new_state = {"bn1": s1, "bn2": s2, "bn3": s3}
+    if "down" in params:
+        skip = L.apply_conv(params["down"], x, stride=stride, qcfg=qcfg,
+                            comp=_maybe(comp, f"{prefix}/down"), tap=tap,
+                            tap_name=f"{prefix}/down")
+        skip, s4 = L.apply_batchnorm(params["down_bn"], state["down_bn"], skip,
+                                     train=train)
+        new_state["down_bn"] = s4
+    else:
+        skip = x
+    return jax.nn.relu(h + skip), new_state
+
+
+def resnet50(num_classes: int = 100, in_channels: int = 3) -> CNNModel:
+    """ResNet-50 adapted to CIFAR (3x3 stem, no max-pool), 4 bottleneck stages."""
+    stage_blocks = [3, 4, 6, 3]
+    stage_widths = [64, 128, 256, 512]
+    spec = {
+        "conv1": L.make_conv_spec(in_channels, 64, 3, use_bias=False),
+        "bn1": L.make_batchnorm_spec(64),
+        "fc": L.make_dense_spec(2048, num_classes),
+    }
+    state_spec = {"bn1": L.make_batchnorm_state(64)}
+    comp_layers = [CompLayer("conv1", "conv", in_channels, 64, 3, 1, (32, 32))]
+
+    hw = 32
+    c_in = 64
+    strides = {}
+    for si, (n_blocks, width) in enumerate(zip(stage_blocks, stage_widths), start=1):
+        for bi in range(1, n_blocks + 1):
+            stride = 2 if (si > 1 and bi == 1) else 1
+            if stride == 2:
+                hw //= 2
+            name = f"s{si}b{bi}"
+            bspec, bstate = _bottleneck_spec(c_in, width, stride)
+            spec[name] = bspec
+            state_spec[name] = bstate
+            strides[name] = stride
+            in_hw = hw * stride if stride == 2 else hw
+            comp_layers.append(
+                CompLayer(f"{name}/conv1", "conv", c_in, width, 1, 1, (in_hw, in_hw)))
+            comp_layers.append(
+                CompLayer(f"{name}/conv2", "conv", width, width, 3, stride, (hw, hw)))
+            comp_layers.append(
+                CompLayer(f"{name}/conv3", "conv", width, width * 4, 1, 1, (hw, hw)))
+            if stride != 1 or c_in != width * 4:
+                comp_layers.append(
+                    CompLayer(f"{name}/down", "conv", c_in, width * 4, 1, stride, (hw, hw)))
+            c_in = width * 4
+    comp_layers.append(CompLayer("fc", "dense", 2048, num_classes))
+
+    def apply(params, state, x, *, train=False, qcfg=QuantConfig.off(),
+              comp=None, capture_taps=False):
+        tap = {} if capture_taps else None
+        h = L.apply_conv(params["conv1"], x, qcfg=qcfg,
+                         comp=_maybe(comp, "conv1"), tap=tap, tap_name="conv1")
+        h, s0 = L.apply_batchnorm(params["bn1"], state["bn1"], h, train=train)
+        h = jax.nn.relu(h)
+        new_state = {"bn1": s0}
+        for si, n_blocks in enumerate(stage_blocks, start=1):
+            for bi in range(1, n_blocks + 1):
+                name = f"s{si}b{bi}"
+                h, bs = _apply_bottleneck(
+                    params[name], state[name], h, prefix=name,
+                    stride=strides[name], train=train, qcfg=qcfg, comp=comp, tap=tap)
+                new_state[name] = bs
+        h = L.avg_pool_global(h)
+        logits = L.apply_dense(params["fc"], h, qcfg=qcfg,
+                               comp=_maybe(comp, "fc"), tap=tap, tap_name="fc")
+        return logits, new_state, (tap or {})
+
+    return CNNModel("resnet50", num_classes, spec, state_spec, apply, comp_layers)
+
+
+# small reduced variants for smoke tests / fast pipeline runs
+
+
+def resnet8(num_classes: int = 10, in_channels: int = 3) -> CNNModel:
+    """3-stage x 1-block reduced ResNet (same family as resnet20)."""
+    model = resnet20(num_classes, in_channels)
+    # rebuild with 1 block per stage by filtering
+    widths = [16, 32, 64]
+    spec = {
+        "conv1": model.spec["conv1"],
+        "bn1": model.spec["bn1"],
+        "fc": model.spec["fc"],
+    }
+    state_spec = {"bn1": model.state_spec["bn1"]}
+    comp_layers = [model.comp_layers[0]]
+    strides = {}
+    hw = 32
+    c_in = 16
+    for si, width in enumerate(widths, start=1):
+        stride = 2 if si > 1 else 1
+        if stride == 2:
+            hw //= 2
+        name = f"s{si}b1"
+        bspec, bstate = _basic_block_spec(c_in, width, stride)
+        spec[name] = bspec
+        state_spec[name] = bstate
+        strides[name] = stride
+        comp_layers.append(CompLayer(f"{name}/conv1", "conv", c_in, width, 3, stride, (hw, hw)))
+        comp_layers.append(CompLayer(f"{name}/conv2", "conv", width, width, 3, 1, (hw, hw)))
+        if stride != 1 or c_in != width:
+            comp_layers.append(CompLayer(f"{name}/down", "conv", c_in, width, 1, stride, (hw, hw)))
+        c_in = width
+    comp_layers.append(CompLayer("fc", "dense", 64, num_classes))
+
+    def apply(params, state, x, *, train=False, qcfg=QuantConfig.off(),
+              comp=None, capture_taps=False):
+        tap = {} if capture_taps else None
+        h = L.apply_conv(params["conv1"], x, qcfg=qcfg,
+                         comp=_maybe(comp, "conv1"), tap=tap, tap_name="conv1")
+        h, s0 = L.apply_batchnorm(params["bn1"], state["bn1"], h, train=train)
+        h = jax.nn.relu(h)
+        new_state = {"bn1": s0}
+        for si in range(1, 4):
+            name = f"s{si}b1"
+            h, bs = _apply_basic_block(
+                params[name], state[name], h, prefix=name,
+                stride=strides[name], train=train, qcfg=qcfg, comp=comp, tap=tap)
+            new_state[name] = bs
+        h = L.avg_pool_global(h)
+        logits = L.apply_dense(params["fc"], h, qcfg=qcfg,
+                               comp=_maybe(comp, "fc"), tap=tap, tap_name="fc")
+        return logits, new_state, (tap or {})
+
+    return CNNModel("resnet8", num_classes, spec, state_spec, apply, comp_layers)

@@ -1,0 +1,172 @@
+"""Flash-attention-style custom VJP for the blocked attention path.
+
+jax.autodiff of the double-blocked online-softmax forward saves every
+(q-block, kv-block) probability tile for the backward pass — an
+O(nq * nk * B * H * qblk * kblk) f32 stack *per layer* that dominates train
+memory (observed: 8-17 GiB/layer at 4k context on the production mesh).
+
+This module implements the standard FlashAttention backward instead: the
+forward saves only (q, k, v, out, lse); the backward recomputes each score
+tile from q/k and the saved log-sum-exp, accumulating dq in the outer
+q-block scan and dk/dv into a full-size f32 carry via dynamic-update-slice.
+Peak attention memory drops from O(S^2 / blocks) stacks to O(S) residuals.
+
+Semantics identical to `blocked_attention` (GQA grouping, causal + window
+masks, softcap UNSUPPORTED here — callers with softcap fall back to the
+autodiff path); gradients validated against jax.autodiff in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def _forward(q, k, v, q_positions, kv_positions, causal, window,
+             q_block, kv_block):
+    b, sq, hkv, g, hd = q.shape
+    sk = k.shape[1]
+    nq, nk = sq // q_block, sk // kv_block
+    scale = 1.0 / (hd ** 0.5)
+
+    def q_step(_, qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * q_block, q_block, 1)
+        qp = jax.lax.dynamic_slice_in_dim(q_positions, qi * q_block, q_block)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kv_block, kv_block, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kv_block, kv_block, 1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_positions, ki * kv_block,
+                                              kv_block)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk
+                           ).astype(jnp.float32) * scale
+            s = jnp.where(_mask(qp, kp, causal, window)[None, None, None],
+                          s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_block, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk, dtype=jnp.int32))
+        l_safe = jnp.maximum(l_f, 1e-20)
+        out = (acc / l_safe[..., None]).astype(q.dtype)   # (b,hkv,g,qblk,hd)
+        lse = m_f + jnp.log(l_safe)                        # (b,hkv,g,qblk)
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, jnp.arange(nq, dtype=jnp.int32))
+    # outs: (nq, b, hkv, g, qblk, hd) -> (b, sq, hkv, g, hd)
+    out = jnp.transpose(outs, (1, 0, 4, 2, 3, 5)).reshape(b, sq, hkv, g, hd)
+    lse = jnp.transpose(lses, (1, 0, 4, 2, 3)).reshape(b, sq, hkv, g)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def flash_attention(q, k, v, q_positions, kv_positions, causal: bool,
+                    window: int, q_block: int, kv_block: int):
+    """q: (B, Sq, Hkv, G, D); k, v: (B, Sk, Hkv, D); positions int32.
+
+    Returns (B, Sq, Hkv, G, D). Sq/Sk must be block multiples (callers pad).
+    """
+    out, _ = _forward(q, k, v, q_positions, kv_positions, causal, window,
+                      q_block, kv_block)
+    return out
+
+
+def _fwd(q, k, v, q_positions, kv_positions, causal, window, q_block,
+         kv_block):
+    out, lse = _forward(q, k, v, q_positions, kv_positions, causal, window,
+                        q_block, kv_block)
+    return out, (q, k, v, out, lse, q_positions, kv_positions)
+
+
+def _bwd(causal, window, q_block, kv_block, res, dout):
+    q, k, v, out, lse, q_positions, kv_positions = res
+    b, sq, hkv, g, hd = q.shape
+    sk = k.shape[1]
+    nq, nk = sq // q_block, sk // kv_block
+    scale = 1.0 / (hd ** 0.5)
+
+    # delta = rowsum(dout * out) per query row
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                                  # (b,sq,hkv,g)
+
+    def q_step(carry, qi):
+        dk_acc, dv_acc = carry
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * q_block, q_block, 1)
+        do_blk = jax.lax.dynamic_slice_in_dim(dout, qi * q_block, q_block, 1)
+        lse_blk = jax.lax.dynamic_slice_in_dim(lse, qi * q_block, q_block, 1)
+        dl_blk = jax.lax.dynamic_slice_in_dim(delta, qi * q_block, q_block, 1)
+        qp = jax.lax.dynamic_slice_in_dim(q_positions, qi * q_block, q_block)
+        # to (b,hkv,g,qblk,*)
+        q_t = jnp.transpose(q_blk, (0, 2, 3, 1, 4))
+        do_t = jnp.transpose(do_blk, (0, 2, 3, 1, 4)).astype(jnp.float32)
+        lse_t = jnp.transpose(lse_blk, (0, 2, 3, 1))
+        dl_t = jnp.transpose(dl_blk, (0, 2, 3, 1))
+
+        def kv_step(inner, ki):
+            dq_blk, dk_acc, dv_acc = inner
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kv_block, kv_block, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kv_block, kv_block, 1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_positions, ki * kv_block,
+                                              kv_block)
+            s = jnp.einsum("bhgqd,bkhd->bhgqk", q_t, k_blk
+                           ).astype(jnp.float32) * scale
+            s = jnp.where(_mask(qp, kp, causal, window)[None, None, None],
+                          s, NEG_INF)
+            p = jnp.exp(s - lse_t[..., None])                 # (b,hkv,g,q,k)
+            dv_tile = jnp.einsum("bhgqk,bhgqd->bkhd", p, do_t)
+            dp = jnp.einsum("bhgqd,bkhd->bhgqk", do_t,
+                            v_blk.astype(jnp.float32))
+            ds = p * (dp - dl_t[..., None]) * scale
+            dq_blk = dq_blk + jnp.einsum("bhgqk,bkhd->bhgqd", ds,
+                                         k_blk.astype(jnp.float32))
+            dk_tile = jnp.einsum("bhgqk,bhgqd->bkhd", ds,
+                                 q_t.astype(jnp.float32))
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc,
+                jax.lax.dynamic_slice_in_dim(dk_acc, ki * kv_block, kv_block, 1)
+                + dk_tile, ki * kv_block, 1)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc,
+                jax.lax.dynamic_slice_in_dim(dv_acc, ki * kv_block, kv_block, 1)
+                + dv_tile, ki * kv_block, 1)
+            return (dq_blk, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((b, hkv, g, q_block, hd), jnp.float32)
+        (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk, dtype=jnp.int32))
+        dq_out = jnp.transpose(dq_blk, (0, 3, 1, 2, 4)).astype(q.dtype)
+        return (dk_acc, dv_acc), dq_out
+
+    dk0 = jnp.zeros((b, sk, hkv, hd), jnp.float32)
+    dv0 = jnp.zeros((b, sk, hkv, hd), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(q_step, (dk0, dv0),
+                                 jnp.arange(nq, dtype=jnp.int32))
+    dq = jnp.transpose(dqs, (1, 0, 2, 3, 4, 5)).reshape(b, sq, hkv, g, hd)
+    return (dq, dk.astype(k.dtype), dv.astype(v.dtype), None, None)
+
+
+flash_attention.defvjp(_fwd, _bwd)

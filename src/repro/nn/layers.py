@@ -1,0 +1,253 @@
+"""Layer library: compressible Dense/Conv + norms + embeddings.
+
+Every layer is a (make_*_spec, apply_*) pair. Compressible layers accept an
+optional per-layer compression state (`repro.core.qat.CompState`) and a
+`QuantConfig`; when quantization is enabled the forward path is
+int8-fake-quantized with the codebook/mask applied, matching what the
+systolic-array energy model assumes executes on hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat
+from repro.nn.spec import ParamSpec, fan_in_init, normal_init, ones_init, zeros_init
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static quantization switches (hashable: usable as a jit static arg)."""
+
+    enabled: bool = False
+    act_quant: bool = True
+
+    @staticmethod
+    def off() -> "QuantConfig":
+        return QuantConfig(enabled=False)
+
+    @staticmethod
+    def on() -> "QuantConfig":
+        return QuantConfig(enabled=True)
+
+
+# --------------------------------------------------------------------- dense
+
+
+def make_dense_spec(
+    in_dim: int,
+    out_dim: int,
+    *,
+    use_bias: bool = True,
+    dtype=jnp.float32,
+    axes: Tuple[Optional[str], Optional[str]] = (None, None),
+    init=None,
+):
+    spec = {
+        "w": ParamSpec((in_dim, out_dim), dtype, axes, init or fan_in_init())
+    }
+    if use_bias:
+        spec["b"] = ParamSpec((out_dim,), dtype, (axes[1],), zeros_init)
+    return spec
+
+
+def apply_dense(
+    params,
+    x: jax.Array,
+    *,
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp: Optional[qat.CompState] = None,
+    tap: Optional[dict] = None,
+    tap_name: Optional[str] = None,
+) -> jax.Array:
+    w = params["w"]
+    if qcfg.enabled:
+        if qcfg.act_quant:
+            x = qat.fake_quant_act(x)
+        w_eff = qat.fake_quant_weight(w, comp)
+    else:
+        w_eff = w
+    if tap is not None and tap_name is not None:
+        tap[tap_name] = {
+            "a_int": qat.quantize_act_int(x),
+            "w_int": qat.quantize_weight_int(w, comp),
+        }
+    y = jnp.einsum("...k,kn->...n", x, w_eff.astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# --------------------------------------------------------------------- conv2d
+
+
+def make_conv_spec(
+    c_in: int,
+    c_out: int,
+    kernel: int,
+    *,
+    use_bias: bool = True,
+    dtype=jnp.float32,
+    init=None,
+):
+    spec = {
+        "w": ParamSpec(
+            (kernel, kernel, c_in, c_out), dtype, (None, None, None, None),
+            init or fan_in_init(),
+        )
+    }
+    if use_bias:
+        spec["b"] = ParamSpec((c_out,), dtype, (None,), zeros_init)
+    return spec
+
+
+def apply_conv(
+    params,
+    x: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp: Optional[qat.CompState] = None,
+    tap: Optional[dict] = None,
+    tap_name: Optional[str] = None,
+) -> jax.Array:
+    """NHWC conv with HWIO kernel."""
+    w = params["w"]
+    if qcfg.enabled:
+        if qcfg.act_quant:
+            x = qat.fake_quant_act(x)
+        w_eff = qat.fake_quant_weight(w, comp)
+    else:
+        w_eff = w
+    if tap is not None and tap_name is not None:
+        tap[tap_name] = {
+            "a_int": qat.quantize_act_int(x),
+            "w_int": qat.quantize_weight_int(w, comp),
+        }
+    y = jax.lax.conv_general_dilated(
+        x,
+        w_eff.astype(x.dtype),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# --------------------------------------------------------------------- norms
+
+
+def make_batchnorm_spec(dim: int, dtype=jnp.float32):
+    return {
+        "scale": ParamSpec((dim,), dtype, (None,), ones_init),
+        "bias": ParamSpec((dim,), dtype, (None,), zeros_init),
+    }
+
+
+def make_batchnorm_state(dim: int, dtype=jnp.float32):
+    return {
+        "mean": ParamSpec((dim,), dtype, (None,), zeros_init),
+        "var": ParamSpec((dim,), dtype, (None,), ones_init),
+    }
+
+
+def apply_batchnorm(
+    params, state, x: jax.Array, *, train: bool, momentum: float = 0.9,
+    eps: float = 1e-5,
+):
+    """Returns (y, new_state). Reduces over all axes but the channel (last)."""
+    reduce_axes = tuple(range(x.ndim - 1))
+    if train:
+        mean = jnp.mean(x, axis=reduce_axes)
+        var = jnp.var(x, axis=reduce_axes)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    inv = jax.lax.rsqrt(var + eps) * params["scale"]
+    y = (x - mean) * inv + params["bias"]
+    return y, new_state
+
+
+def make_rmsnorm_spec(dim: int, dtype=jnp.float32):
+    return {"scale": ParamSpec((dim,), dtype, (None,), ones_init)}
+
+
+def apply_rmsnorm(params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def make_layernorm_spec(dim: int, dtype=jnp.float32, *, parametric: bool = True):
+    if not parametric:
+        return {}
+    return {
+        "scale": ParamSpec((dim,), dtype, (None,), ones_init),
+        "bias": ParamSpec((dim,), dtype, (None,), zeros_init),
+    }
+
+
+def apply_layernorm(params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm; with empty params this is OLMo's non-parametric LN."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if params:
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# --------------------------------------------------------------------- embed
+
+
+def make_embed_spec(
+    vocab: int, dim: int, *, dtype=jnp.float32,
+    axes: Tuple[Optional[str], Optional[str]] = ("vocab", "embed"),
+):
+    return {"table": ParamSpec((vocab, dim), dtype, axes, normal_init(1.0))}
+
+
+def apply_embed(params, ids: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def apply_unembed(params, x: jax.Array) -> jax.Array:
+    """Tied read-out: logits = x @ table^T."""
+    return jnp.einsum("...d,vd->...v", x, params["table"])
+
+
+# --------------------------------------------------------------------- misc
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def max_pool(x: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def avg_pool_global(x: jax.Array) -> jax.Array:
+    return jnp.mean(x, axis=(1, 2))

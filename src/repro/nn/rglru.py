@@ -1,0 +1,188 @@
+"""Griffin/RecurrentGemma RG-LRU recurrent block [arXiv:2402.19427].
+
+Block structure (the "recurrent" temporal mixer of Griffin):
+
+    x -> linear (d_model -> d_rnn)  -> causal depthwise conv1d -> RG-LRU -> *
+    x -> linear (d_model -> d_rnn)  -> GeLU gate -------------------------^
+    * -> out projection (d_rnn -> d_model)
+
+RG-LRU recurrence (elementwise over the d_rnn channels):
+
+    r_t = sigmoid(W_a x_t + b_a)                 (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                 (input gate)
+    log a_t = -c * softplus(Lambda) * r_t        (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses `jax.lax.associative_scan`; decode is the single-step
+update. Gate matrices in the reference model are block-diagonal; we use full
+dense gates (a documented simplification — same logical axes, strictly more
+general). The recurrence parameters Lambda are not systolic weight-register
+operands and are excluded from weight-value restriction (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat
+from repro.nn.layers import QuantConfig
+from repro.nn.spec import ParamSpec, fan_in_init, normal_init, zeros_init
+
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUDims:
+    d_model: int
+    d_rnn: int
+    conv_width: int = 4
+
+
+def make_rglru_spec(dims: RGLRUDims, dtype=jnp.float32) -> dict:
+    d, r = dims.d_model, dims.d_rnn
+
+    def lambda_init(key, shape, dtype_):
+        # sigma(Lambda) in ~(0.9, 0.999): softplus(Lambda) small positive
+        u = jax.random.uniform(key, shape, jnp.float32, 0.9, 0.999)
+        # want exp(-c*softplus(L)) = u^c ... solve softplus(L) = -log(u)
+        sp = -jnp.log(u)
+        return jnp.log(jnp.expm1(sp)).astype(dtype_)
+
+    return {
+        "in_proj": ParamSpec((d, r), dtype, ("embed", "inner"), fan_in_init(in_axis=0)),
+        "gate_proj": ParamSpec((d, r), dtype, ("embed", "inner"), fan_in_init(in_axis=0)),
+        "conv_w": ParamSpec((dims.conv_width, r), dtype, (None, "inner"), normal_init(0.1)),
+        "conv_b": ParamSpec((r,), dtype, ("inner",), zeros_init),
+        "w_a": ParamSpec((r, r), dtype, ("inner", None), fan_in_init(in_axis=0)),
+        "b_a": ParamSpec((r,), dtype, (None,), zeros_init),
+        "w_x": ParamSpec((r, r), dtype, ("inner", None), fan_in_init(in_axis=0)),
+        "b_x": ParamSpec((r,), dtype, (None,), zeros_init),
+        "lam": ParamSpec((r,), jnp.float32, (None,), lambda_init),
+        "out_proj": ParamSpec((r, d), dtype, ("inner", "embed"), fan_in_init(in_axis=0)),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _rglru_coeffs(params, xc, qcfg, comp, name):
+    """Per-step (log_a, beta*i*x) terms from conv output xc (B, S, r)."""
+
+    def w_of(key):
+        w = params[key]
+        cmp = None if comp is None else comp.get(f"{name}/{key}")
+        return qat.fake_quant_weight(w, cmp) if qcfg.enabled else w
+
+    r_gate = jax.nn.sigmoid(
+        jnp.einsum("bsr,rk->bsk", xc, w_of("w_a").astype(xc.dtype))
+        + params["b_a"].astype(xc.dtype))
+    i_gate = jax.nn.sigmoid(
+        jnp.einsum("bsr,rk->bsk", xc, w_of("w_x").astype(xc.dtype))
+        + params["b_x"].astype(xc.dtype))
+    log_a = (-_C * jax.nn.softplus(params["lam"]) *
+             r_gate.astype(jnp.float32))                      # (B, S, r)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    bx = beta * (i_gate.astype(jnp.float32) * xc.astype(jnp.float32))
+    return a, bx
+
+
+def apply_rglru(
+    params,
+    x: jax.Array,                 # (B, S, d_model)
+    dims: RGLRUDims,
+    *,
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp=None,
+    name: str = "rglru",
+    return_state: bool = False,
+):
+    def w_of(key):
+        w = params[key]
+        cmp = None if comp is None else comp.get(f"{name}/{key}")
+        return qat.fake_quant_weight(w, cmp) if qcfg.enabled else w
+
+    xin = qat.fake_quant_act(x) if (qcfg.enabled and qcfg.act_quant) else x
+    branch = jnp.einsum("bsd,dr->bsr", xin, w_of("in_proj").astype(x.dtype))
+    gate = jnp.einsum("bsd,dr->bsr", xin, w_of("gate_proj").astype(x.dtype))
+
+    xc = _causal_depthwise_conv(branch, params["conv_w"].astype(x.dtype),
+                                params["conv_b"].astype(x.dtype))
+    a, bx = _rglru_coeffs(params, xc, qcfg, comp, name)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    out = h.astype(x.dtype) * jax.nn.gelu(gate, approximate=True)
+    if qcfg.enabled and qcfg.act_quant:
+        out = qat.fake_quant_act(out)
+    out = jnp.einsum("bsr,rd->bsd", out, w_of("out_proj").astype(x.dtype))
+    if return_state:
+        w = dims.conv_width
+        tail = branch[:, -(w - 1):]
+        pad = (w - 1) - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        state = {"h": h[:, -1].astype(jnp.float32), "conv": tail}
+        return out, state
+    return out
+
+
+def init_rglru_cache(batch: int, dims: RGLRUDims, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, dims.d_rnn), dtype),
+        "conv": jnp.zeros((batch, dims.conv_width - 1, dims.d_rnn), dtype),
+    }
+
+
+def rglru_cache_spec(batch: int, dims: RGLRUDims, dtype=jnp.float32) -> dict:
+    return {
+        "h": jax.ShapeDtypeStruct((batch, dims.d_rnn), dtype),
+        "conv": jax.ShapeDtypeStruct((batch, dims.conv_width - 1, dims.d_rnn), dtype),
+    }
+
+
+def apply_rglru_decode(
+    params,
+    x: jax.Array,                 # (B, 1, d_model)
+    cache: dict,
+    dims: RGLRUDims,
+    *,
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp=None,
+    name: str = "rglru",
+) -> Tuple[jax.Array, dict]:
+    def w_of(key):
+        w = params[key]
+        cmp = None if comp is None else comp.get(f"{name}/{key}")
+        return qat.fake_quant_weight(w, cmp) if qcfg.enabled else w
+
+    xin = qat.fake_quant_act(x) if (qcfg.enabled and qcfg.act_quant) else x
+    branch = jnp.einsum("bsd,dr->bsr", xin, w_of("in_proj").astype(x.dtype))
+    gate = jnp.einsum("bsd,dr->bsr", xin, w_of("gate_proj").astype(x.dtype))
+
+    hist = jnp.concatenate([cache["conv"], branch], axis=1)  # (B, W, r)
+    w = params["conv_w"].astype(x.dtype)
+    xc = jnp.einsum("bwr,wr->br", hist, w) + params["conv_b"].astype(x.dtype)
+    new_conv = hist[:, 1:]
+
+    a, bx = _rglru_coeffs(params, xc[:, None], qcfg, comp, name)
+    h_new = a[:, 0] * cache["h"].astype(jnp.float32) + bx[:, 0]
+    out = h_new.astype(x.dtype)[:, None] * jax.nn.gelu(gate, approximate=True)
+    if qcfg.enabled and qcfg.act_quant:
+        out = qat.fake_quant_act(out)
+    out = jnp.einsum("bsr,rd->bsd", out, w_of("out_proj").astype(x.dtype))
+    return out, {"h": h_new.astype(cache["h"].dtype), "conv": new_conv}

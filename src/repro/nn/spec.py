@@ -1,0 +1,185 @@
+"""Spec-first parameter system.
+
+Models are described by *spec trees*: nested dicts whose leaves are
+`ParamSpec` (shape, dtype, logical sharding axes, initializer). From a spec
+tree we can derive, without ever materializing full-size arrays:
+
+  * ``abstract_params``  -> ShapeDtypeStruct tree (for .lower() dry-runs)
+  * ``init_params``      -> concrete initialized tree (eval/smoke/training)
+  * ``param_axes``       -> logical-axes tree (consumed by
+                            `repro.distributed.sharding` to build
+                            NamedShardings)
+
+This mirrors the T5X/Haiku "params as data" style and is what lets a 26B
+model be lowered and compiled on a CPU-only host: `jax.jit(...).lower()` only
+needs the abstract tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of a single parameter."""
+
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    axes: Tuple[Optional[str], ...] = ()
+    init: Optional[Initializer] = None
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank"
+            )
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape) if self.shape else 1
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+# ----------------------------------------------------------------- initializers
+
+def zeros_init(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def normal_init(stddev: float = 0.02):
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+    return init
+
+
+def fan_in_init(in_axis: int = -2, scale: float = 1.0):
+    """LeCun-normal style init: stddev = scale / sqrt(fan_in)."""
+
+    def init(key, shape, dtype):
+        if len(shape) == 0:
+            return jnp.zeros(shape, dtype)
+        fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+        # conv kernels (kh, kw, cin, cout): fan_in = kh*kw*cin
+        if len(shape) == 4:
+            fan_in = shape[0] * shape[1] * shape[2]
+        std = scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+    return init
+
+
+def scaled_uniform_init(scale: float = 1.0):
+    def init(key, shape, dtype):
+        fan_in = shape[-2] if len(shape) > 1 else shape[0]
+        if len(shape) == 4:
+            fan_in = shape[0] * shape[1] * shape[2]
+        bound = scale * math.sqrt(3.0 / max(fan_in, 1))
+        return jax.random.uniform(
+            key, shape, jnp.float32, minval=-bound, maxval=bound
+        ).astype(dtype)
+
+    return init
+
+
+# ----------------------------------------------------------------- derivations
+
+def abstract_params(spec_tree) -> Any:
+    """ShapeDtypeStruct tree — no allocation; feeds jit(...).lower()."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=is_spec
+    )
+
+
+def param_axes(spec_tree) -> Any:
+    """Logical-axes tree with the same structure as the params.
+
+    Leaves are tuples of axis names; consumers must flatten with
+    ``is_leaf=lambda x: isinstance(x, tuple)`` since tuples are themselves
+    pytree nodes.
+    """
+    return jax.tree.map(
+        lambda s: s.axes if s.axes else (None,) * len(s.shape),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+def init_params(key: jax.Array, spec_tree) -> Any:
+    """Concretely initialize every parameter with a per-leaf folded key."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    out = []
+    for i, spec in enumerate(leaves):
+        sub = jax.random.fold_in(key, i)
+        init = spec.init or normal_init(0.02)
+        out.append(init(sub, spec.shape, spec.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def spec_bytes(spec_tree) -> int:
+    """Total parameter bytes implied by the spec tree."""
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(s.size * jnp.dtype(s.dtype).itemsize for s in leaves)
+
+
+def spec_count(spec_tree) -> int:
+    """Total parameter count implied by the spec tree."""
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(s.size for s in leaves)
+
+
+def stack_specs(spec_tree, n_layers: int, layer_axis_name: Optional[str] = None) -> Any:
+    """Lift a per-layer spec tree to a stacked (scan-over-layers) spec tree.
+
+    Each leaf (shape, axes) becomes ((n_layers, *shape), (layer_axis_name,
+    *axes)). Initializers are vmapped over the leading axis at init time by
+    wrapping them to split the key per layer.
+    """
+
+    def lift(s: ParamSpec) -> ParamSpec:
+        base_init = s.init or normal_init(0.02)
+
+        def stacked_init(key, shape, dtype, _base=base_init, _inner=s.shape):
+            keys = jax.random.split(key, shape[0])
+            return jax.vmap(lambda k: _base(k, _inner, dtype))(keys)
+
+        axes = s.axes if s.axes else (None,) * len(s.shape)
+        return ParamSpec(
+            shape=(n_layers, *s.shape),
+            dtype=s.dtype,
+            axes=(layer_axis_name, *axes),
+            init=stacked_init,
+        )
+
+    return jax.tree.map(lift, spec_tree, is_leaf=is_spec)
+
+
+def flatten_with_names(tree, prefix: str = "") -> Dict[str, Any]:
+    """{'a/b/c': leaf} view of a nested-dict tree (for checkpoints/logs)."""
+    out: Dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.update(flatten_with_names(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(flatten_with_names(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out

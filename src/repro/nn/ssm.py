@@ -1,0 +1,311 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked train/prefill + decode.
+
+Implements the SSD algorithm of Mamba-2 [arXiv:2405.21060]: the sequence is
+split into chunks; diagonal (intra-chunk) blocks are computed as masked
+attention-like einsums, inter-chunk information flows through a scan over
+per-chunk states. Decode is the O(1) recurrent state update.
+
+Projections (in/out) are compressible units like every other matmul; the
+per-head A/dt/D scalars are *not* (they never occupy a systolic weight
+register — see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat
+from repro.nn.layers import QuantConfig, apply_rmsnorm
+from repro.nn.spec import ParamSpec, fan_in_init, normal_init, zeros_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def make_ssm_spec(dims: SSMDims, dtype=jnp.float32) -> dict:
+    d, di, h = dims.d_model, dims.d_inner, dims.n_heads
+    gn = dims.n_groups * dims.d_state
+    in_out = 2 * di + 2 * gn + h  # z, x, B, C, dt
+
+    def a_init(key, shape, dtype_):
+        del key
+        # A in [-16, -1): log-uniform-ish init as in mamba2
+        return jnp.log(jnp.linspace(1.0, 16.0, shape[0])).astype(dtype_)
+
+    def dt_bias_init(key, shape, dtype_):
+        del key
+        dt = jnp.exp(jnp.linspace(math.log(1e-3), math.log(0.1), shape[0]))
+        # inverse softplus
+        return jnp.log(jnp.expm1(dt)).astype(dtype_)
+
+    return {
+        "in_proj": ParamSpec((d, in_out), dtype, ("embed", "inner"), fan_in_init(in_axis=0)),
+        "conv_w": ParamSpec((dims.conv_width, dims.conv_dim), dtype, (None, "inner"), normal_init(0.1)),
+        "conv_b": ParamSpec((dims.conv_dim,), dtype, ("inner",), zeros_init),
+        "a_log": ParamSpec((h,), jnp.float32, ("inner",), a_init),
+        "dt_bias": ParamSpec((h,), jnp.float32, ("inner",), dt_bias_init),
+        "d_skip": ParamSpec((h,), jnp.float32, ("inner",), lambda k, s, t: jnp.ones(s, t)),
+        "norm_scale": ParamSpec((di,), dtype, ("inner",), lambda k, s, t: jnp.ones(s, t)),
+        "out_proj": ParamSpec((di, d), dtype, ("inner", "embed"), fan_in_init(in_axis=0)),
+    }
+
+
+# ------------------------------------------------------------------ SSD core
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(..., T) -> (..., T, T) lower-triangular pairwise cumulative sums:
+    out[..., i, j] = sum(a[..., j+1:i+1]) for j <= i, -inf above diagonal."""
+    t = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,        # (B, S, H, P)
+    a: jax.Array,        # (B, S, H) = dt * A  (negative)
+    b_mat: jax.Array,    # (B, S, G, N)
+    c_mat: jax.Array,    # (B, S, G, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,   # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B, S, H, P), final_state (B, H, P, N))."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc, l = s // chunk, chunk
+    rep = h // g
+
+    xc = x.reshape(bsz, nc, l, h, p)
+    ac = a.reshape(bsz, nc, l, h).transpose(0, 3, 1, 2)          # (B, H, nc, l)
+    bc = jnp.repeat(b_mat.reshape(bsz, nc, l, g, n), rep, axis=3)  # (B,nc,l,H,N)
+    cc = jnp.repeat(c_mat.reshape(bsz, nc, l, g, n), rep, axis=3)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                              # (B, H, nc, l)
+
+    # 1. intra-chunk (diagonal blocks)
+    lmat = jnp.exp(_segsum(ac))                                  # (B, H, nc, l, l)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", cc, bc, lmat, xc)
+
+    # 2. per-chunk input states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)              # (B, H, nc, l)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence (state kept in f32 for stability; the decay
+    # factors are f32 exps, so the carry must be f32 regardless of x dtype)
+    chunk_decay = jnp.exp(a_cum[..., -1])                        # (B, H, nc)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp  # (B, H, P, N) f32, (B, H) f32
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    init = (h0.astype(jnp.float32) if h0 is not None
+            else jnp.zeros((bsz, h, p, n), jnp.float32))
+    final, h_prevs = jax.lax.scan(
+        scan_fn, init,
+        (states.astype(jnp.float32).transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(2, 0, 1)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                   # (B, nc, H, P, N)
+
+    # 4. state contribution to outputs
+    state_decay = jnp.exp(a_cum)                                 # (B, H, nc, l)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", cc, h_prevs, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+# ------------------------------------------------------------------ full layer
+
+
+def _split_proj(z: jax.Array, dims: SSMDims):
+    di, gn, h = dims.d_inner, dims.n_groups * dims.d_state, dims.n_heads
+    zg = z[..., :di]
+    xin = z[..., di:2 * di]
+    b_mat = z[..., 2 * di:2 * di + gn]
+    c_mat = z[..., 2 * di + gn:2 * di + 2 * gn]
+    dt = z[..., 2 * di + 2 * gn:]
+    return zg, xin, b_mat, c_mat, dt
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, C), w: (W, C) depthwise causal conv."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def apply_ssm(
+    params,
+    x: jax.Array,                  # (B, S, d_model)
+    dims: SSMDims,
+    *,
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp=None,
+    name: str = "ssm",
+    return_state: bool = False,
+):
+    """Training/prefill path. With ``return_state`` also returns the decode
+    cache ({"state", "conv"}) at the end of the sequence."""
+    bsz, s, _ = x.shape
+
+    def w_of(key):
+        w = params[key]
+        cmp = None if comp is None else comp.get(f"{name}/{key}")
+        return qat.fake_quant_weight(w, cmp) if qcfg.enabled else w
+
+    xin_q = qat.fake_quant_act(x) if (qcfg.enabled and qcfg.act_quant) else x
+    z = jnp.einsum("bsd,dk->bsk", xin_q, w_of("in_proj").astype(x.dtype))
+    zg, xi, b_mat, c_mat, dt_raw = _split_proj(z, dims)
+
+    conv_in = jnp.concatenate([xi, b_mat, c_mat], axis=-1)
+    conv_out = jax.nn.silu(_causal_depthwise_conv(
+        conv_in, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype)))
+    xi = conv_out[..., :dims.d_inner]
+    b_mat = conv_out[..., dims.d_inner:dims.d_inner + dims.n_groups * dims.d_state]
+    c_mat = conv_out[..., dims.d_inner + dims.n_groups * dims.d_state:]
+
+    h = dims.n_heads
+    xh = xi.reshape(bsz, s, h, dims.head_dim)
+    bg = b_mat.reshape(bsz, s, dims.n_groups, dims.d_state)
+    cg = c_mat.reshape(bsz, s, dims.n_groups, dims.d_state)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a_neg = -jnp.exp(params["a_log"])                                     # (H,)
+    a_dt = dt * a_neg                                                     # (B,S,H)
+    x_dt = xh * dt[..., None].astype(xh.dtype)
+
+    pad = (-s) % dims.chunk
+    if pad:
+        x_dt = jnp.pad(x_dt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_dt = jnp.pad(a_dt, ((0, 0), (0, pad), (0, 0)))
+        bg = jnp.pad(bg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cg = jnp.pad(cg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    y, final_state = ssd_chunked(x_dt, a_dt, bg, cg, dims.chunk)
+    if pad:
+        y = y[:, :s]
+    y = y.astype(xh.dtype)  # SSD internals accumulate f32; back to stream dtype
+    y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(bsz, s, dims.d_inner)
+
+    # gated RMSNorm (mamba2) then out projection
+    y = apply_rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(zg))
+    if qcfg.enabled and qcfg.act_quant:
+        y = qat.fake_quant_act(y)
+    out = jnp.einsum("bsk,kd->bsd", y, w_of("out_proj").astype(x.dtype))
+    if return_state:
+        w = dims.conv_width
+        tail = conv_in[:, -(w - 1):]
+        p2 = (w - 1) - tail.shape[1]
+        if p2 > 0:
+            tail = jnp.pad(tail, ((0, 0), (p2, 0), (0, 0)))
+        state = {"state": final_state.astype(jnp.float32), "conv": tail}
+        return out, state
+    return out
+
+
+def init_ssm_cache(batch: int, dims: SSMDims, dtype=jnp.float32) -> dict:
+    return {
+        "state": jnp.zeros((batch, dims.n_heads, dims.head_dim, dims.d_state), dtype),
+        "conv": jnp.zeros((batch, dims.conv_width - 1, dims.conv_dim), dtype),
+    }
+
+
+def ssm_cache_spec(batch: int, dims: SSMDims, dtype=jnp.float32) -> dict:
+    return {
+        "state": jax.ShapeDtypeStruct(
+            (batch, dims.n_heads, dims.head_dim, dims.d_state), dtype),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, dims.conv_width - 1, dims.conv_dim), dtype),
+    }
+
+
+def apply_ssm_decode(
+    params,
+    x: jax.Array,                  # (B, 1, d_model)
+    cache: dict,
+    dims: SSMDims,
+    *,
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp=None,
+    name: str = "ssm",
+) -> Tuple[jax.Array, dict]:
+    bsz = x.shape[0]
+
+    def w_of(key):
+        w = params[key]
+        cmp = None if comp is None else comp.get(f"{name}/{key}")
+        return qat.fake_quant_weight(w, cmp) if qcfg.enabled else w
+
+    xin_q = qat.fake_quant_act(x) if (qcfg.enabled and qcfg.act_quant) else x
+    z = jnp.einsum("bsd,dk->bsk", xin_q, w_of("in_proj").astype(x.dtype))[:, 0]
+    zg, xi, b_mat, c_mat, dt_raw = _split_proj(z, dims)
+
+    conv_in = jnp.concatenate([xi, b_mat, c_mat], axis=-1)     # (B, conv_dim)
+    conv_hist = jnp.concatenate(
+        [cache["conv"].astype(x.dtype), conv_in[:, None]], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", conv_hist, w) + params["conv_b"].astype(x.dtype)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = conv_hist[:, 1:].astype(cache["conv"].dtype)
+
+    xi = conv_out[..., :dims.d_inner]
+    gn = dims.n_groups * dims.d_state
+    b_vec = conv_out[..., dims.d_inner:dims.d_inner + gn]
+    c_vec = conv_out[..., dims.d_inner + gn:]
+
+    h, p, n = dims.n_heads, dims.head_dim, dims.d_state
+    rep = h // dims.n_groups
+    xh = xi.reshape(bsz, h, p)
+    bg = jnp.repeat(b_vec.reshape(bsz, dims.n_groups, n), rep, axis=1)  # (B,H,N)
+    cg = jnp.repeat(c_vec.reshape(bsz, dims.n_groups, n), rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a_neg = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a_neg)                                           # (B,H)
+
+    state = cache["state"].astype(jnp.float32)
+    upd = (xh * dt[..., None].astype(xh.dtype))[..., None] * bg[:, :, None, :]
+    new_state = state * decay[..., None, None] + upd.astype(jnp.float32)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state.astype(xh.dtype), cg)
+    y = y + xh * params["d_skip"][None, :, None].astype(xh.dtype)
+    y = y.reshape(bsz, 1, dims.d_inner)
+
+    y = apply_rmsnorm({"scale": params["norm_scale"]},
+                      y * jax.nn.silu(zg[:, None]))
+    if qcfg.enabled and qcfg.act_quant:
+        y = qat.fake_quant_act(y)
+    out = jnp.einsum("bsk,kd->bsd", y, w_of("out_proj").astype(x.dtype))
+    return out, {"state": new_state.astype(cache["state"].dtype), "conv": new_conv}

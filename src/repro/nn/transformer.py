@@ -1,0 +1,277 @@
+"""Transformer block assembly: norms + mixer (attn/local/rglru/ssm) + FFN/MoE.
+
+A *block* is one residual layer of the network. `make_block_spec` /
+`apply_block` / `apply_block_decode` dispatch on the block type string; the
+LM assembler (repro.models.lm) stacks same-typed blocks and scans over them.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat
+from repro.models.config import ArchConfig
+from repro.nn import attention as A
+from repro.nn import moe as MOE
+from repro.nn import rglru as RG
+from repro.nn import ssm as SSM
+from repro.nn.layers import QuantConfig, apply_layernorm, apply_rmsnorm
+from repro.nn.spec import ParamSpec, fan_in_init
+
+# ------------------------------------------------------------------- norms
+
+
+def make_norm_spec(cfg: ArchConfig):
+    if cfg.norm == "rmsnorm":
+        return {"scale": ParamSpec((cfg.d_model,), cfg.pdtype, (None,),
+                                   lambda k, s, t: jnp.ones(s, t))}
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamSpec((cfg.d_model,), cfg.pdtype, (None,),
+                               lambda k, s, t: jnp.ones(s, t)),
+            "bias": ParamSpec((cfg.d_model,), cfg.pdtype, (None,),
+                              lambda k, s, t: jnp.zeros(s, t)),
+        }
+    if cfg.norm == "nonparam_ln":
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(params, x, cfg: ArchConfig):
+    if cfg.norm == "rmsnorm":
+        return apply_rmsnorm(params, x)
+    return apply_layernorm(params, x)  # parametric or non-parametric LN
+
+
+# ------------------------------------------------------------------- ffn
+
+
+def make_ffn_spec(cfg: ArchConfig):
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.pdtype
+    if cfg.ffn in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d, f), dt, ("embed", "mlp"), fan_in_init(in_axis=0)),
+            "w_up": ParamSpec((d, f), dt, ("embed", "mlp"), fan_in_init(in_axis=0)),
+            "w_down": ParamSpec((f, d), dt, ("mlp", "embed"), fan_in_init(in_axis=0)),
+        }
+    return {
+        "w_up": ParamSpec((d, f), dt, ("embed", "mlp"), fan_in_init(in_axis=0)),
+        "w_down": ParamSpec((f, d), dt, ("mlp", "embed"), fan_in_init(in_axis=0)),
+    }
+
+
+def apply_ffn(params, x, cfg: ArchConfig, *, qcfg=QuantConfig.off(), comp=None,
+              name: str = "mlp"):
+    def w_of(key):
+        w = params[key]
+        c = None if comp is None else comp.get(f"{name}/{key}")
+        return qat.fake_quant_weight(w, c) if qcfg.enabled else w
+
+    xin = qat.fake_quant_act(x) if (qcfg.enabled and qcfg.act_quant) else x
+    if cfg.ffn in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", xin, w_of("w_gate").astype(x.dtype))
+        u = jnp.einsum("...d,df->...f", xin, w_of("w_up").astype(x.dtype))
+        h = (jax.nn.silu(g) if cfg.ffn == "swiglu"
+             else jax.nn.gelu(g, approximate=True)) * u
+    else:
+        u = jnp.einsum("...d,df->...f", xin, w_of("w_up").astype(x.dtype))
+        h = jax.nn.gelu(u, approximate=True)
+    if qcfg.enabled and qcfg.act_quant:
+        h = qat.fake_quant_act(h)
+    return jnp.einsum("...f,fd->...d", h, w_of("w_down").astype(x.dtype))
+
+
+# ------------------------------------------------------------------- blocks
+
+
+def make_block_spec(cfg: ArchConfig, block_type: str, *, cross_attn: bool = False):
+    spec = {"ln1": make_norm_spec(cfg)}
+    if block_type in ("attn", "local"):
+        spec["attn"] = A.make_attention_spec(
+            cfg.attn_dims(block_type == "local"), cfg.pdtype)
+        spec["ln2"] = make_norm_spec(cfg)
+        if cfg.is_moe:
+            spec["moe"] = MOE.make_moe_spec(cfg.moe_dims(), cfg.pdtype)
+        else:
+            spec["mlp"] = make_ffn_spec(cfg)
+    elif block_type == "rglru":
+        spec["rglru"] = RG.make_rglru_spec(cfg.rglru_dims(), cfg.pdtype)
+        spec["ln2"] = make_norm_spec(cfg)
+        spec["mlp"] = make_ffn_spec(cfg)
+    elif block_type == "ssm":
+        spec["ssm"] = SSM.make_ssm_spec(cfg.ssm_dims(), cfg.pdtype)
+    else:
+        raise ValueError(block_type)
+    if cross_attn:
+        spec["ln_x"] = make_norm_spec(cfg)
+        spec["xattn"] = A.make_attention_spec(cfg.enc_attn_dims(), cfg.pdtype)
+    return spec
+
+
+def apply_block(
+    params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    block_type: str,
+    *,
+    positions: Optional[jax.Array] = None,
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp=None,
+    enc_out: Optional[jax.Array] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+    encoder: bool = False,
+    return_state: bool = False,
+    use_flash: bool = False,
+):
+    """One residual block (train/prefill).
+
+    Returns (x, aux), or ((x, aux), state) when ``return_state`` — the state
+    is the mixer's contribution to a decode cache (K/V after RoPE, or the
+    recurrent/SSM final state).
+    """
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "z_loss": jnp.zeros((), jnp.float32)}
+    state = None
+    h = apply_norm(params["ln1"], x, cfg)
+    if block_type in ("attn", "local"):
+        dims = cfg.enc_attn_dims() if encoder else cfg.attn_dims(block_type == "local")
+        mix = A.apply_attention(params["attn"], h, dims, positions=positions,
+                                qcfg=qcfg, comp=comp, name="attn",
+                                q_block=q_block, kv_block=kv_block,
+                                return_kv=return_state, use_flash=use_flash)
+        if return_state:
+            mix, (k_st, v_st) = mix
+            state = {"k": k_st, "v": v_st}
+    elif block_type == "rglru":
+        mix = RG.apply_rglru(params["rglru"], h, cfg.rglru_dims(),
+                             qcfg=qcfg, comp=comp, name="rglru",
+                             return_state=return_state)
+        if return_state:
+            mix, state = mix
+    elif block_type == "ssm":
+        mix = SSM.apply_ssm(params["ssm"], h, cfg.ssm_dims(),
+                            qcfg=qcfg, comp=comp, name="ssm",
+                            return_state=return_state)
+        if return_state:
+            mix, state = mix
+    else:
+        raise ValueError(block_type)
+    x = x + mix
+
+    if "xattn" in params:
+        h = apply_norm(params["ln_x"], x, cfg)
+        assert enc_out is not None, "cross-attention block needs encoder output"
+        xa = A.apply_attention(
+            params["xattn"], h, cfg.enc_attn_dims(), qcfg=qcfg, comp=comp,
+            name="xattn", kv=_cross_kv(params["xattn"], enc_out, cfg, qcfg, comp),
+            q_block=q_block, kv_block=kv_block)
+        x = x + xa
+
+    if block_type == "ssm":
+        return ((x, aux), state) if return_state else (x, aux)
+
+    h = apply_norm(params["ln2"], x, cfg)
+    if cfg.is_moe and block_type in ("attn", "local"):
+        y, moe_aux = MOE.apply_moe(params["moe"], h, cfg.moe_dims(),
+                                   qcfg=qcfg, comp=comp, name="moe")
+        aux = {"lb_loss": moe_aux["lb_loss"], "z_loss": moe_aux["z_loss"]}
+    else:
+        y = apply_ffn(params["mlp"], h, cfg, qcfg=qcfg, comp=comp, name="mlp")
+    x = x + y
+    return ((x, aux), state) if return_state else (x, aux)
+
+
+def _cross_kv(attn_params, enc_out, cfg: ArchConfig, qcfg, comp):
+    """K/V from encoder output for cross-attention (no RoPE)."""
+    from repro.nn.attention import _project
+
+    k = _project(attn_params, enc_out, qcfg, comp, "xattn", "wk", "bk")
+    v = _project(attn_params, enc_out, qcfg, comp, "xattn", "wv", "bv")
+    return k, v
+
+
+# ------------------------------------------------------------------- decode
+
+
+def block_cache_spec(cfg: ArchConfig, block_type: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16, *, cross_len: int = 0):
+    if block_type in ("attn", "local"):
+        dims = cfg.attn_dims(block_type == "local")
+        cache_len = min(max_len, dims.window) if dims.window else max_len
+        spec = A.kv_cache_spec(batch, cache_len, dims, dtype)
+        if cross_len:
+            xdims = cfg.enc_attn_dims()
+            spec["xk"] = jax.ShapeDtypeStruct(
+                (batch, cross_len, xdims.n_kv_heads, xdims.head_dim), dtype)
+            spec["xv"] = jax.ShapeDtypeStruct(
+                (batch, cross_len, xdims.n_kv_heads, xdims.head_dim), dtype)
+        return spec
+    if block_type == "rglru":
+        return RG.rglru_cache_spec(batch, cfg.rglru_dims(), jnp.float32)
+    if block_type == "ssm":
+        return SSM.ssm_cache_spec(batch, cfg.ssm_dims(), jnp.float32)
+    raise ValueError(block_type)
+
+
+def init_block_cache(cfg: ArchConfig, block_type: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16, *, cross_len: int = 0):
+    spec = block_cache_spec(cfg, block_type, batch, max_len, dtype,
+                            cross_len=cross_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def apply_block_decode(
+    params,
+    x: jax.Array,            # (B, 1, d)
+    cache: dict,
+    pos: jax.Array,          # () int32
+    cfg: ArchConfig,
+    block_type: str,
+    *,
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp=None,
+) -> Tuple[jax.Array, dict]:
+    h = apply_norm(params["ln1"], x, cfg)
+    new_cache = dict(cache)
+    if block_type in ("attn", "local"):
+        dims = cfg.attn_dims(block_type == "local")
+        kv_cache = {"k": cache["k"], "v": cache["v"]}
+        mix, kv_new = A.apply_attention_decode(
+            params["attn"], h, kv_cache, pos, dims, qcfg=qcfg, comp=comp,
+            name="attn")
+        new_cache.update(kv_new)
+    elif block_type == "rglru":
+        mix, rg_new = RG.apply_rglru_decode(
+            params["rglru"], h, cache, cfg.rglru_dims(), qcfg=qcfg, comp=comp,
+            name="rglru")
+        new_cache = rg_new
+    elif block_type == "ssm":
+        mix, ssm_new = SSM.apply_ssm_decode(
+            params["ssm"], h, cache, cfg.ssm_dims(), qcfg=qcfg, comp=comp,
+            name="ssm")
+        new_cache = ssm_new
+    else:
+        raise ValueError(block_type)
+    x = x + mix
+
+    if "xattn" in params:
+        h = apply_norm(params["ln_x"], x, cfg)
+        xa, _ = A.apply_attention_decode(
+            params["xattn"], h, {}, pos, cfg.enc_attn_dims(), qcfg=qcfg,
+            comp=comp, name="xattn", cross_kv=(cache["xk"], cache["xv"]))
+        x = x + xa
+
+    if block_type == "ssm":
+        return x, new_cache
+
+    h = apply_norm(params["ln2"], x, cfg)
+    if cfg.is_moe and block_type in ("attn", "local"):
+        y, _ = MOE.apply_moe(params["moe"], h, cfg.moe_dims(), qcfg=qcfg,
+                             comp=comp, name="moe")
+    else:
+        y = apply_ffn(params["mlp"], h, cfg, qcfg=qcfg, comp=comp, name="mlp")
+    return x + y, new_cache

@@ -1,0 +1,4 @@
+"""Optimizers, schedules, gradient transforms, gradient compression."""
+
+from repro.optim.optimizers import Optimizer, adamw, sgdm  # noqa: F401
+from repro.optim.schedules import constant, warmup_cosine  # noqa: F401

@@ -1,0 +1,100 @@
+"""Gradient compression for bandwidth-bound data parallelism.
+
+Two classic compressors, both with error feedback (EF / memory) so the
+compression error is re-injected next step (Seide et al.; Karimireddy et al.
+— EF makes biased compressors convergent):
+
+  * ``int8_compressor``   — per-leaf symmetric int8 quantization (4x over
+    fp32 on the wire; the all-reduce runs on int8 + one fp32 scale).
+  * ``topk_compressor``   — keep the top-k fraction by magnitude per leaf
+    (sparsity on the wire; here k is a fraction, materialized as a mask).
+
+`compressed(optimizer, compressor)` wraps any repro Optimizer: the update
+sees the *decompressed* gradients (exactly what a compressed all-reduce
+delivers), EF state rides in the optimizer state, and `wire_bytes` reports
+the simulated network volume for the benchmark harness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+
+
+class Compressor(NamedTuple):
+    init: Callable          # params -> ef_state
+    compress: Callable      # (grads, ef_state) -> (grads', ef_state', stats)
+
+
+def int8_compressor() -> Compressor:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def compress(grads, ef):
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(gf / scale), -127, 127)
+            deq = q * scale
+            return deq.astype(g.dtype), gf - deq
+
+        out = jax.tree.map(one, grads, ef)
+        deq = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        n_elems = sum(g.size for g in jax.tree.leaves(grads))
+        stats = {"wire_bytes": n_elems * 1 + 4 * len(jax.tree.leaves(grads)),
+                 "raw_bytes": n_elems * 4}
+        return deq, new_ef, stats
+
+    return Compressor(init, compress)
+
+
+def topk_compressor(fraction: float = 0.01) -> Compressor:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def compress(grads, ef):
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            flat = jnp.abs(gf).reshape(-1)
+            k = max(1, int(fraction * flat.shape[0]))
+            thresh = jax.lax.top_k(flat, k)[0][-1]
+            mask = (jnp.abs(gf) >= thresh).astype(jnp.float32)
+            kept = gf * mask
+            return kept.astype(g.dtype), gf - kept
+
+        out = jax.tree.map(one, grads, ef)
+        kept = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        n_elems = sum(g.size for g in jax.tree.leaves(grads))
+        kept_elems = int(max(1, fraction * n_elems))
+        stats = {"wire_bytes": kept_elems * 8,  # value + index
+                 "raw_bytes": n_elems * 4}
+        return kept, new_ef, stats
+
+    return Compressor(init, compress)
+
+
+def compressed(optimizer: Optimizer, compressor: Compressor) -> Optimizer:
+    """Optimizer wrapper: grads pass through the compressor (with EF) before
+    the inner update."""
+
+    def init(params):
+        return {"inner": optimizer.init(params),
+                "ef": compressor.init(params)}
+
+    def update(grads, state, params):
+        deq, ef, _stats = compressor.compress(grads, state["ef"])
+        updates, inner = optimizer.update(deq, state["inner"], params)
+        return updates, {"inner": inner, "ef": ef}
+
+    return Optimizer(init, update)

@@ -1,0 +1,113 @@
+"""Minimal-but-production optimizer stack (no optax dependency).
+
+`Optimizer` is an (init, update) pair over arbitrary param pytrees, with the
+update signature ``update(grads, state, params) -> (updates, new_state)``;
+``updates`` are *deltas* to add to params. Learning-rate schedules are
+callables of the int step (kept inside the state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def _tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.asarray(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": _tree_zeros_like(params),
+            "nu": _tree_zeros_like(params),
+        }
+
+    def update(grads, state, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        stepf = step.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state["nu"], grads)
+        mu_hat_scale = 1.0 / (1.0 - b1**stepf)
+        nu_hat_scale = 1.0 / (1.0 - b2**stepf)
+        lr_t = lr_fn(step)
+
+        def upd(m, v, p):
+            mh = m * mu_hat_scale
+            vh = v * nu_hat_scale
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p
+            return (-lr_t * delta).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def sgdm(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    *,
+    momentum: float = 0.9,
+    weight_decay: float = 0.0,
+    nesterov: bool = False,
+    max_grad_norm: Optional[float] = None,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32), "vel": _tree_zeros_like(params)}
+
+    def update(grads, state, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        vel = jax.tree.map(lambda v, g: momentum * v + g, state["vel"], grads)
+        if nesterov:
+            eff = jax.tree.map(lambda v, g: momentum * v + g, vel, grads)
+        else:
+            eff = vel
+        updates = jax.tree.map(lambda e, p: (-lr_t * e).astype(p.dtype), eff, params)
+        return updates, {"step": step, "vel": vel}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

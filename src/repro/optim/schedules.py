@@ -1,0 +1,36 @@
+"""Learning-rate schedules (callables of the int step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def fn(step):
+        del step
+        return jnp.asarray(lr, jnp.float32)
+
+    return fn
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        stepf = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * stepf / max(warmup_steps, 1)
+        progress = jnp.clip(
+            (stepf - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return jnp.where(stepf < warmup_steps, warm, peak_lr * cos)
+
+    return fn
+
+
+def linear_decay(peak_lr: float, total_steps: int, final_frac: float = 0.0):
+    def fn(step):
+        stepf = jnp.asarray(step, jnp.float32)
+        frac = jnp.clip(stepf / max(total_steps, 1), 0.0, 1.0)
+        return peak_lr * (1.0 - (1.0 - final_frac) * frac)
+
+    return fn

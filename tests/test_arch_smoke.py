@@ -1,0 +1,95 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-grad step + one decode step on CPU; shape and finiteness checks.
+
+The FULL configs are exercised only via the dry-run (abstract lowering)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_ARCHS, SHAPES, cell_is_runnable, get_config, skip_reason
+from repro.models.config import active_param_count, model_param_count
+from repro.models.lm import build_lm
+from repro.nn.spec import abstract_params, init_params, spec_count
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_reduced_forward_train_decode(arch):
+    cfg_full = get_config(arch)
+    cfg = cfg_full.scaled_down()
+    model = build_lm(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.spec)
+
+    b, s = 2, 24
+    key = jax.random.PRNGKey(1)
+    batch = {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab),
+    }
+    if cfg.prefix_len:
+        batch["prefix_embeds"] = jax.random.normal(
+            key, (b, cfg.prefix_len, cfg.d_model))
+    if cfg.encoder_decoder:
+        batch["enc_embeds"] = jax.random.normal(key, (b, 16, cfg.d_model))
+
+    # forward
+    logits, _ = model.forward(
+        params, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_embeds=batch.get("enc_embeds"),
+        q_block=8, kv_block=8)
+    exp_s = s + (cfg.prefix_len or 0)
+    assert logits.shape == (b, exp_s, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab])))
+
+    # one train grad step
+    def loss_fn(p):
+        return model.loss(p, batch, q_block=8, kv_block=8)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert gnorm > 0.0
+
+    # one decode step from a prefilled cache
+    lg, cache = model.prefill(
+        params, batch["tokens"][:, :8], max_len=32,
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_embeds=batch.get("enc_embeds"),
+        cache_dtype=jnp.float32, q_block=8, kv_block=8)
+    lg_d, cache = model.decode_step(params, cache, batch["tokens"][:, 8:9])
+    assert lg_d.shape == (b, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(lg_d[..., :cfg.vocab])))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_param_count_sane(arch):
+    """Abstract spec of the FULL config: no allocation, count must be within
+    30% of the analytic estimate (catches mis-wired configs)."""
+    import math
+
+    cfg = get_config(arch)
+    model = build_lm(cfg)
+    ab = abstract_params(model.spec)
+    n = sum(math.prod(l.shape) for l in jax.tree.leaves(ab))
+    est = model_param_count(cfg)
+    assert 0.7 < n / est < 1.3, (n, est)
+    # family-plausible magnitudes
+    floor = {"internvl2-26b": 15e9, "qwen2.5-14b": 12e9,
+             "phi3.5-moe-42b-a6.6b": 35e9, "moonshot-v1-16b-a3b": 15e9}
+    if arch in floor:
+        assert n > floor[arch]
+    assert active_param_count(cfg) <= est + 1
+
+
+def test_cell_applicability_matrix():
+    cells = [(a, s) for a in ALL_ARCHS for s in SHAPES]
+    assert len(cells) == 40
+    runnable = [c for c in cells if cell_is_runnable(*c)]
+    skipped = [c for c in cells if not cell_is_runnable(*c)]
+    assert len(skipped) == 8  # long_500k for the 8 full-attention archs
+    assert all(s == "long_500k" for _, s in skipped)
+    for a, s in skipped:
+        assert skip_reason(a, s)
+    long_ok = {a for a, s in runnable if s == "long_500k"}
+    assert long_ok == {"recurrentgemma-2b", "mamba2-1.3b"}

@@ -1,0 +1,153 @@
+"""Tests for weight selection, layer-wise scheduling, and the full pipeline."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qat
+from repro.core.compression import CompressionPipeline, PipelineConfig
+from repro.core.layer_energy import LayerEnergyModel, MatmulDims
+from repro.core.runner import CnnRunner
+from repro.core.schedule import ScheduleConfig
+from repro.core.weight_selection import (
+    SelectionConfig,
+    greedy_backward_elimination,
+    initial_candidate_set,
+    naive_lowest_energy_set,
+    nearest_other,
+)
+from repro.data.synthetic import SyntheticImages
+from repro.nn import cnn
+
+
+def test_initial_candidate_set_properties():
+    counts = jnp.zeros((256,)).at[128 + 5].set(100.0).at[128 - 3].set(80.0)
+    lut = jnp.linspace(1.0, 3.0, 256)  # energy grows with value index
+    cfg = SelectionConfig(k_init=8)
+    values = initial_candidate_set(counts, lut, cfg)
+    assert len(values) == 8
+    assert 0 in values
+    assert 5 in values  # heavily used value must make the cut
+    assert -3 in values
+
+
+def test_nearest_other():
+    assert nearest_other([-4, 0, 3, 9], 3) == 0
+    assert nearest_other([-4, 0, 3, 9], 9) == 3
+    assert nearest_other([1, 2], 1) == 2
+
+
+def test_naive_lowest_energy_set():
+    lut = jnp.arange(256.0)[::-1]  # w=-128 most expensive ... w=127 cheapest
+    vals = naive_lowest_energy_set(lut, 4)
+    assert vals == [124, 125, 126, 127]
+
+
+def test_greedy_elimination_respects_essential_values():
+    """A value whose removal tanks accuracy must be kept; cheap-but-useless
+    values must go."""
+    counts = jnp.zeros((256,))
+    lut = jnp.ones((256,))
+    candidate = [-64, -32, -8, 0, 8, 32, 64, 96]
+    for v in candidate:
+        counts = counts.at[v + 128].set(50.0)
+    # make high-magnitude values expensive
+    for v in candidate:
+        lut = lut.at[v + 128].set(1.0 + abs(v) / 32.0)
+    model = LayerEnergyModel("t", MatmulDims(64, 64, 64), lut, counts)
+
+    def eval_with_codebook(values, n_batches):
+        del n_batches
+        # accuracy collapses without +-32; otherwise mild degradation per value
+        if 32 not in values or -32 not in values:
+            return 0.2
+        return 0.9 - 0.005 * (len(candidate) - len(values))
+
+    cfg = SelectionConfig(k_target=5, delta_acc=0.05, epsilon=1e-3,
+                          score_batches=1, accept_batches=1)
+    final, report = greedy_backward_elimination(
+        model, candidate, cfg, acc0=0.9, eval_with_codebook=eval_with_codebook)
+    assert len(final) == 5
+    assert 32 in final and -32 in final
+    assert 0 in final
+    # the most expensive removable values (96, 64, -64) should be gone
+    assert 96 not in final
+    assert report.energy_after < report.energy_before
+
+
+def _tiny_runner(seed=0):
+    return CnnRunner(cnn.lenet5(), SyntheticImages(seed=3), batch_size=64,
+                     lr=2e-3, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def trained_lenet():
+    runner = _tiny_runner()
+    params, state, opt_state, comp = runner.init()
+    params, state, opt_state, _ = runner.train(params, state, opt_state, comp, 200)
+    stats = runner.profile(params, state, comp, n_batches=1, max_tiles=6)
+    return runner, params, state, opt_state, comp, stats
+
+
+def test_energy_models_and_shares(trained_lenet):
+    runner, params, state, opt_state, comp, stats = trained_lenet
+    models = runner.energy_models(params, comp, stats)
+    assert set(models) == {cl.name for cl in runner.model.comp_layers}
+    energies = {n: m.energy for n, m in models.items()}
+    assert all(e > 0 for e in energies.values())
+    # conv2 dominates LeNet-5 conv energy (16x6x25 weights over 10x10 map)
+    assert energies["conv2"] > energies["fc3"]
+
+
+def test_schedule_end_to_end(trained_lenet):
+    runner, params, state, opt_state, comp, stats = trained_lenet
+    cfg = ScheduleConfig(
+        prune_ratios=(0.5,), k_targets=(16,), delta_acc=0.06,
+        finetune_steps=25, trial_finetune_steps=15, eval_batches=2,
+        max_layers=2, min_energy_share=0.0)
+    sel = SelectionConfig(k_init=24, k_target=16, delta_acc=0.06,
+                          score_batches=1, accept_batches=2,
+                          max_score_candidates=6)
+    from repro.core.schedule import energy_prioritized_compression
+
+    p2, s2, o2, c2, result = energy_prioritized_compression(
+        runner, params, state, opt_state, comp, stats, cfg, sel)
+    assert result.acc_final >= result.acc0 - cfg.delta_acc - 1e-6
+    accepted = [d for d in result.decisions if d.accepted]
+    assert accepted, "at least one layer should accept the aggressive config"
+    # energy must go down on accepted layers
+    for d in accepted:
+        assert d.energy_after < d.energy_before
+        # restriction actually holds: <= k distinct quantized values
+        w = runner.model.get_weight(p2, d.layer)
+        w_int = qat.quantize_weight_int(w, c2[d.layer])
+        assert len(np.unique(np.asarray(w_int))) <= d.k
+    assert result.energy_after < result.energy_before
+
+
+def test_pipeline_smoke():
+    """Full pipeline (QAT -> profile -> schedule -> finetune) on a tiny budget."""
+    runner = _tiny_runner(seed=1)
+    cfg = PipelineConfig(
+        qat_steps=150,
+        profile_batches=1,
+        profile_max_tiles=4,
+        final_finetune_steps=20,
+        eval_batches=2,
+        schedule=ScheduleConfig(prune_ratios=(0.5,), k_targets=(16,),
+                                delta_acc=0.08, finetune_steps=15,
+                                trial_finetune_steps=10, eval_batches=2,
+                                max_layers=1),
+        selection=SelectionConfig(k_init=20, k_target=16, delta_acc=0.08,
+                                  score_batches=1, accept_batches=1,
+                                  max_score_candidates=4),
+    )
+    result = CompressionPipeline(runner, cfg).run()
+    assert result.acc_base > 0.4  # learned something
+    assert result.energy_saving > 0.0
+    assert result.accuracy_drop < 0.1
+    summary = result.summary()
+    assert summary["layers"]

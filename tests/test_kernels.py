@@ -1,0 +1,173 @@
+"""Per-kernel allclose tests (interpret=True) sweeping shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qat
+from repro.core.mac_model import DEFAULT_COEFFS, MacEnergyCoeffs
+from repro.core.stats import TILE, tile_transition_stats as stats_oracle
+from repro.kernels.fake_quant.ops import fake_quant_project, ste_fake_quant
+from repro.kernels.fake_quant.ref import fake_quant_ref
+from repro.kernels.lut_matmul.ops import (
+    compress_layer_weights,
+    encode_weights,
+    lut_matmul,
+    pack_indices,
+)
+from repro.kernels.lut_matmul.ref import lut_matmul_ref, unpack_indices
+from repro.kernels.transition_energy.ops import tile_transition_stats
+
+
+# ---------------------------------------------------------------- lut_matmul
+
+
+def _random_lut_case(key, m, k, n, dtype, block_k):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (m, k), jnp.float32).astype(dtype)
+    cb = jnp.sort(jax.random.choice(k2, jnp.arange(-127, 128), (16,),
+                                    replace=False)).astype(jnp.int8)
+    idx = jax.random.randint(k3, (k, n), 0, 16, dtype=jnp.int32)
+    packed = pack_indices(idx, block_k)
+    scale = jax.random.uniform(k4, (n,), jnp.float32, 0.005, 0.02)
+    return x, packed, cb, scale
+
+
+def test_pack_unpack_roundtrip():
+    key = jax.random.PRNGKey(0)
+    idx = jax.random.randint(key, (256, 64), 0, 16, dtype=jnp.int32)
+    for block_k in (64, 128, 256):
+        packed = pack_indices(idx, block_k)
+        assert packed.shape == (128, 64)
+        back = unpack_indices(packed, block_k)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(idx))
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (64, 256, 96),
+                                   (200, 384, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lut_matmul_matches_ref(m, k, n, dtype):
+    key = jax.random.PRNGKey(m * 7 + n)
+    block = dict(block_m=64, block_n=64, block_k=128)
+    x, packed, cb, scale = _random_lut_case(key, m, k, n, dtype, 128)
+    got = lut_matmul(x, packed, cb, scale, interpret=True, **block)
+    want = lut_matmul_ref(x, packed, cb, scale, block_k=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-3)
+
+
+def test_lut_matmul_matches_dense_qat_layer():
+    """End-to-end: a codebook-restricted float layer served via the LUT kernel
+    must match the QAT fake-quant forward."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (128, 64)) * 0.05
+    values = [-96, -64, -32, -16, -8, 0, 8, 16, 32, 64, 96, 127]
+    packed, cb, scale = compress_layer_weights(w, values, block_k=128)
+
+    comp = qat.identity_comp(w.shape)
+    comp["codebook"], comp["codebook_k"] = qat.make_codebook(values)
+    w_fake = qat.fake_quant_weight(w, comp)
+
+    x = jax.random.normal(jax.random.fold_in(key, 1), (32, 128))
+    y_kernel = lut_matmul(x, packed, cb, scale, block_m=64, block_n=64,
+                          block_k=128, interpret=True)
+    y_fake = x @ w_fake
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_fake),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_encode_weights_snaps_to_nearest():
+    cb = jnp.asarray([-50, 0, 50], jnp.int32)
+    cb16 = jnp.pad(cb, (0, 13), constant_values=50)
+    w = jnp.asarray([[-60, -20, 10, 60]], jnp.int32)
+    idx = encode_weights(w, cb16)
+    np.testing.assert_array_equal(np.asarray(cb16[idx]),
+                                  [[-50, 0, 0, 50]])
+
+
+# ---------------------------------------------------------- transition_energy
+
+
+@pytest.mark.parametrize("t_len", [8, 33, 64])
+def test_transition_stats_kernel_matches_oracle(t_len):
+    key = jax.random.PRNGKey(t_len)
+    w = jax.random.randint(key, (TILE, TILE), -128, 128, dtype=jnp.int32)
+    a = jax.random.randint(jax.random.fold_in(key, 1), (TILE, t_len), -128,
+                           128, dtype=jnp.int32)
+    got = tile_transition_stats(w, a, DEFAULT_COEFFS, interpret=True)
+    want = stats_oracle(w, a, DEFAULT_COEFFS)
+    names = ("energy_sum", "count", "group_hist", "act_hist")
+    for g, w_, name in zip(got, want, names):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_),
+                                   rtol=1e-5, atol=1e-3, err_msg=name)
+
+
+def test_transition_stats_kernel_custom_coeffs():
+    coeffs = MacEnergyCoeffs(c_prod=0.5, c_pp=0.3, c_acc=1.2, c_carry=0.1,
+                             c_zero=0.4, c_base=0.0)
+    key = jax.random.PRNGKey(9)
+    w = jax.random.randint(key, (TILE, TILE), -16, 17, dtype=jnp.int32)
+    a = jax.random.randint(jax.random.fold_in(key, 1), (TILE, 16), -16, 17,
+                           dtype=jnp.int32)
+    got = tile_transition_stats(w, a, coeffs, interpret=True)
+    want = stats_oracle(w, a, coeffs)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_transition_stats_kernel_in_pipeline():
+    """collect_layer_stats(use_kernel=True) must agree with the oracle path."""
+    from repro.core.stats import collect_layer_stats
+
+    key = jax.random.PRNGKey(4)
+    w = jax.random.randint(key, (96, 70), -100, 100, dtype=jnp.int32)
+    x = jax.random.randint(jax.random.fold_in(key, 1), (70, 150), -100, 100,
+                           dtype=jnp.int32)
+    s_ref = collect_layer_stats(w, x, max_tiles=4, key=key, use_kernel=False)
+    s_ker = collect_layer_stats(w, x, max_tiles=4, key=key, use_kernel=True)
+    # one-hot-matmul vs segment-sum accumulation order: fp32 noise only
+    np.testing.assert_allclose(np.asarray(s_ker.energy_sum),
+                               np.asarray(s_ref.energy_sum), rtol=1e-3,
+                               atol=1e-2)
+    np.testing.assert_allclose(np.asarray(s_ker.group_hist),
+                               np.asarray(s_ref.group_hist), atol=0.5)
+
+
+# ----------------------------------------------------------------- fake_quant
+
+
+@pytest.mark.parametrize("m,n", [(256, 256), (100, 300), (64, 80)])
+@pytest.mark.parametrize("k_valid", [0, 5, 16])
+def test_fake_quant_kernel_matches_ref(m, n, k_valid):
+    key = jax.random.PRNGKey(m + n + k_valid)
+    w = jax.random.normal(key, (m, n)) * 0.1
+    mask = (jax.random.uniform(jax.random.fold_in(key, 1), (m, n)) > 0.3
+            ).astype(jnp.float32)
+    scale = qat.weight_scale(w)[0]
+    values = sorted(np.random.RandomState(k_valid).choice(
+        np.arange(-127, 128), size=max(k_valid, 1), replace=False).tolist())
+    cb, _ = qat.make_codebook(values)
+    k = jnp.asarray(k_valid, jnp.int32)
+    got = fake_quant_project(w, mask, scale, cb, k, block_m=64, block_n=64,
+                             interpret=True)
+    want = fake_quant_ref(w, mask, scale, cb, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_ste_fake_quant_gradient_is_masked_passthrough():
+    key = jax.random.PRNGKey(7)
+    w = jax.random.normal(key, (64, 64)) * 0.1
+    mask = (jax.random.uniform(jax.random.fold_in(key, 1), (64, 64)) > 0.5
+            ).astype(jnp.float32)
+    scale = qat.weight_scale(w)[0]
+    cb, k = qat.make_codebook([-64, -16, 0, 16, 64])
+
+    def f(w):
+        return jnp.sum(ste_fake_quant(w, mask, scale, cb, k) * 2.0)
+
+    g = jax.grad(f)(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2.0 * mask),
+                               rtol=1e-6)

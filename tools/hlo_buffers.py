@@ -1,0 +1,92 @@
+"""Dump the largest per-device HLO buffers for a dry-run cell (debug tool).
+
+Usage: PYTHONPATH=src python tools/hlo_buffers.py <arch> <shape> [n]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import collections
+import re
+import sys
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch import train as TR  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.lm import build_lm  # noqa: E402
+
+DT = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+      "f32": 4, "s64": 8, "f64": 8, "u64": 8, "s16": 2, "u16": 2}
+
+
+def lower_cell(arch, shape_name, step_cfg=None, rules=None):
+    from repro.distributed.sharding import DEFAULT_RULES
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    model = build_lm(cfg)
+    step_cfg = step_cfg or TR.StepConfig()
+    rules = rules or DEFAULT_RULES
+    if shape.kind == "train":
+        state = TR.abstract_train_state(model)
+        state_sh = TR.train_state_shardings(model, mesh, rules)
+        specs = TR.batch_specs(cfg, shape)
+        specs_sh = TR.batch_shardings(specs, mesh, rules)
+        comp = TR.comp_abstract(model)
+        comp_sh = TR.comp_shardings(model, mesh, rules)
+        step = TR.make_train_step(model, step_cfg, mesh, rules)
+        jitted = jax.jit(step, in_shardings=(state_sh, specs_sh, comp_sh),
+                         out_shardings=(state_sh, None), donate_argnums=(0,))
+        with mesh:
+            return jitted.lower(state, specs, comp)
+    if shape.kind == "prefill":
+        params = TR.abstract_serve_params(model)
+        params_sh = TR.make_param_shardings(model.spec, mesh, rules)
+        specs = TR.batch_specs(cfg, shape)
+        specs_sh = TR.batch_shardings(specs, mesh, rules)
+        step = TR.make_prefill_step(model, step_cfg, mesh, rules)
+        jitted = jax.jit(step, in_shardings=(params_sh, specs_sh))
+        with mesh:
+            return jitted.lower(params, specs)
+    import jax.numpy as jnp
+
+    params = TR.abstract_serve_params(model)
+    params_sh = TR.make_param_shardings(model.spec, mesh, rules)
+    cache = TR.decode_cache_specs(model, shape)
+    cache_sh = TR.cache_shardings(model, shape, mesh, rules)
+    tokens = jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32)
+    tokens_sh = TR.batch_shardings({"tokens": tokens}, mesh, rules)["tokens"]
+    step = TR.make_serve_step(model, step_cfg, mesh, rules)
+    jitted = jax.jit(step, in_shardings=(params_sh, cache_sh, tokens_sh),
+                     out_shardings=(None, cache_sh), donate_argnums=(1,))
+    with mesh:
+        return jitted.lower(params, cache, tokens)
+
+
+def top_buffers(hlo: str, n: int = 15):
+    sizes = collections.Counter()
+    for m in re.finditer(r"= (\w+)\[([\d,]+)\]", hlo):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DT:
+            continue
+        nn = 1
+        for x in dims.split(","):
+            nn *= int(x)
+        key = f"{dt}[{dims}]"
+        sizes[key] = max(sizes[key], nn * DT[dt])
+    return sizes.most_common(n)
+
+
+if __name__ == "__main__":
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    n = int(sys.argv[3]) if len(sys.argv) > 3 else 15
+    lowered = lower_cell(arch, shape_name)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    print(f"temp GB: {mem.temp_size_in_bytes/2**30:.2f}")
+    for shp, b in top_buffers(compiled.as_text(), n):
+        print(f"{b/2**30:8.2f} GiB  {shp}")
