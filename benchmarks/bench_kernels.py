@@ -4,6 +4,12 @@ Wall times on this CPU-only host come from interpret mode and are NOT TPU
 projections; the meaningful derived quantities are correctness vs oracle and
 the compression ratio of the LUT weight format (4x byte reduction vs bf16,
 with a 16-entry codebook + per-channel scales as the only overhead).
+
+The profiling section IS a real wall-clock comparison: the seed's per-tile
+Python dispatch loop vs the batched whole-layer profiler
+(`repro.core.profiler`), both running the same pure-jnp trace math on this
+host. ``profile_speedup_batched_vs_looped`` is the tiles/sec ratio the
+tentpole claims (>= 5x).
 """
 
 from __future__ import annotations
@@ -16,10 +22,23 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.mac_model import DEFAULT_COEFFS
-from repro.core.stats import TILE, tile_transition_stats as stats_oracle
+from repro.core.profiler import (
+    batched_stats_oracle,
+    gather_layer_tiles,
+    sharded_layer_stats,
+)
+from repro.core.stats import (
+    TILE,
+    _tile_transition_stats_jit,
+    pad_to_tiles,
+    tile_transition_stats as stats_oracle,
+)
 from repro.kernels.lut_matmul.ops import compress_layer_weights, lut_matmul
 from repro.kernels.lut_matmul.ref import lut_matmul_ref
-from repro.kernels.transition_energy.ops import tile_transition_stats
+from repro.kernels.transition_energy.ops import (
+    batched_transition_stats,
+    tile_transition_stats,
+)
 
 
 def run():
@@ -68,10 +87,117 @@ def run():
         "transitions_per_call": TILE * TILE * (TILE - 1),
     })
 
+    # --- batched layer profiling: seed per-tile loop vs batched profiler
+    m2, k2, n2 = 256, 192, 512
+    n_tiles = 32
+    wl = jax.random.randint(jax.random.fold_in(key, 3), (m2, k2), -128, 128,
+                            dtype=jnp.int32)
+    xl = jax.random.randint(jax.random.fold_in(key, 4), (k2, n2), -128, 128,
+                            dtype=jnp.int32)
+    w_pad, x_pad = pad_to_tiles(wl, xl)
+    mt = w_pad.shape[0] // TILE
+    kt = w_pad.shape[1] // TILE
+    nt = x_pad.shape[1] // TILE
+    choice = jax.random.choice(key, mt * kt * nt, (n_tiles,), replace=False)
+    choice_host = jax.device_get(choice)
+
+    def looped_seed():
+        """The seed `collect_layer_stats` body: one dispatch per tile."""
+        acc = None
+        for idx in choice_host:
+            idx = int(idx)
+            mi, rest = divmod(idx, kt * nt)
+            ki, ni = divmod(rest, nt)
+            w_t = w_pad[mi * TILE:(mi + 1) * TILE, ki * TILE:(ki + 1) * TILE].T
+            a_b = x_pad[ki * TILE:(ki + 1) * TILE, ni * TILE:(ni + 1) * TILE]
+            o = _tile_transition_stats_jit(w_t, a_b, DEFAULT_COEFFS)
+            acc = o if acc is None else [x + y for x, y in zip(acc, o)]
+        jax.block_until_ready(acc)
+        return acc
+
+    mask = jnp.ones((n_tiles,), jnp.float32)
+
+    def batched():
+        w_tiles, a_blocks = gather_layer_tiles(w_pad, x_pad, choice)
+        o = batched_stats_oracle(w_tiles, a_blocks, mask, DEFAULT_COEFFS)
+        jax.block_until_ready(o)
+        return o
+
+    def sharded():
+        w_tiles, a_blocks = gather_layer_tiles(w_pad, x_pad, choice)
+        o = sharded_layer_stats(w_tiles, a_blocks, DEFAULT_COEFFS)
+        jax.block_until_ready(o)
+        return o
+
+    ref_loop = looped_seed()   # warmup + reference values
+    got_batch = batched()
+    got_shard = sharded()      # warmup (trivial 1-device mesh on this host)
+
+    def rel_err(got):
+        return float(jnp.max(jnp.abs(got[0] - ref_loop[0]))
+                     / jnp.maximum(jnp.max(ref_loop[0]), 1e-9))
+
+    batch_err = rel_err(got_batch)
+    shard_err = rel_err(got_shard)
+
+    def best_of(fn, n=3):
+        """min wall time over n runs — one scheduler hiccup on a loaded
+        host must not fail the >= 5x gate in tools/run_checks.sh."""
+        best = float("inf")
+        for _ in range(n):
+            t = time.time()
+            fn()
+            best = min(best, time.time() - t)
+        return best
+
+    t_loop = best_of(looped_seed, 2)   # slowest variant: 2 repeats suffice
+    t_batch = best_of(batched)
+    t_shard = best_of(sharded)
+
+    for label, secs, err in (("profile_looped_seed", t_loop, 0.0),
+                             ("profile_batched", t_batch, batch_err),
+                             ("profile_sharded", t_shard, shard_err)):
+        rows.append({
+            "kernel": label, "shape": f"{m2}x{k2}x{n2}/{n_tiles}tiles",
+            "wall_s": secs, "tiles_per_s": n_tiles / secs,
+            "rel_err_vs_ref": err,
+            "devices": jax.device_count(),
+        })
+
+    # batched Pallas kernel (interpret): correctness on a small batch only —
+    # interpret-mode wall time is not a speed claim
+    nb, tb = 2, 12
+    w_b = jax.random.randint(jax.random.fold_in(key, 5), (nb, TILE, TILE),
+                             -128, 128, dtype=jnp.int32)
+    a_b = jax.random.randint(jax.random.fold_in(key, 6), (nb, TILE, tb),
+                             -128, 128, dtype=jnp.int32)
+    t = time.time()
+    got_k = batched_transition_stats(w_b, a_b, DEFAULT_COEFFS, interpret=True)
+    jax.block_until_ready(got_k)
+    t_kernel = time.time() - t
+    want_k = [jnp.zeros_like(g) for g in got_k]
+    for i in range(nb):
+        o = stats_oracle(w_b[i], a_b[i], DEFAULT_COEFFS)
+        want_k = [x + y for x, y in zip(want_k, o)]
+    kernel_err = float(jnp.max(jnp.abs(got_k[0] - want_k[0]))
+                       / jnp.maximum(jnp.max(want_k[0]), 1e-9))
+    rows.append({
+        "kernel": "transition_energy_batched", "shape": f"{nb}x64x64x{tb}",
+        "interpret_s": t_kernel, "rel_err_vs_ref": kernel_err,
+        "transitions_per_call": nb * TILE * TILE * (tb - 1),
+    })
+
     derived = {
         "lut_rel_err": rows[0]["rel_err_vs_ref"],
         "lut_weight_compression": rows[0]["weight_compression"],
         "te_rel_err": rows[1]["rel_err_vs_ref"],
+        "profile_tiles_per_s_looped": n_tiles / t_loop,
+        "profile_tiles_per_s_batched": n_tiles / t_batch,
+        "profile_tiles_per_s_sharded": n_tiles / t_shard,
+        "profile_speedup_batched_vs_looped": t_loop / t_batch,
+        "profile_batched_rel_err": batch_err,
+        "profile_sharded_rel_err": shard_err,
+        "te_batched_rel_err": kernel_err,
         "all_within_tolerance": all(r["rel_err_vs_ref"] < 2e-2 for r in rows),
     }
     return emit("bench_kernels", t0, rows, derived)

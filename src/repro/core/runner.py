@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import zlib
 from typing import Dict, Optional
 
 import jax
@@ -45,9 +46,11 @@ class CnnRunner:
     qcfg: QuantConfig = QuantConfig.on()
     seed: int = 0
     use_kernel_stats: bool = False
+    profile_mesh: Optional[object] = None  # 1-D tile mesh (sharding.tile_mesh)
 
     def __post_init__(self):
         self.optimizer = adamw(self.lr)
+        self._stats_cache: Optional[Dict[str, LayerStats]] = None
         model = self.model
         qcfg = self.qcfg
 
@@ -146,24 +149,57 @@ class CnnRunner:
 
     def profile(self, params, state, comp, *, n_batches: int = 1,
                 max_tiles: int = 24) -> Dict[str, LayerStats]:
-        """Per-layer systolic trace statistics from captured activations."""
+        """Per-layer systolic trace statistics from captured activations.
+
+        Each layer's sampled tiles run as ONE batched kernel/oracle
+        invocation (`repro.core.profiler`), sharded over `profile_mesh` when
+        set. The result is cached on the runner so `energy_models` (and the
+        schedule's ΔE refreshes) can reuse it without re-tracing.
+        """
         taps = self.capture_taps(params, state, comp, n_batches)
         out: Dict[str, LayerStats] = {}
         for cl in self.model.comp_layers:
             w_mat, x_col = self.layer_trace_inputs(cl, taps[cl.name])
+            # crc32, not hash(): str hash is salted per interpreter run,
+            # which would resample tiles (and flip schedule decisions) on
+            # every invocation of the same script
             out[cl.name] = collect_layer_stats(
                 w_mat, x_col, max_tiles=max_tiles,
-                key=jax.random.PRNGKey(hash(cl.name) % (2**31)),
+                key=jax.random.PRNGKey(
+                    zlib.crc32(cl.name.encode()) % (2**31)),
                 use_kernel=self.use_kernel_stats,
+                mesh=self.profile_mesh,
             )
+        self._stats_cache = out
         return out
 
-    def energy_models(self, params, comp, stats: Dict[str, LayerStats],
+    def layer_stats(self, params, state, comp,
+                    **profile_kw) -> Dict[str, LayerStats]:
+        """Cached per-layer stats; profiles (batched) on first use.
+
+        Explicit ``profile_kw`` always re-profiles — a warm cache only
+        answers the no-argument form (whatever settings produced it)."""
+        if self._stats_cache is None or profile_kw:
+            self.profile(params, state, comp, **profile_kw)
+        return self._stats_cache
+
+    def energy_models(self, params, comp,
+                      stats: Optional[Dict[str, LayerStats]] = None,
                       batch: int = 1) -> Dict[str, LayerEnergyModel]:
-        """LayerEnergyModel per compressible layer at inference batch size."""
+        """LayerEnergyModel per compressible layer at inference batch size.
+
+        ``stats=None`` falls back to the cache left by the latest `profile`
+        call — trace statistics depend only weakly on fine-tuning, so ΔE
+        refreshes reuse them instead of re-running the trace."""
         from repro.core.energy_lut import blended_lut
         from repro.core.layer_energy import weight_value_counts
 
+        if stats is None:
+            stats = self._stats_cache
+            if stats is None:
+                raise ValueError(
+                    "no LayerStats given and no cached profile: call "
+                    "runner.profile(...) first or pass stats explicitly")
         out = {}
         for cl in self.model.comp_layers:
             dims = cl.matmul_dims(batch)

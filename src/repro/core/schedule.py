@@ -95,10 +95,16 @@ def energy_prioritized_compression(
     verbose: bool = False,
 ) -> Tuple[object, object, object, Dict[str, qat.CompState], ScheduleResult]:
     """Run the full layer-wise schedule. Returns updated (params, state,
-    opt_state, comp, result)."""
+    opt_state, comp, result).
+
+    ``stats=None`` profiles through the runner's batched profiler (cached on
+    the runner); every ΔE refresh below reuses those trace statistics — only
+    the O(256) weight-value histograms are recomputed per trial."""
     sel_cfg = sel_cfg or SelectionConfig(delta_acc=cfg.delta_acc)
 
     acc0 = runner.accuracy(params, state, comp, n_batches=cfg.eval_batches)
+    if stats is None:
+        stats = runner.layer_stats(params, state, comp)
     models = runner.energy_models(params, comp, stats)
     e_total_before = sum(m.energy for m in models.values())
     shares = {n: m.energy / max(e_total_before, 1e-12) for n, m in models.items()}

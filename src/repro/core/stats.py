@@ -155,53 +155,24 @@ def collect_layer_stats(
     key: jax.Array | None = None,
     coeffs: MacEnergyCoeffs = DEFAULT_COEFFS,
     use_kernel: bool = False,
+    mesh=None,
 ) -> LayerStats:
     """Trace a layer's matmul on the 64x64 array and accumulate statistics.
 
     w_mat: (M, K) int8-valued weights (already quantized to ints).
     x_cols: (K, N) int8-valued streamed activations (im2col for convs).
     max_tiles: number of (m, k, n) tiles to sample (paper also samples).
-    use_kernel: route the per-tile trace through the Pallas kernel wrapper.
+    use_kernel: route the batched trace through the Pallas kernel.
+    mesh: optional 1-D profiling mesh to shard the tile batch over devices.
+
+    All sampled tiles are gathered into one stacked batch and traced by a
+    single kernel/oracle invocation (`repro.core.profiler`); the seed's
+    per-tile Python dispatch loop is gone.
     """
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    w_pad, x_pad = pad_to_tiles(jnp.asarray(w_mat, jnp.int32), jnp.asarray(x_cols, jnp.int32))
-    mp, kp = w_pad.shape
-    _, np_ = x_pad.shape
-    mt, kt, nt = mp // TILE, kp // TILE, np_ // TILE
-    total_tiles = mt * kt * nt
+    from repro.core.profiler import profile_layer
 
-    n_sample = min(max_tiles, total_tiles)
-    choice = jax.random.choice(key, total_tiles, (n_sample,), replace=False)
-    choice = jax.device_get(choice)
-
-    if use_kernel:
-        from repro.kernels.transition_energy import ops as te_ops
-
-        tile_fn = lambda w, a: te_ops.tile_transition_stats(w, a, coeffs)  # noqa: E731
-    else:
-        tile_fn = lambda w, a: _tile_transition_stats_jit(w, a, coeffs)  # noqa: E731
-
-    stats = empty_stats()
-    e_sum, cnt, g_hist, a_hist = stats.energy_sum, stats.count, stats.group_hist, stats.act_hist
-    n_trans = 0
-    for idx in choice:
-        idx = int(idx)
-        mi, rest = divmod(idx, kt * nt)
-        ki, ni = divmod(rest, nt)
-        w_tile = w_pad[mi * TILE:(mi + 1) * TILE, ki * TILE:(ki + 1) * TILE].T  # (K_t, M_t)
-        a_block = x_pad[ki * TILE:(ki + 1) * TILE, ni * TILE:(ni + 1) * TILE]  # (K_t, T)
-        es, c, gh, ah = tile_fn(w_tile, a_block)
-        e_sum = e_sum + es
-        cnt = cnt + c
-        g_hist = g_hist + gh
-        a_hist = a_hist + ah
-        n_trans += TILE * TILE * (TILE - 1)
-
-    return LayerStats(
-        act_hist=a_hist, group_hist=g_hist, energy_sum=e_sum, count=cnt,
-        n_transitions=n_trans,
-    )
+    return profile_layer(w_mat, x_cols, max_tiles=max_tiles, key=key,
+                         coeffs=coeffs, use_kernel=use_kernel, mesh=mesh)
 
 
 def im2col(x: jax.Array, kernel_hw: Tuple[int, int], stride: int = 1,

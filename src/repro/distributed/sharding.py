@@ -198,6 +198,28 @@ def batch_sharding(mesh: Mesh, shape: Sequence[int],
     return NamedSharding(mesh, PartitionSpec(*parts))
 
 
+TILE_AXIS = "tiles"
+
+
+def tile_mesh(devices: Optional[Sequence] = None) -> Mesh:
+    """1-D ("tiles",) mesh over the host's devices for batched profiling.
+
+    The profiler stacks every sampled systolic tile of a layer into
+    (n_tiles, 64, 64) / (n_tiles, 64, T) batches; sharding the leading dim
+    over this mesh runs each device's tile slice locally and psum-reduces the
+    four (small, fixed-size) statistics outputs. Built lazily — importing
+    this module never touches jax device state."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    return Mesh(np.asarray(devs), (TILE_AXIS,))
+
+
+def tile_batch_sharding(mesh: Mesh, axis: str = TILE_AXIS) -> NamedSharding:
+    """NamedSharding for a stacked tile batch: leading (tile) dim over
+    ``axis``, tile contents replicated. Callers pad n_tiles to a multiple of
+    the axis size (the profiler masks the padding's contribution)."""
+    return NamedSharding(mesh, PartitionSpec(axis))
+
+
 def logits_constraint(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
     """Callable for (B, S, V) logits: batch over ("pod","data"), vocab over
     "model" — keeps the fp32 logits (the largest train-time tensor) fully

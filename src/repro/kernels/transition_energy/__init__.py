@@ -1,1 +1,4 @@
-from repro.kernels.transition_energy.ops import tile_transition_stats  # noqa: F401
+from repro.kernels.transition_energy.ops import (  # noqa: F401
+    batched_transition_stats,
+    tile_transition_stats,
+)

@@ -8,6 +8,7 @@ import jax
 
 from repro.core.mac_model import DEFAULT_COEFFS, MacEnergyCoeffs
 from repro.kernels.transition_energy.transition_energy import (
+    transition_stats_batched_pallas,
     transition_stats_pallas,
 )
 
@@ -24,3 +25,20 @@ def tile_transition_stats(
     act_hist[256,256]) — drop-in for the pure-jnp oracle."""
     return transition_stats_pallas(w_tile, a_block, coeffs,
                                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("coeffs", "interpret"))
+def batched_transition_stats(
+    w_tiles: jax.Array,
+    a_blocks: jax.Array,
+    coeffs: MacEnergyCoeffs = DEFAULT_COEFFS,
+    *,
+    mask: jax.Array | None = None,
+    interpret: bool = True,
+):
+    """Whole-tile-batch stats in ONE `pallas_call` (grid (n_tiles, T-1)).
+
+    Same four outputs as `tile_transition_stats`, already summed over the
+    batch. `mask` (n_tiles,) zeroes the contribution of padding tiles."""
+    return transition_stats_batched_pallas(w_tiles, a_blocks, coeffs,
+                                           mask=mask, interpret=interpret)

@@ -78,6 +78,40 @@ def _onehot_f32(idx, n):
             ).astype(jnp.float32)
 
 
+def _accumulate(w, a_prev, a_cur, scale, esum_ref, cnt_ref, ghist_ref,
+                ahist_ref, coeffs: MacEnergyCoeffs):
+    """Accumulate one streaming transition of one tile into the output refs.
+
+    w: (K, M) int32 stationary weights; a_prev/a_cur: (K,) int32 activation
+    columns; scale: f32 weighting (1 for real tiles, 0 for batch padding).
+    """
+    # systolic column prefix sums at t and t+1
+    p_prev = jnp.cumsum(w * a_prev[:, None], axis=0)     # (K, M)
+    p_cur = jnp.cumsum(w * a_cur[:, None], axis=0)
+
+    e = _energy(w, a_prev[:, None], a_cur[:, None], p_prev, p_cur, coeffs)
+
+    n = TILE * TILE
+    w_bins = (w + 128).reshape(n)
+    onehot_w = _onehot_f32(w_bins, N_WVALS)              # (4096, 256)
+    e_flat = e.reshape(n, 1)
+    esum_ref[...] += scale * jnp.dot(onehot_w.T, e_flat,
+                                     preferred_element_type=jnp.float32)[:, 0]
+    cnt_ref[...] += scale * jnp.sum(onehot_w, axis=0)
+
+    g_prev = _group_id(p_prev).reshape(n)
+    g_cur = _group_id(p_cur).reshape(n)
+    oh_gp = _onehot_f32(g_prev, N_GROUPS)
+    oh_gc = _onehot_f32(g_cur, N_GROUPS)
+    ghist_ref[...] += scale * jnp.dot(oh_gp.T, oh_gc,
+                                      preferred_element_type=jnp.float32)
+
+    oh_ap = _onehot_f32(a_prev + 128, N_WVALS)           # (64, 256)
+    oh_ac = _onehot_f32(a_cur + 128, N_WVALS)
+    ahist_ref[...] += scale * jnp.dot(oh_ap.T, oh_ac,
+                                      preferred_element_type=jnp.float32)
+
+
 def _kernel(w_ref, a_prev_ref, a_cur_ref, esum_ref, cnt_ref, ghist_ref,
             ahist_ref, *, coeffs: MacEnergyCoeffs):
     t = pl.program_id(0)
@@ -92,32 +126,8 @@ def _kernel(w_ref, a_prev_ref, a_cur_ref, esum_ref, cnt_ref, ghist_ref,
     w = w_ref[...].astype(jnp.int32)                     # (K, M)
     a_prev = a_prev_ref[...].astype(jnp.int32)[:, 0]     # column t
     a_cur = a_cur_ref[...].astype(jnp.int32)[:, 0]       # column t + 1
-
-    # systolic column prefix sums at t and t+1
-    p_prev = jnp.cumsum(w * a_prev[:, None], axis=0)     # (K, M)
-    p_cur = jnp.cumsum(w * a_cur[:, None], axis=0)
-
-    e = _energy(w, a_prev[:, None], a_cur[:, None], p_prev, p_cur, coeffs)
-
-    n = TILE * TILE
-    w_bins = (w + 128).reshape(n)
-    onehot_w = _onehot_f32(w_bins, N_WVALS)              # (4096, 256)
-    e_flat = e.reshape(n, 1)
-    esum_ref[...] += jnp.dot(onehot_w.T, e_flat,
-                             preferred_element_type=jnp.float32)[:, 0]
-    cnt_ref[...] += jnp.sum(onehot_w, axis=0)
-
-    g_prev = _group_id(p_prev).reshape(n)
-    g_cur = _group_id(p_cur).reshape(n)
-    oh_gp = _onehot_f32(g_prev, N_GROUPS)
-    oh_gc = _onehot_f32(g_cur, N_GROUPS)
-    ghist_ref[...] += jnp.dot(oh_gp.T, oh_gc,
-                              preferred_element_type=jnp.float32)
-
-    oh_ap = _onehot_f32(a_prev + 128, N_WVALS)           # (64, 256)
-    oh_ac = _onehot_f32(a_cur + 128, N_WVALS)
-    ahist_ref[...] += jnp.dot(oh_ap.T, oh_ac,
-                              preferred_element_type=jnp.float32)
+    _accumulate(w, a_prev, a_cur, jnp.float32(1.0), esum_ref, cnt_ref,
+                ghist_ref, ahist_ref, coeffs)
 
 
 def transition_stats_pallas(
@@ -157,3 +167,78 @@ def transition_stats_pallas(
         interpret=interpret,
     )(w_tile.astype(jnp.int32), a_block.astype(jnp.int32),
       a_block.astype(jnp.int32))
+
+
+def _batched_kernel(mask_ref, w_ref, a_prev_ref, a_cur_ref, esum_ref, cnt_ref,
+                    ghist_ref, ahist_ref, *, coeffs: MacEnergyCoeffs):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when((b == 0) & (t == 0))
+    def _init():
+        esum_ref[...] = jnp.zeros_like(esum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        ghist_ref[...] = jnp.zeros_like(ghist_ref)
+        ahist_ref[...] = jnp.zeros_like(ahist_ref)
+
+    w = w_ref[0].astype(jnp.int32)                       # (K, M) of tile b
+    a_prev = a_prev_ref[0].astype(jnp.int32)[:, 0]       # column t of tile b
+    a_cur = a_cur_ref[0].astype(jnp.int32)[:, 0]         # column t + 1
+    scale = mask_ref[0, 0]                               # 0 for pad tiles
+    _accumulate(w, a_prev, a_cur, scale, esum_ref, cnt_ref, ghist_ref,
+                ahist_ref, coeffs)
+
+
+def transition_stats_batched_pallas(
+    w_tiles: jax.Array,      # (n_tiles, 64, 64) int32 stationary tiles (K x M)
+    a_blocks: jax.Array,     # (n_tiles, 64, T) int32 streamed activations
+    coeffs: MacEnergyCoeffs,
+    *,
+    mask: jax.Array | None = None,   # (n_tiles,) f32; 0 disables a pad tile
+    interpret: bool = False,
+):
+    """One fused device program over a whole stacked tile batch.
+
+    Grid is (n_tiles, T-1): the tile index is the leading block dimension, so
+    every sampled tile of a layer streams through one `pallas_call` instead of
+    one kernel dispatch per tile. All four outputs live in the same VMEM
+    blocks across the entire grid (accumulation pattern, initialised at
+    (b, t) == (0, 0)); `mask` lets callers pad `n_tiles` up to a convenient
+    multiple (e.g. the device count) with zero-weight tiles that contribute
+    nothing.
+    """
+    n_tiles, k, m = w_tiles.shape
+    assert (k, m) == (TILE, TILE), (k, m)
+    assert a_blocks.shape[:2] == (n_tiles, TILE), a_blocks.shape
+    t_len = a_blocks.shape[2]
+    assert t_len >= 2
+    if mask is None:
+        mask = jnp.ones((n_tiles,), jnp.float32)
+    mask2d = jnp.asarray(mask, jnp.float32).reshape(n_tiles, 1)
+
+    kernel = functools.partial(_batched_kernel, coeffs=coeffs)
+    out_shapes = (
+        jax.ShapeDtypeStruct((N_WVALS,), jnp.float32),
+        jax.ShapeDtypeStruct((N_WVALS,), jnp.float32),
+        jax.ShapeDtypeStruct((N_GROUPS, N_GROUPS), jnp.float32),
+        jax.ShapeDtypeStruct((N_WVALS, N_WVALS), jnp.float32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles, t_len - 1),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, TILE, TILE), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((1, TILE, 1), lambda b, t: (b, 0, t)),
+            pl.BlockSpec((1, TILE, 1), lambda b, t: (b, 0, t + 1)),
+        ],
+        out_specs=(
+            pl.BlockSpec((N_WVALS,), lambda b, t: (0,)),
+            pl.BlockSpec((N_WVALS,), lambda b, t: (0,)),
+            pl.BlockSpec((N_GROUPS, N_GROUPS), lambda b, t: (0, 0)),
+            pl.BlockSpec((N_WVALS, N_WVALS), lambda b, t: (0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(mask2d, w_tiles.astype(jnp.int32), a_blocks.astype(jnp.int32),
+      a_blocks.astype(jnp.int32))

@@ -36,6 +36,29 @@ from repro.nn.transformer import (
 NEG_INF = -1e30
 
 
+@jax.custom_vjp
+def _carry_barrier(h):
+    """`optimization_barrier` with a differentiation rule.
+
+    `jax.lax.optimization_barrier` has no VJP, so placing it on the scan
+    carry broke every grad step. The barrier semantics (don't let XLA hoist
+    dtype converts of the remat-saved carry stack out of the backward loop)
+    matter in both directions, so forward and cotangent each get their own
+    barrier while the math stays identity."""
+    return jax.lax.optimization_barrier(h)
+
+
+def _carry_barrier_fwd(h):
+    return jax.lax.optimization_barrier(h), None
+
+
+def _carry_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_carry_barrier.defvjp(_carry_barrier_fwd, _carry_barrier_bwd)
+
+
 def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
     """(B, S) int positions -> (B, S, d) sinusoidal embeddings (whisper)."""
     half = d // 2
@@ -146,7 +169,7 @@ class LMModel:
             # Barrier: stops XLA from hoisting the bf16->f32 convert of the
             # rematerialization-saved carry *stack* out of the backward loop
             # (which would materialize an O(L*B*S*D) f32 buffer).
-            h = jax.lax.optimization_barrier(h)
+            h = _carry_barrier(h)
             aux_new = dict(aux_c)
             for i, bt in enumerate(cfg.pattern):
                 ci = None if layer_comp is None else layer_comp.get(f"g{i}")

@@ -147,7 +147,9 @@ def test_mini_dryrun_8_devices():
                          out_shardings=(state_sh, None), donate_argnums=(0,))
         with mesh:
             compiled = jitted.lower(state, specs, comp).compile()
-        assert compiled.cost_analysis()["flops"] > 0
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca  # jax<0.5 wraps
+        assert ca["flops"] > 0
         # and actually RUN one sharded step with concrete data
         cstate = TR.init_train_state(model, step_cfg)
         from repro.core.lm_compress import init_lm_comp

@@ -94,8 +94,9 @@ def test_resilient_loop_recovers_from_faults(tmp_path):
     assert report.failures == 3
     assert report.restores == 3
     assert report.final_step == 40
-    # loss must still have improved despite replays
-    assert report.losses[-1] < report.losses[0]
+    # loss must still have improved despite replays; each step draws a fresh
+    # random batch so single-step losses are noisy — compare windowed means
+    assert np.mean(report.losses[-10:]) < np.mean(report.losses[:10])
 
 
 def test_resilient_loop_deterministic_replay(tmp_path):

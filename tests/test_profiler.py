@@ -1,0 +1,235 @@
+"""Batched whole-layer profiler vs the per-tile pure-jnp oracle.
+
+The contract under test: for a multi-tile layer (including partial tiles that
+`pad_to_tiles` zero-pads), ONE batched invocation — Pallas kernel in
+interpret mode, vectorized oracle, or the sharded path — reproduces the sum
+of per-tile `tile_transition_stats` calls bin-for-bin on all four outputs
+(energy_sum, count, group_hist, act_hist)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mac_model import DEFAULT_COEFFS
+from repro.core.profiler import (
+    batched_layer_stats,
+    batched_stats_oracle,
+    gather_layer_tiles,
+    profile_layer,
+    sharded_layer_stats,
+)
+from repro.core.stats import (
+    TILE,
+    collect_layer_stats,
+    pad_to_tiles,
+    tile_transition_stats,
+)
+
+NAMES = ("energy_sum", "count", "group_hist", "act_hist")
+
+
+def _layer_case(key, m=96, k=70, n=150, max_tiles=4):
+    """Partial-tile layer (96x70 @ 70x150 -> 2x2x3 padded tiles) + sampled
+    batch, alongside the per-tile oracle reference sums."""
+    w = jax.random.randint(key, (m, k), -100, 100, dtype=jnp.int32)
+    x = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -100, 100,
+                           dtype=jnp.int32)
+    w_pad, x_pad = pad_to_tiles(w, x)
+    mt, kt = w_pad.shape[0] // TILE, w_pad.shape[1] // TILE
+    nt = x_pad.shape[1] // TILE
+    total = mt * kt * nt
+    n_s = min(max_tiles, total)
+    choice = jax.random.choice(key, total, (n_s,), replace=False)
+    w_tiles, a_blocks = gather_layer_tiles(w_pad, x_pad, choice)
+
+    ref = None
+    for i in range(n_s):
+        o = tile_transition_stats(w_tiles[i], a_blocks[i], DEFAULT_COEFFS)
+        ref = o if ref is None else [a + b for a, b in zip(ref, o)]
+    return w, x, w_tiles, a_blocks, choice, ref
+
+
+def _assert_stats_match(got, ref, context, atol=0.5):
+    for g, r, name in zip(got, ref, NAMES):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=1e-3,
+                                   atol=atol, err_msg=f"{context}:{name}")
+
+
+def test_gather_matches_manual_slicing():
+    key = jax.random.PRNGKey(11)
+    w, x, w_tiles, a_blocks, choice, _ = _layer_case(key, max_tiles=6)
+    w_pad, x_pad = pad_to_tiles(w, x)
+    kt = w_pad.shape[1] // TILE
+    nt = x_pad.shape[1] // TILE
+    for b, idx in enumerate(jax.device_get(choice)):
+        idx = int(idx)
+        mi, rest = divmod(idx, kt * nt)
+        ki, ni = divmod(rest, nt)
+        want_w = w_pad[mi * TILE:(mi + 1) * TILE, ki * TILE:(ki + 1) * TILE].T
+        want_a = x_pad[ki * TILE:(ki + 1) * TILE, ni * TILE:(ni + 1) * TILE]
+        np.testing.assert_array_equal(np.asarray(w_tiles[b]),
+                                      np.asarray(want_w))
+        np.testing.assert_array_equal(np.asarray(a_blocks[b]),
+                                      np.asarray(want_a))
+
+
+def test_batched_oracle_matches_per_tile_oracle():
+    key = jax.random.PRNGKey(0)
+    _, _, w_tiles, a_blocks, _, ref = _layer_case(key, max_tiles=6)
+    mask = jnp.ones((w_tiles.shape[0],), jnp.float32)
+    got = batched_stats_oracle(w_tiles, a_blocks, mask, DEFAULT_COEFFS)
+    _assert_stats_match(got, ref, "batched_oracle")
+
+
+def test_batched_kernel_interpret_matches_oracle():
+    """Batched Pallas kernel (interpret) bin-for-bin vs the oracle, on a
+    multi-tile batch with a short streaming axis (interpret-mode cost)."""
+    key = jax.random.PRNGKey(2)
+    _, _, w_tiles, a_blocks, _, _ = _layer_case(key, max_tiles=3)
+    a_short = a_blocks[:, :, :12]
+    ref = None
+    for i in range(w_tiles.shape[0]):
+        o = tile_transition_stats(w_tiles[i], a_short[i], DEFAULT_COEFFS)
+        ref = o if ref is None else [a + b for a, b in zip(ref, o)]
+    got = batched_layer_stats(w_tiles, a_short, DEFAULT_COEFFS,
+                              use_kernel=True, interpret=True)
+    _assert_stats_match(got, ref, "batched_kernel")
+
+
+def test_zero_padding_tiles_contribute_nothing():
+    """Batch padding (all-zero tiles, mask 0) must not change any bin —
+    oracle and kernel paths."""
+    key = jax.random.PRNGKey(3)
+    _, _, w_tiles, a_blocks, _, _ = _layer_case(key, max_tiles=3)
+    a_short = a_blocks[:, :, :12]
+    n = w_tiles.shape[0]
+    mask = jnp.ones((n,), jnp.float32)
+    w_padded = jnp.pad(w_tiles, ((0, 2), (0, 0), (0, 0)))
+    a_padded = jnp.pad(a_short, ((0, 2), (0, 0), (0, 0)))
+    mask_padded = jnp.pad(mask, (0, 2))
+
+    ref = batched_stats_oracle(w_tiles, a_short, mask, DEFAULT_COEFFS)
+    got = batched_stats_oracle(w_padded, a_padded, mask_padded,
+                               DEFAULT_COEFFS)
+    _assert_stats_match(got, ref, "oracle_pad", atol=1e-2)
+
+    got_k = batched_layer_stats(w_padded, a_padded, DEFAULT_COEFFS,
+                                mask=mask_padded, use_kernel=True,
+                                interpret=True)
+    _assert_stats_match(got_k, ref, "kernel_pad", atol=1e-2)
+
+
+def test_sharded_path_matches_unsharded():
+    key = jax.random.PRNGKey(5)
+    _, _, w_tiles, a_blocks, _, ref = _layer_case(key, max_tiles=5)
+    got = sharded_layer_stats(w_tiles, a_blocks, DEFAULT_COEFFS)
+    _assert_stats_match(got, ref, "sharded")
+
+
+def test_profile_layer_equals_seed_loop_semantics():
+    """`collect_layer_stats` (now batched) must reproduce the seed's looped
+    accumulation: same sampling key -> same tiles -> same statistics."""
+    key = jax.random.PRNGKey(4)
+    w = jax.random.randint(key, (96, 70), -100, 100, dtype=jnp.int32)
+    x = jax.random.randint(jax.random.fold_in(key, 1), (70, 150), -100, 100,
+                           dtype=jnp.int32)
+    w_pad, x_pad = pad_to_tiles(w, x)
+    kt = w_pad.shape[1] // TILE
+    nt = x_pad.shape[1] // TILE
+    mt = w_pad.shape[0] // TILE
+    total = mt * kt * nt
+    n_s = 4
+    choice = jax.device_get(
+        jax.random.choice(key, total, (n_s,), replace=False))
+    ref = None
+    for idx in choice:
+        idx = int(idx)
+        mi, rest = divmod(idx, kt * nt)
+        ki, ni = divmod(rest, nt)
+        w_t = w_pad[mi * TILE:(mi + 1) * TILE, ki * TILE:(ki + 1) * TILE].T
+        a_b = x_pad[ki * TILE:(ki + 1) * TILE, ni * TILE:(ni + 1) * TILE]
+        o = tile_transition_stats(w_t, a_b, DEFAULT_COEFFS)
+        ref = o if ref is None else [a + b for a, b in zip(ref, o)]
+
+    s = collect_layer_stats(w, x, max_tiles=n_s, key=key)
+    _assert_stats_match(
+        (s.energy_sum, s.count, s.group_hist, s.act_hist), ref,
+        "collect_layer_stats")
+    assert s.n_transitions == n_s * TILE * TILE * (TILE - 1)
+
+
+def test_profile_layer_samples_all_tiles_when_few():
+    key = jax.random.PRNGKey(7)
+    w = jax.random.randint(key, (64, 64), -50, 50, dtype=jnp.int32)
+    x = jax.random.randint(jax.random.fold_in(key, 1), (64, 64), -50, 50,
+                           dtype=jnp.int32)
+    s = profile_layer(w, x, max_tiles=100, key=key)
+    # 1 tile total, 64*64 MACs x 63 transitions each
+    assert s.n_transitions == TILE * TILE * (TILE - 1)
+    assert float(jnp.sum(s.count)) == s.n_transitions
+
+
+def test_runner_caches_stats_for_energy_models():
+    from repro.core.runner import CnnRunner
+    from repro.data.synthetic import SyntheticImages
+    from repro.nn import cnn
+
+    runner = CnnRunner(cnn.lenet5(10), SyntheticImages(num_classes=10, seed=3),
+                       batch_size=16)
+    params, state, _, comp = runner.init()
+    with pytest.raises(ValueError):
+        runner.energy_models(params, comp)  # no profile yet, no stats given
+    stats = runner.profile(params, state, comp, max_tiles=2)
+    models = runner.energy_models(params, comp)  # cached stats
+    assert set(models) == set(stats)
+    models2 = runner.energy_models(params, comp, stats)
+    for name in models:
+        assert models[name].energy == models2[name].energy
+
+
+def test_multi_device_sharded_profiling_subprocess():
+    """Force 4 host devices in a subprocess and check the sharded profiler
+    (auto-selected by `profile_layer`) matches the single-device result."""
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        assert jax.device_count() == 4, jax.device_count()
+        from repro.core.profiler import batched_stats_oracle, \\
+            gather_layer_tiles, profile_layer
+        from repro.core.mac_model import DEFAULT_COEFFS
+        from repro.core.stats import TILE, pad_to_tiles
+        key = jax.random.PRNGKey(4)
+        w = jax.random.randint(key, (96, 70), -100, 100, dtype=jnp.int32)
+        x = jax.random.randint(jax.random.fold_in(key, 1), (70, 150), -100,
+                               100, dtype=jnp.int32)
+        s = profile_layer(w, x, max_tiles=6, key=key)  # auto-sharded, 6->8 pad
+        w_pad, x_pad = pad_to_tiles(w, x)
+        total = (w_pad.shape[0] // TILE) * (w_pad.shape[1] // TILE) * \\
+            (x_pad.shape[1] // TILE)
+        ch = jax.random.choice(key, total, (6,), replace=False)
+        wt, ab = gather_layer_tiles(w_pad, x_pad, ch)
+        ref = batched_stats_oracle(wt, ab, jnp.ones((6,), jnp.float32),
+                                   DEFAULT_COEFFS)
+        np.testing.assert_allclose(np.asarray(s.energy_sum),
+                                   np.asarray(ref[0]), rtol=1e-3, atol=1e-2)
+        np.testing.assert_allclose(np.asarray(s.group_hist),
+                                   np.asarray(ref[2]), atol=0.5)
+        np.testing.assert_allclose(np.asarray(s.act_hist),
+                                   np.asarray(ref[3]), atol=0.5)
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# One-stop contributor check: tier-1 test suite + profiler smoke benchmark.
+#
+#   tools/run_checks.sh            # full tier-1 pytest + profiling smoke
+#   tools/run_checks.sh --fast     # skip the slowest test files
+#
+# The tier-1 command mirrors ROADMAP.md; the smoke benchmark asserts the
+# batched profiler still beats the per-tile loop by >= 5x tiles/sec and
+# stays bin-for-bin consistent with the oracle.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+case "${1:-}" in
+  --fast)
+    echo "== tier-1 tests (fast subset) =="
+    python -m pytest -x -q tests/test_kernels.py tests/test_core_energy.py \
+      tests/test_profiler.py
+    ;;
+  "")
+    echo "== tier-1 tests =="
+    python -m pytest -x -q
+    ;;
+  *)
+    echo "usage: tools/run_checks.sh [--fast]" >&2
+    exit 2
+    ;;
+esac
+
+echo "== profiler smoke benchmark =="
+python - <<'PY'
+import json
+from benchmarks import bench_kernels
+
+bench_kernels.run()
+out = json.loads(open("benchmarks/out/bench_kernels.json").read())
+d = out["derived"]
+speed = d["profile_speedup_batched_vs_looped"]
+assert d["all_within_tolerance"], d
+assert speed >= 5.0, f"batched profiler speedup regressed: {speed:.1f}x < 5x"
+print(f"profiler speedup {speed:.1f}x (>= 5x), parity within tolerance")
+PY
+
+echo "All checks passed."
