@@ -10,6 +10,12 @@ Python dispatch loop vs the batched whole-layer profiler
 (`repro.core.profiler`), both running the same pure-jnp trace math on this
 host. ``profile_speedup_batched_vs_looped`` is the tiles/sec ratio the
 tentpole claims (>= 5x).
+
+The compressed-serving section (``serve_*`` derived keys) compares the
+exported 4-bit LUT forward (`repro.core.export.serve_dense`, CPU jnp
+dispatch) against the dense fake-quant matmul it replaces: parity, weight
+compression vs bf16, and the dispatch-throughput ratio gated in
+tools/run_checks.sh.
 """
 
 from __future__ import annotations
@@ -21,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core import qat
+from repro.core.export import export_layer, serve_dense
 from repro.core.mac_model import DEFAULT_COEFFS
 from repro.core.profiler import (
     batched_stats_oracle,
@@ -187,6 +195,46 @@ def run():
         "transitions_per_call": nb * TILE * TILE * (tb - 1),
     })
 
+    # --- compressed-vs-dense forward throughput (serve path)
+    # Wall clock on this host compares the jnp serve oracle (the CPU dispatch
+    # of the backend-aware serve path) against the dense fake-quant matmul it
+    # replaces; on TPU the same serve_dense call runs the compiled Pallas
+    # kernel. Correctness is the primary gate; the throughput ratio is a
+    # regression canary for the serve dispatch overhead (unpack + LUT gather
+    # in pure jnp), not a TPU speed projection.
+    ms, ks, ns = 512, 1024, 512
+    ws = jax.random.normal(jax.random.fold_in(key, 7), (ks, ns)) * 0.04
+    comp_s = qat.identity_comp(ws.shape)
+    comp_s["codebook"], comp_s["codebook_k"] = qat.make_codebook(values)
+    art = export_layer(ws, comp_s, kind="dense")
+    xs = jax.random.normal(jax.random.fold_in(key, 8), (ms, ks))
+    w_fake = qat.fake_quant_weight(ws, comp_s)
+
+    dense_fwd = jax.jit(lambda a, wq: a @ wq)
+    serve_fwd = jax.jit(lambda a: serve_dense(a, art, use_ref=True))
+    y_dense = dense_fwd(xs, w_fake).block_until_ready()   # warmup + reference
+    y_serve = serve_fwd(xs).block_until_ready()
+    serve_err = float(jnp.linalg.norm(y_serve - y_dense)
+                      / jnp.linalg.norm(y_dense))
+
+    def best_of_fwd(fn, *a, n=5):
+        best = float("inf")
+        for _ in range(n):
+            t = time.time()
+            jax.block_until_ready(fn(*a))
+            best = min(best, time.time() - t)
+        return best
+
+    t_dense = best_of_fwd(dense_fwd, xs, w_fake)
+    t_serve = best_of_fwd(serve_fwd, xs)
+    for label, secs in (("serve_forward_dense_fakequant", t_dense),
+                        ("serve_forward_compressed_lut", t_serve)):
+        rows.append({
+            "kernel": label, "shape": f"{ms}x{ks}x{ns}",
+            "wall_s": secs, "rows_per_s": ms / secs,
+            "rel_err_vs_ref": serve_err if label.endswith("lut") else 0.0,
+        })
+
     derived = {
         "lut_rel_err": rows[0]["rel_err_vs_ref"],
         "lut_weight_compression": rows[0]["weight_compression"],
@@ -198,6 +246,12 @@ def run():
         "profile_batched_rel_err": batch_err,
         "profile_sharded_rel_err": shard_err,
         "te_batched_rel_err": kernel_err,
+        "serve_forward_rel_err": serve_err,
+        "serve_rows_per_s_dense": ms / t_dense,
+        "serve_rows_per_s_compressed": ms / t_serve,
+        "serve_vs_dense_throughput": t_dense / t_serve,
+        "serve_weight_compression_vs_bf16": (art.dense_bytes_int8 * 2
+                                             / art.weight_bytes),
         "all_within_tolerance": all(r["rel_err_vs_ref"] < 2e-2 for r in rows),
     }
     return emit("bench_kernels", t0, rows, derived)

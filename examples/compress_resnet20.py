@@ -2,81 +2,103 @@
 
 The full Section 5 protocol — QAT base training, per-layer systolic-trace
 profiling, energy-prioritized layer-wise compression (pruning x weight-set
-selection under the global accuracy constraint), final fine-tune — followed
-by serving one compressed layer through the 4-bit LUT Pallas kernel and
-checking it agrees with the QAT forward.
+selection under the global accuracy constraint), final fine-tune — then the
+deployment step: export every restricted layer to packed 4-bit serving
+artifacts (`repro.core.export`) and run the *whole model* through the LUT
+GEMM serve path, checking logits and accuracy against the QAT fake-quant
+forward. Schedule -> export -> compressed inference, one invocation.
 
     PYTHONPATH=src python examples/compress_resnet20.py [--steps N]
+    PYTHONPATH=src python examples/compress_resnet20.py --reduced  # CPU smoke
 """
 
 import argparse
 import json
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import qat
 from repro.core.compression import CompressionPipeline, PipelineConfig
+from repro.core.export import export_model, export_summary
 from repro.core.runner import CnnRunner
 from repro.core.schedule import ScheduleConfig
-from repro.core.stats import conv_weight_matrix
 from repro.core.weight_selection import SelectionConfig
 from repro.data.synthetic import SyntheticImages
-from repro.kernels.lut_matmul.ops import compress_layer_weights, lut_matmul
 from repro.nn import cnn
+from repro.nn.layers import QuantConfig
+
+
+def serve_accuracy(runner, params, state, comp, arts, *, n_batches=3,
+                   use_ref_kernel=False):
+    """Val accuracy with every exported layer on the 4-bit LUT path."""
+    qserve = QuantConfig.serve(use_ref_kernel=use_ref_kernel)
+    correct = 0
+    for i in range(n_batches):
+        x, y = runner.dataset.batch(i, runner.batch_size, "val")
+        logits, _, _ = runner.model.apply(params, state, x, train=False,
+                                          qcfg=qserve, comp=comp, serve=arts)
+        correct += int(jnp.sum((jnp.argmax(logits, -1) == y)))
+    return correct / (n_batches * runner.batch_size)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized run: resnet8 + a 2-layer schedule budget")
+    ap.add_argument("--use-ref-kernel", action="store_true",
+                    help="serve through the jnp oracle instead of the "
+                         "(interpreted on CPU) Pallas kernel")
     args = ap.parse_args()
 
-    runner = CnnRunner(cnn.resnet20(), SyntheticImages(seed=7), batch_size=64,
-                       lr=2e-3)
+    model = cnn.resnet8() if args.reduced else cnn.resnet20()
+    runner = CnnRunner(model, SyntheticImages(seed=7), batch_size=64, lr=2e-3)
     cfg = PipelineConfig(
         qat_steps=args.steps,
         profile_batches=1,
-        profile_max_tiles=8,
+        profile_max_tiles=4 if args.reduced else 8,
         final_finetune_steps=max(args.steps // 6, 20),
-        eval_batches=3,
+        eval_batches=2 if args.reduced else 3,
         schedule=ScheduleConfig(prune_ratios=(0.7, 0.5), k_targets=(16,),
                                 delta_acc=0.05, finetune_steps=20,
                                 trial_finetune_steps=12, eval_batches=2,
-                                max_layers=4),
+                                max_layers=2 if args.reduced else 4),
         selection=SelectionConfig(k_init=24, k_target=16, delta_acc=0.05,
                                   score_batches=1, accept_batches=2,
-                                  max_score_candidates=6),
+                                  max_score_candidates=4 if args.reduced
+                                  else 6),
     )
     pipe = CompressionPipeline(runner, cfg)
     result = pipe.run(verbose=True)
     print(json.dumps(result.summary(), indent=2))
 
-    # ---- serve one compressed layer through the Pallas LUT kernel
-    accepted = [d for d in result.schedule.decisions if d.accepted]
-    if accepted:
-        layer = accepted[0].layer
-        comp = pipe.comp[layer]
-        w = runner.model.get_weight(pipe.params, layer)
-        cl = runner.model.comp_layer(layer)
-        w_mat = conv_weight_matrix(w * comp["mask"]) if cl.kind == "conv" \
-            else (w * comp["mask"])
-        w_mat = w_mat.T if cl.kind == "conv" else w_mat  # (K, N)
-        k_dim = w_mat.shape[0]
-        pad_k = (-k_dim) % 128
-        w_mat = jnp.pad(w_mat, ((0, pad_k), (0, 0)))
-        cb_vals = [int(v) for v in np.asarray(
-            comp["codebook"][: int(comp["codebook_k"])])]
-        packed, cb, scale = compress_layer_weights(w_mat, cb_vals, block_k=128)
-        x = jax.random.normal(jax.random.PRNGKey(0), (32, w_mat.shape[0]))
-        y_kernel = lut_matmul(x, packed, cb, scale, interpret=True)
-        w_fake = qat.fake_quant_weight(w_mat, {
-            "mask": jnp.ones_like(w_mat), "codebook": comp["codebook"],
-            "codebook_k": comp["codebook_k"]})
-        rel = float(jnp.linalg.norm(y_kernel - x @ w_fake)
-                    / jnp.linalg.norm(x @ w_fake))
-        print(f"\nLUT-kernel serve check on layer '{layer}': rel_err={rel:.2e}"
-              f" (codebook {len(cb_vals)} values, 4-bit weights)")
+    # ---- export: comp tree -> packed 4-bit serving artifacts
+    arts = export_model(runner.model, pipe.params, pipe.comp)
+    summary = export_summary(arts)
+    print(f"\nexported {summary['layers']} compressed layers: "
+          f"{summary['weight_bytes_packed']} bytes packed "
+          f"({summary['compression_vs_int8']:.2f}x vs dense int8)")
+    if not arts:
+        print("no layer accepted a <=16-value restriction; nothing to serve")
+        return
+
+    # ---- compressed inference: full model through the LUT GEMM serve path
+    x, _ = runner.dataset.batch(0, runner.batch_size, "val")
+    l_fake, _, _ = runner.model.apply(
+        pipe.params, pipe.state, x, train=False, qcfg=QuantConfig.on(),
+        comp=pipe.comp)
+    l_serve, _, _ = runner.model.apply(
+        pipe.params, pipe.state, x, train=False,
+        qcfg=QuantConfig.serve(use_ref_kernel=args.use_ref_kernel),
+        comp=pipe.comp, serve=arts)
+    rel = float(jnp.linalg.norm(l_serve - l_fake)
+                / jnp.maximum(jnp.linalg.norm(l_fake), 1e-9))
+    acc = serve_accuracy(runner, pipe.params, pipe.state, pipe.comp, arts,
+                         n_batches=cfg.eval_batches,
+                         use_ref_kernel=args.use_ref_kernel)
+    print(f"compressed serve: {len(arts)} layers on the 4-bit LUT GEMM, "
+          f"full-model logit rel_err={rel:.2e} vs fake-quant forward")
+    print(f"compressed serve accuracy: {acc:.3f} "
+          f"(schedule reported acc_final={result.acc_final:.3f})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,223 @@
+"""Compressed serving export: post-schedule comp tree -> packed artifacts.
+
+The schedule's output per layer is a `repro.core.qat.CompState` (pruning mask
++ restricted int8 codebook C_l, |C_l| <= 16). Deployment stores only what the
+systolic array needs (paper Section 4 / Fig. 5):
+
+  * ``packed``    (K_pad//2, N) int8 — 4-bit codebook indices, two K rows per
+                  byte in the block-local layout of `pack_indices`,
+  * ``codebook``  (16,) int8 — the layer's restricted weight set,
+  * ``scale``     (N,) float32 — per-output-channel symmetric dequant scale.
+
+`export_layer` mirrors `qat.fake_quant_weight` exactly (mask -> scale of the
+masked weight -> round/clip -> nearest-C_l projection), so the served forward
+agrees with the QAT fake-quant forward to float round-off. The one deliberate
+divergence: pruned positions always serve as exact 0 (0 is force-included in
+the serving codebook), i.e. zero-gated MACs stay zero-gated even if C_l
+itself lacks 0 — the schedule always keeps 0, so in practice the paths agree.
+
+Weight-matrix layouts (K = reduction axis, N = output channels):
+
+  * ``out_last``: contraction over all leading axes — dense (in, out), conv
+    HWIO (kh, kw, cin, cout) (reshape(-1, cout) matches the `im2col` row
+    order), attention wo (H, hd, m);
+  * ``in_first``: contraction over axis 0, outputs flattened — attention
+    wq/wk/wv (m, H, hd) and other (in, *out) projections.
+
+K is padded to a `block_k` multiple at export; the serve helpers zero-pad
+activations over K so padded rows never contribute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat
+from repro.kernels.lut_matmul.ops import (
+    N_CODES,
+    compress_layer_weights,
+    lut_matmul,
+)
+
+
+@dataclasses.dataclass
+class ServeArtifact:
+    """Packed 4-bit serving form of one compressed matmul weight."""
+
+    packed: jax.Array        # (K_pad//2, N) int8
+    codebook: jax.Array      # (16,) int8
+    scale: jax.Array         # (N,) float32
+    k_dim: int               # unpadded reduction dim (= X's contraction size)
+    n_dim: int               # output channels
+    block_k: int
+    kind: str = "dense"      # "dense" | "conv"
+    kernel: int = 1          # conv spatial kernel size (1 for dense)
+
+    @property
+    def weight_bytes(self) -> int:
+        """Serving footprint: packed nibbles + codebook + f32 scales."""
+        return int(self.packed.size + self.codebook.size + self.scale.size * 4)
+
+    @property
+    def dense_bytes_int8(self) -> int:
+        """What the same (unpadded) weight costs stored as plain int8."""
+        return int(self.k_dim * self.n_dim)
+
+
+def _flatten_tree(art: ServeArtifact):
+    return (art.packed, art.codebook, art.scale), (
+        art.k_dim, art.n_dim, art.block_k, art.kind, art.kernel)
+
+
+def _unflatten_tree(aux, children):
+    packed, codebook, scale = children
+    k_dim, n_dim, block_k, kind, kernel = aux
+    return ServeArtifact(packed, codebook, scale, k_dim, n_dim, block_k,
+                         kind, kernel)
+
+
+# registered as a pytree so artifact dicts pass through jit as data args
+# (shapes/layout metadata ride in aux_data and stay static)
+jax.tree_util.register_pytree_node(
+    ServeArtifact, _flatten_tree, _unflatten_tree)
+
+
+def servable(comp: qat.CompState) -> bool:
+    """A layer can take the 4-bit LUT path iff its restriction is active and
+    fits the 16-entry hardware codebook."""
+    k = int(comp["codebook_k"])
+    return 0 < k <= N_CODES
+
+
+def _weight_matrix(qp: jax.Array, scale: jax.Array, layout: str
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Projected int weights + broadcast scale -> ((K, N) ints, (N,) scale)."""
+    scale_full = jnp.broadcast_to(scale, qp.shape)
+    if layout == "out_last":
+        mat = qp.reshape(-1, qp.shape[-1])
+        scale_n = scale_full.reshape(-1, qp.shape[-1])[0]
+    elif layout == "in_first":
+        mat = qp.reshape(qp.shape[0], -1)
+        scale_n = scale_full[0].reshape(-1)
+    else:
+        raise ValueError(f"unknown layout {layout!r}")
+    return mat, scale_n
+
+
+def export_layer(
+    w: jax.Array,
+    comp: qat.CompState,
+    *,
+    kind: str = "dense",
+    layout: str = "out_last",
+    block_k: int = 128,
+) -> Optional[ServeArtifact]:
+    """Export one compressed weight tensor; None if it is not servable.
+
+    Follows `qat.fake_quant_weight` step for step so the dequantized serving
+    weights equal the fake-quant weights bit for bit (modulo the forced-0
+    treatment of pruned positions, see module docstring).
+    """
+    if not servable(comp):
+        return None
+    if kind == "conv" and w.shape[0] != w.shape[1]:
+        raise ValueError(
+            f"serve_conv assumes square conv kernels, got {w.shape[:2]}")
+    k_valid = int(comp["codebook_k"])
+    values = sorted({int(v) for v in jnp.asarray(comp["codebook"])[:k_valid]})
+
+    # the training scale reduces over all axes but the last of the *original*
+    # tensor; reshape weight/mask/scale to the (K, N) serving layout and let
+    # `compress_layer_weights` do the (shared) fake-quant-mirroring encode
+    mask = comp["mask"].astype(w.dtype)
+    scale = qat.weight_scale(w * mask)                # keepdims, per out chan
+    w_mat, scale_n = _weight_matrix(w, scale, layout)
+    mask_mat, _ = _weight_matrix(mask, scale, layout)
+    packed, cb, scale_n = compress_layer_weights(
+        w_mat, values, mask=mask_mat, scale=scale_n, block_k=block_k,
+        pad_k=True)
+
+    k_dim, n_dim = w_mat.shape
+    kernel = int(w.shape[0]) if kind == "conv" else 1
+    return ServeArtifact(packed=packed, codebook=cb.astype(jnp.int8),
+                         scale=scale_n.astype(jnp.float32), k_dim=k_dim,
+                         n_dim=n_dim, block_k=block_k, kind=kind,
+                         kernel=kernel)
+
+
+def export_model(model, params, comp: Dict[str, qat.CompState], *,
+                 block_k: int = 128) -> Dict[str, ServeArtifact]:
+    """Export every servable compressible layer of a `CNNModel`.
+
+    Layers whose restriction is inactive (codebook_k == 0) or too large for
+    the 4-bit format stay on the fake-quant dense path and are simply absent
+    from the returned dict — the serve dispatch in `repro.nn.layers` falls
+    back per layer.
+    """
+    out: Dict[str, ServeArtifact] = {}
+    for cl in model.comp_layers:
+        art = export_layer(
+            model.get_weight(params, cl.name), comp[cl.name],
+            kind=cl.kind, layout="out_last", block_k=block_k)
+        if art is not None:
+            out[cl.name] = art
+    return out
+
+
+# ------------------------------------------------------------- serve forwards
+
+
+def _pad_k(x2d: jax.Array, art: ServeArtifact) -> jax.Array:
+    pad = 2 * art.packed.shape[0] - art.k_dim
+    return jnp.pad(x2d, ((0, 0), (0, pad))) if pad else x2d
+
+
+def serve_dense(x: jax.Array, art: ServeArtifact, *,
+                block_m: int = 128, block_n: int = 128,
+                interpret: Optional[bool] = None,
+                use_ref: bool = False) -> jax.Array:
+    """(..., K) @ packed -> (..., N) through the 4-bit LUT GEMM."""
+    lead = x.shape[:-1]
+    x2d = _pad_k(x.reshape(-1, x.shape[-1]), art)
+    y = lut_matmul(x2d, art.packed, art.codebook, art.scale,
+                   block_m=block_m, block_n=block_n, block_k=art.block_k,
+                   interpret=interpret, use_ref=use_ref)
+    return y.reshape(*lead, art.n_dim)
+
+
+def serve_conv(x: jax.Array, art: ServeArtifact, *, stride: int = 1,
+               padding: str = "SAME", block_m: int = 128, block_n: int = 128,
+               interpret: Optional[bool] = None,
+               use_ref: bool = False) -> jax.Array:
+    """NHWC conv through im2col + the LUT GEMM. Matches `lax.conv` to fp32
+    round-off (same contraction, different accumulation order)."""
+    from repro.core.stats import im2col
+
+    n, h, w_in, _ = x.shape
+    kh = kw = art.kernel
+    if padding == "SAME":
+        ho, wo = -(-h // stride), -(-w_in // stride)
+    elif padding == "VALID":
+        ho, wo = (h - kh) // stride + 1, (w_in - kw) // stride + 1
+    else:
+        raise ValueError(padding)
+    cols = im2col(x, (kh, kw), stride, padding)       # (K, N*Ho*Wo)
+    y = serve_dense(cols.T, art, block_m=block_m, block_n=block_n,
+                    interpret=interpret, use_ref=use_ref)
+    return y.reshape(n, ho, wo, art.n_dim)
+
+
+def export_summary(arts: Dict[str, ServeArtifact]) -> Dict[str, float]:
+    """Aggregate footprint of an exported model."""
+    packed_bytes = sum(a.weight_bytes for a in arts.values())
+    int8_bytes = sum(a.dense_bytes_int8 for a in arts.values())
+    return {
+        "layers": len(arts),
+        "weight_bytes_packed": int(packed_bytes),
+        "weight_bytes_dense_int8": int(int8_bytes),
+        "compression_vs_int8": int8_bytes / max(packed_bytes, 1),
+    }

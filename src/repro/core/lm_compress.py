@@ -103,6 +103,88 @@ def lm_comp_layers(model: LMModel) -> List[str]:
     return names
 
 
+# ---------------------------------------------------------------- serving
+
+# how each eligible weight reshapes to a (K, N) serving matrix:
+# "in_first"  — contraction over axis 0, outputs flattened (wq/wk/wv (d,H,hd))
+# "out_last"  — contraction over all leading axes (2-D mats, wo (H,hd,d))
+_SERVE_LAYOUTS: Dict[str, str] = {
+    "wq": "in_first", "wk": "in_first", "wv": "in_first", "wo": "out_last",
+}
+
+
+def _serve_layout(key: str, ndim: int) -> Optional[str]:
+    """Layout for the 4-bit LUT GEMM; None = not servable as one matmul.
+
+    Per-expert MoE tensors (expert-batched matmuls sharing one quant scale
+    across experts) are excluded: slicing them per expert would change the
+    scale semantics vs training. They stay on the fake-quant path.
+    """
+    if ndim == 2:
+        return "out_last"
+    if ndim == 3:
+        return _SERVE_LAYOUTS.get(key)
+    return None
+
+
+def iter_restricted_units(model: LMModel, params: dict, comp: dict):
+    """Yield (name, weight, comp_entry, layout) for every servable unit.
+
+    Stacked (scanned) units are yielded per scan layer — the scan applies
+    fake-quant to per-layer slices, so each slice exports independently with
+    its own scale, exactly matching the training semantics. Names follow
+    ``blocks/g0/attn/wq[3]`` for layer 3 of a stack.
+    """
+    from repro.core import export as _export
+
+    spec = make_lm_comp_spec(model)
+    for top, groups in spec.items():
+        entries = ({None: groups} if top == "enc_blocks"
+                   else {g: groups[g] for g in groups})
+        for g, units in entries.items():
+            for unit in units:
+                sub, key = unit.split("/")
+                node_p = params[top] if g is None else params[top][g]
+                node_c = comp[top] if g is None else comp[top][g]
+                w = node_p[sub][key]
+                c = node_c[unit]
+                stacked = c["codebook"].ndim == 2
+                base = f"{top}/{g}/{unit}" if g is not None else f"{top}/{unit}"
+                if stacked:
+                    layout = _serve_layout(key, w.ndim - 1)
+                    if layout is None:
+                        continue
+                    for li in range(w.shape[0]):
+                        c_l = {"mask": c["mask"][li],
+                               "codebook": c["codebook"][li],
+                               "codebook_k": c["codebook_k"][li]}
+                        if _export.servable(c_l):
+                            yield f"{base}[{li}]", w[li], c_l, layout
+                else:
+                    layout = _serve_layout(key, w.ndim)
+                    if layout is not None and _export.servable(c):
+                        yield base, w, c, layout
+
+
+def export_lm_matmuls(model: LMModel, params: dict, comp: dict, *,
+                      block_k: int = 128, limit: Optional[int] = None) -> Dict:
+    """Export every restricted eligible LM matmul to a `ServeArtifact`.
+
+    Returns {unit_name: ServeArtifact}; `repro.core.export.serve_dense`
+    runs any of them (x flattened over leading axes, outputs reshaped by the
+    caller per the unit's einsum).
+    """
+    from repro.core import export as _export
+
+    out = {}
+    for name, w, c, layout in iter_restricted_units(model, params, comp):
+        out[name] = _export.export_layer(w, c, kind="dense", layout=layout,
+                                         block_k=block_k)
+        if limit is not None and len(out) >= limit:
+            break
+    return out
+
+
 def set_codebook(comp: dict, path: str, values, layer: Optional[int] = None) -> dict:
     """Functional codebook update for unit `path` ('blocks/g0/mlp/w_down').
 

@@ -31,8 +31,7 @@ from jax.experimental import pallas as pl
 N_CODES = 16
 
 
-def _kernel(x_ref, packed_ref, cb_ref, scale_ref, o_ref, *, block_k: int,
-            out_dtype):
+def _kernel(x_ref, packed_ref, cb_ref, scale_ref, o_ref, *, block_k: int):
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -54,7 +53,10 @@ def _kernel(x_ref, packed_ref, cb_ref, scale_ref, o_ref, *, block_k: int,
 
     acc = jnp.dot(x.astype(jnp.float32), w,
                   preferred_element_type=jnp.float32)
-    o_ref[...] += acc.astype(out_dtype)
+    # accumulate in f32 across the K grid; the wrapper casts to out_dtype
+    # once after the last K step (accumulating in a narrow out_dtype would
+    # re-round the running sum at every K step)
+    o_ref[...] += acc
 
 
 def lut_matmul_pallas(
@@ -76,8 +78,8 @@ def lut_matmul_pallas(
     out_dtype = x.dtype if x.dtype != jnp.bfloat16 else jnp.float32
 
     grid = (m // block_m, n // block_n, k // block_k)
-    kernel = functools.partial(_kernel, block_k=block_k, out_dtype=out_dtype)
-    return pl.pallas_call(
+    kernel = functools.partial(_kernel, block_k=block_k)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -87,6 +89,7 @@ def lut_matmul_pallas(
             pl.BlockSpec((block_n,), lambda i, j, kk: (j,)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(x, packed, codebook, scale)
+    return out.astype(out_dtype)

@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -11,11 +12,24 @@ from repro.kernels.lut_matmul.lut_matmul import N_CODES, lut_matmul_pallas
 from repro.kernels.lut_matmul.ref import lut_matmul_ref
 
 
+def default_interpret() -> bool:
+    """Backend-aware Pallas mode: compiled on TPU, interpreted elsewhere.
+
+    The LUT GEMM is a TPU kernel; on CPU/GPU hosts (tests, reduced serving
+    configs) interpret mode runs the same program through the Pallas
+    interpreter so the packed serving path stays executable everywhere.
+    """
+    return jax.default_backend() != "tpu"
+
+
 def encode_weights(w_int: jax.Array, codebook: jax.Array):
     """Map int8-valued weights to nearest-codebook indices.
 
     w_int: (K, N) int weights already restricted (or to be snapped) to the
     codebook; codebook: (16,) sorted int values. Returns (K, N) int32 indices.
+    Ties (including duplicate/padded codebook entries) resolve to the lowest
+    index, so padded codebooks encode stably: every chosen index decodes to
+    the same value the projection picked.
     """
     dist = jnp.abs(w_int[..., None].astype(jnp.int32)
                    - codebook[None, None, :].astype(jnp.int32))
@@ -30,7 +44,12 @@ def pack_indices(idx: jax.Array, block_k: int = 128) -> jax.Array:
     VMEM-internal concat (no cross-block shuffling).
     """
     k, n = idx.shape
-    assert k % block_k == 0 and block_k % 2 == 0
+    if block_k % 2 != 0:
+        raise ValueError(f"block_k must be even, got {block_k}")
+    if k % block_k != 0:
+        raise ValueError(
+            f"K={k} is not a multiple of block_k={block_k}; pad the index "
+            "rows first (packing is block-local, see repro.core.export)")
     blocks = idx.reshape(k // block_k, block_k, n).astype(jnp.int32)
     low = blocks[:, : block_k // 2]
     high = blocks[:, block_k // 2:]
@@ -49,16 +68,25 @@ def lut_matmul(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     use_ref: bool = False,
 ) -> jax.Array:
-    """Y = X @ dequant(packed) — pads M/N/K to block multiples as needed."""
+    """Y = X @ dequant(packed) — pads M/N to block multiples as needed.
+
+    ``interpret=None`` resolves per backend (`default_interpret`): compiled
+    Pallas on TPU, interpreter elsewhere.
+    """
     if use_ref:
         return lut_matmul_ref(x, packed, codebook, scale, block_k=block_k)
+    if interpret is None:
+        interpret = default_interpret()
     m, k = x.shape
     _, n = packed.shape
     pm, pn, pk = (-m) % block_m, (-n) % block_n, (-k) % block_k
-    assert pk == 0, "K must already be a multiple of block_k (packing is block-local)"
+    if pk:
+        raise ValueError(
+            f"K={k} must already be a multiple of block_k={block_k} "
+            "(packing is block-local)")
     xp = jnp.pad(x, ((0, pm), (0, 0))) if pm else x
     pp = jnp.pad(packed, ((0, 0), (0, pn))) if pn else packed
     sp = jnp.pad(scale, (0, pn)) if pn else scale
@@ -68,19 +96,57 @@ def lut_matmul(
     return out[:m, :n]
 
 
-def compress_layer_weights(w: jax.Array, codebook_values, *, block_k: int = 128):
+def compress_layer_weights(w: jax.Array, codebook_values, *,
+                           mask: Optional[jax.Array] = None,
+                           scale: Optional[jax.Array] = None,
+                           block_k: int = 128,
+                           pad_k: bool = False):
     """End-to-end encode of a float (K, N) weight matrix for serving.
 
     Returns (packed, codebook_arr, scale): per-output-channel symmetric scale,
-    int8 snap to the restricted set, 4-bit pack.
+    int8 snap to the restricted set, 4-bit pack. Mirrors the QAT fake-quant
+    semantics: mask -> per-channel scale of the *masked* weight -> round/clip
+    -> nearest-codebook projection. ``scale`` overrides the per-column scale
+    (used by `repro.core.export` when the training scale reduces over a
+    different layout than the matrix columns); ``pad_k=True`` pads K up to a
+    ``block_k`` multiple (padded rows encode the 0-nearest entry and pair
+    with zero-padded activation rows at serve time).
+
+    A pruning ``mask`` (zeros = pruned) is honored exactly: 0 is
+    force-included in the serving codebook when the mask prunes anything, and
+    pruned positions encode to the index of 0 — pruned MACs stay zero-gated
+    on the array even when the training codebook C_l itself lacks 0.
     """
     from repro.core import qat
 
-    scale = qat.weight_scale(w)[0]                      # (N,)
-    q = jnp.clip(jnp.round(w / scale[None, :]), -qat.QMAX, qat.QMAX)
-    cb = jnp.asarray(sorted(int(v) for v in codebook_values), jnp.int32)
-    assert cb.shape[0] <= N_CODES
+    vals = sorted({int(v) for v in codebook_values})
+    if not vals:
+        raise ValueError("empty codebook")
+    prunes = mask is not None and bool(jnp.any(mask == 0))
+    serve_vals = sorted(set(vals) | {0}) if prunes else vals
+    if len(serve_vals) > N_CODES:
+        raise ValueError(
+            f"codebook needs {len(serve_vals)} entries (> {N_CODES}); "
+            "pruned layers must leave room for the forced 0 entry")
+
+    wm = w * mask.astype(w.dtype) if mask is not None else w
+    if scale is None:
+        scale = qat.weight_scale(wm)[0]                 # (N,)
+    q = jnp.clip(jnp.round(wm / scale[None, :]), -qat.QMAX, qat.QMAX)
+    # project onto the *training* set first (identical to fake_quant_weight),
+    # then force pruned positions to the 0 entry of the serving set
+    cb_train, k_train = qat.make_codebook(vals)
+    qp = qat.project_to_codebook(q.astype(jnp.int32), cb_train, k_train)
+    if mask is not None:
+        qp = jnp.where(mask == 0, 0, qp)
+
+    cb = jnp.asarray(serve_vals, jnp.int32)
     cb = jnp.pad(cb, (0, N_CODES - cb.shape[0]), constant_values=cb[-1])
-    idx = encode_weights(q.astype(jnp.int32), cb)
+    idx = encode_weights(qp, cb)
+    if pad_k:
+        pad = (-idx.shape[0]) % block_k
+        if pad:
+            zero_idx = int(jnp.argmin(jnp.abs(cb)))
+            idx = jnp.pad(idx, ((0, pad), (0, 0)), constant_values=zero_idx)
     packed = pack_indices(idx, block_k)
     return packed, cb.astype(jnp.int8), scale

@@ -7,6 +7,11 @@ scripted); on a pod the identical code runs under `make_production_mesh()`
 with the sharding rules of `repro.distributed.sharding`.
 
     python -m repro.launch.serve --arch gemma3-4b --reduced --batch 4
+
+``--compress-k N`` additionally restricts every eligible matmul to an
+N-value codebook, exports the packed 4-bit serving artifacts
+(`repro.core.lm_compress.export_lm_matmuls`), and verifies the LUT GEMM
+against the fake-quant matmul before serving (see docs/serving.md).
 """
 
 from __future__ import annotations
@@ -21,6 +26,56 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
 from repro.models.lm import build_lm
 from repro.nn.spec import init_params, spec_count
+
+
+def compress_report(model, params, k: int, *, block_k: int = 128,
+                    check_units: int = 4, seed: int = 2):
+    """Export eligible LM matmuls at codebook size ``k`` and verify parity.
+
+    Restricts every eligible matmul to a symmetric k-value codebook, exports
+    the packed 4-bit artifacts, and checks the LUT GEMM against the QAT
+    fake-quant matmul on random activations for ``check_units`` units.
+    Returns (artifacts, summary dict).
+    """
+    import numpy as np
+
+    from repro.core import lm_compress, qat
+    from repro.core.export import export_summary, serve_dense
+
+    # restricted set of exactly k values: 0 plus levels spread over the int8
+    # range (one extra negative level when k is even)
+    n_neg = k // 2
+    n_pos = k - 1 - n_neg
+    values = sorted(
+        {0}
+        | {-int(v) for v in np.linspace(16, 120, n_neg)}
+        | {int(v) for v in np.linspace(16, 120, n_pos)})
+    assert len(values) == k, (k, values)
+
+    comp = lm_compress.init_lm_comp(model)
+    for path in lm_compress.lm_comp_layers(model):
+        comp = lm_compress.set_codebook(comp, path, values)
+    arts = lm_compress.export_lm_matmuls(model, params, comp, block_k=block_k)
+    summary = export_summary(arts)
+
+    checked = {}
+    for name, w, c, layout in lm_compress.iter_restricted_units(
+            model, params, comp):
+        if len(checked) >= check_units or name not in arts:
+            break
+        art = arts[name]
+        x = jax.random.normal(jax.random.PRNGKey(seed), (4, art.k_dim))
+        w_fake = qat.fake_quant_weight(w, c)
+        w_mat = (w_fake.reshape(w.shape[0], -1) if layout == "in_first"
+                 else w_fake.reshape(-1, w.shape[-1]))
+        want = x @ w_mat
+        got = serve_dense(x, art)
+        rel = float(jnp.linalg.norm(got - want)
+                    / jnp.maximum(jnp.linalg.norm(want), 1e-9))
+        checked[name] = rel
+    summary["parity_checked"] = checked
+    summary["parity_max_rel_err"] = max(checked.values()) if checked else 0.0
+    return arts, summary
 
 
 def generate(model, params, prompts: jax.Array, *, new_tokens: int,
@@ -63,6 +118,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--compress-k", type=int, default=0,
+                    help="restrict eligible matmuls to a k-value codebook, "
+                         "export packed 4-bit artifacts, verify LUT parity")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -78,6 +136,14 @@ def main(argv=None):
         print(f"restored checkpoint step {step}")
     else:
         params = init_params(jax.random.PRNGKey(0), model.spec)
+
+    if args.compress_k:
+        arts, summary = compress_report(model, params, args.compress_k)
+        print(f"compressed export: {summary['layers']} matmuls, "
+              f"{summary['weight_bytes_packed'] / 1e6:.2f} MB packed "
+              f"({summary['compression_vs_int8']:.2f}x vs int8), "
+              f"LUT parity max rel err "
+              f"{summary['parity_max_rel_err']:.2e}")
 
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)

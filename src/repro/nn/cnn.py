@@ -47,7 +47,7 @@ class CNNModel:
     num_classes: int
     spec: dict
     state_spec: dict
-    apply: Callable  # (params, state, x, *, train, qcfg, comp, capture_taps) -> (logits, state, taps)
+    apply: Callable  # (params, state, x, *, train, qcfg, comp, serve, capture_taps) -> (logits, state, taps)
     comp_layers: List[CompLayer]
 
     def comp_layer(self, name: str) -> CompLayer:
@@ -91,23 +91,28 @@ def lenet5(num_classes: int = 10, in_channels: int = 3) -> CNNModel:
     ]
 
     def apply(params, state, x, *, train=False, qcfg=QuantConfig.off(),
-              comp=None, capture_taps=False):
+              comp=None, serve=None, capture_taps=False):
         tap = {} if capture_taps else None
         h = L.apply_conv(params["conv1"], x, padding="VALID", qcfg=qcfg,
-                         comp=_maybe(comp, "conv1"), tap=tap, tap_name="conv1")
+                         comp=_maybe(comp, "conv1"),
+                         serve_art=_maybe(serve, "conv1"), tap=tap, tap_name="conv1")
         h = jax.nn.relu(h)
         h = L.max_pool(h)
         h = L.apply_conv(params["conv2"], h, padding="VALID", qcfg=qcfg,
-                         comp=_maybe(comp, "conv2"), tap=tap, tap_name="conv2")
+                         comp=_maybe(comp, "conv2"),
+                         serve_art=_maybe(serve, "conv2"), tap=tap, tap_name="conv2")
         h = jax.nn.relu(h)
         h = L.max_pool(h)
         h = h.reshape(h.shape[0], -1)
         h = jax.nn.relu(L.apply_dense(params["fc1"], h, qcfg=qcfg,
-                                      comp=_maybe(comp, "fc1"), tap=tap, tap_name="fc1"))
+                                      comp=_maybe(comp, "fc1"),
+                         serve_art=_maybe(serve, "fc1"), tap=tap, tap_name="fc1"))
         h = jax.nn.relu(L.apply_dense(params["fc2"], h, qcfg=qcfg,
-                                      comp=_maybe(comp, "fc2"), tap=tap, tap_name="fc2"))
+                                      comp=_maybe(comp, "fc2"),
+                         serve_art=_maybe(serve, "fc2"), tap=tap, tap_name="fc2"))
         logits = L.apply_dense(params["fc3"], h, qcfg=qcfg,
-                               comp=_maybe(comp, "fc3"), tap=tap, tap_name="fc3")
+                               comp=_maybe(comp, "fc3"),
+                         serve_art=_maybe(serve, "fc3"), tap=tap, tap_name="fc3")
         return logits, state, (tap or {})
 
     return CNNModel("lenet5", num_classes, spec, {}, apply, comp_layers)
@@ -134,20 +139,24 @@ def _basic_block_spec(c_in: int, c_out: int, stride: int):
     return spec, state
 
 
-def _apply_basic_block(params, state, x, *, prefix, stride, train, qcfg, comp, tap):
+def _apply_basic_block(params, state, x, *, prefix, stride, train, qcfg, comp,
+                       serve, tap):
     h = L.apply_conv(params["conv1"], x, stride=stride, qcfg=qcfg,
-                     comp=_maybe(comp, f"{prefix}/conv1"), tap=tap,
+                     comp=_maybe(comp, f"{prefix}/conv1"),
+                         serve_art=_maybe(serve, f"{prefix}/conv1"), tap=tap,
                      tap_name=f"{prefix}/conv1")
     h, s1 = L.apply_batchnorm(params["bn1"], state["bn1"], h, train=train)
     h = jax.nn.relu(h)
     h = L.apply_conv(params["conv2"], h, qcfg=qcfg,
-                     comp=_maybe(comp, f"{prefix}/conv2"), tap=tap,
+                     comp=_maybe(comp, f"{prefix}/conv2"),
+                         serve_art=_maybe(serve, f"{prefix}/conv2"), tap=tap,
                      tap_name=f"{prefix}/conv2")
     h, s2 = L.apply_batchnorm(params["bn2"], state["bn2"], h, train=train)
     new_state = {"bn1": s1, "bn2": s2}
     if "down" in params:
         skip = L.apply_conv(params["down"], x, stride=stride, qcfg=qcfg,
-                            comp=_maybe(comp, f"{prefix}/down"), tap=tap,
+                            comp=_maybe(comp, f"{prefix}/down"),
+                         serve_art=_maybe(serve, f"{prefix}/down"), tap=tap,
                             tap_name=f"{prefix}/down")
         skip, s3 = L.apply_batchnorm(params["down_bn"], state["down_bn"], skip,
                                      train=train)
@@ -193,10 +202,11 @@ def resnet20(num_classes: int = 10, in_channels: int = 3) -> CNNModel:
     comp_layers.append(CompLayer("fc", "dense", 64, num_classes))
 
     def apply(params, state, x, *, train=False, qcfg=QuantConfig.off(),
-              comp=None, capture_taps=False):
+              comp=None, serve=None, capture_taps=False):
         tap = {} if capture_taps else None
         h = L.apply_conv(params["conv1"], x, qcfg=qcfg,
-                         comp=_maybe(comp, "conv1"), tap=tap, tap_name="conv1")
+                         comp=_maybe(comp, "conv1"),
+                         serve_art=_maybe(serve, "conv1"), tap=tap, tap_name="conv1")
         h, s0 = L.apply_batchnorm(params["bn1"], state["bn1"], h, train=train)
         h = jax.nn.relu(h)
         new_state = {"bn1": s0}
@@ -205,11 +215,12 @@ def resnet20(num_classes: int = 10, in_channels: int = 3) -> CNNModel:
                 name = f"s{si}b{bi}"
                 h, bs = _apply_basic_block(
                     params[name], state[name], h, prefix=name,
-                    stride=strides[name], train=train, qcfg=qcfg, comp=comp, tap=tap)
+                    stride=strides[name], train=train, qcfg=qcfg, comp=comp, serve=serve, tap=tap)
                 new_state[name] = bs
         h = L.avg_pool_global(h)
         logits = L.apply_dense(params["fc"], h, qcfg=qcfg,
-                               comp=_maybe(comp, "fc"), tap=tap, tap_name="fc")
+                               comp=_maybe(comp, "fc"),
+                         serve_art=_maybe(serve, "fc"), tap=tap, tap_name="fc")
         return logits, new_state, (tap or {})
 
     return CNNModel("resnet20", num_classes, spec, state_spec, apply, comp_layers)
@@ -237,25 +248,30 @@ def _bottleneck_spec(c_in: int, width: int, stride: int):
     return spec, state
 
 
-def _apply_bottleneck(params, state, x, *, prefix, stride, train, qcfg, comp, tap):
+def _apply_bottleneck(params, state, x, *, prefix, stride, train, qcfg, comp,
+                      serve, tap):
     h = L.apply_conv(params["conv1"], x, qcfg=qcfg,
-                     comp=_maybe(comp, f"{prefix}/conv1"), tap=tap,
+                     comp=_maybe(comp, f"{prefix}/conv1"),
+                         serve_art=_maybe(serve, f"{prefix}/conv1"), tap=tap,
                      tap_name=f"{prefix}/conv1")
     h, s1 = L.apply_batchnorm(params["bn1"], state["bn1"], h, train=train)
     h = jax.nn.relu(h)
     h = L.apply_conv(params["conv2"], h, stride=stride, qcfg=qcfg,
-                     comp=_maybe(comp, f"{prefix}/conv2"), tap=tap,
+                     comp=_maybe(comp, f"{prefix}/conv2"),
+                         serve_art=_maybe(serve, f"{prefix}/conv2"), tap=tap,
                      tap_name=f"{prefix}/conv2")
     h, s2 = L.apply_batchnorm(params["bn2"], state["bn2"], h, train=train)
     h = jax.nn.relu(h)
     h = L.apply_conv(params["conv3"], h, qcfg=qcfg,
-                     comp=_maybe(comp, f"{prefix}/conv3"), tap=tap,
+                     comp=_maybe(comp, f"{prefix}/conv3"),
+                         serve_art=_maybe(serve, f"{prefix}/conv3"), tap=tap,
                      tap_name=f"{prefix}/conv3")
     h, s3 = L.apply_batchnorm(params["bn3"], state["bn3"], h, train=train)
     new_state = {"bn1": s1, "bn2": s2, "bn3": s3}
     if "down" in params:
         skip = L.apply_conv(params["down"], x, stride=stride, qcfg=qcfg,
-                            comp=_maybe(comp, f"{prefix}/down"), tap=tap,
+                            comp=_maybe(comp, f"{prefix}/down"),
+                         serve_art=_maybe(serve, f"{prefix}/down"), tap=tap,
                             tap_name=f"{prefix}/down")
         skip, s4 = L.apply_batchnorm(params["down_bn"], state["down_bn"], skip,
                                      train=train)
@@ -304,10 +320,11 @@ def resnet50(num_classes: int = 100, in_channels: int = 3) -> CNNModel:
     comp_layers.append(CompLayer("fc", "dense", 2048, num_classes))
 
     def apply(params, state, x, *, train=False, qcfg=QuantConfig.off(),
-              comp=None, capture_taps=False):
+              comp=None, serve=None, capture_taps=False):
         tap = {} if capture_taps else None
         h = L.apply_conv(params["conv1"], x, qcfg=qcfg,
-                         comp=_maybe(comp, "conv1"), tap=tap, tap_name="conv1")
+                         comp=_maybe(comp, "conv1"),
+                         serve_art=_maybe(serve, "conv1"), tap=tap, tap_name="conv1")
         h, s0 = L.apply_batchnorm(params["bn1"], state["bn1"], h, train=train)
         h = jax.nn.relu(h)
         new_state = {"bn1": s0}
@@ -316,11 +333,12 @@ def resnet50(num_classes: int = 100, in_channels: int = 3) -> CNNModel:
                 name = f"s{si}b{bi}"
                 h, bs = _apply_bottleneck(
                     params[name], state[name], h, prefix=name,
-                    stride=strides[name], train=train, qcfg=qcfg, comp=comp, tap=tap)
+                    stride=strides[name], train=train, qcfg=qcfg, comp=comp, serve=serve, tap=tap)
                 new_state[name] = bs
         h = L.avg_pool_global(h)
         logits = L.apply_dense(params["fc"], h, qcfg=qcfg,
-                               comp=_maybe(comp, "fc"), tap=tap, tap_name="fc")
+                               comp=_maybe(comp, "fc"),
+                         serve_art=_maybe(serve, "fc"), tap=tap, tap_name="fc")
         return logits, new_state, (tap or {})
 
     return CNNModel("resnet50", num_classes, spec, state_spec, apply, comp_layers)
@@ -361,10 +379,11 @@ def resnet8(num_classes: int = 10, in_channels: int = 3) -> CNNModel:
     comp_layers.append(CompLayer("fc", "dense", 64, num_classes))
 
     def apply(params, state, x, *, train=False, qcfg=QuantConfig.off(),
-              comp=None, capture_taps=False):
+              comp=None, serve=None, capture_taps=False):
         tap = {} if capture_taps else None
         h = L.apply_conv(params["conv1"], x, qcfg=qcfg,
-                         comp=_maybe(comp, "conv1"), tap=tap, tap_name="conv1")
+                         comp=_maybe(comp, "conv1"),
+                         serve_art=_maybe(serve, "conv1"), tap=tap, tap_name="conv1")
         h, s0 = L.apply_batchnorm(params["bn1"], state["bn1"], h, train=train)
         h = jax.nn.relu(h)
         new_state = {"bn1": s0}
@@ -372,11 +391,12 @@ def resnet8(num_classes: int = 10, in_channels: int = 3) -> CNNModel:
             name = f"s{si}b1"
             h, bs = _apply_basic_block(
                 params[name], state[name], h, prefix=name,
-                stride=strides[name], train=train, qcfg=qcfg, comp=comp, tap=tap)
+                stride=strides[name], train=train, qcfg=qcfg, comp=comp, serve=serve, tap=tap)
             new_state[name] = bs
         h = L.avg_pool_global(h)
         logits = L.apply_dense(params["fc"], h, qcfg=qcfg,
-                               comp=_maybe(comp, "fc"), tap=tap, tap_name="fc")
+                               comp=_maybe(comp, "fc"),
+                         serve_art=_maybe(serve, "fc"), tap=tap, tap_name="fc")
         return logits, new_state, (tap or {})
 
     return CNNModel("resnet8", num_classes, spec, state_spec, apply, comp_layers)

@@ -21,10 +21,20 @@ from repro.nn.spec import ParamSpec, fan_in_init, normal_init, ones_init, zeros_
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
-    """Static quantization switches (hashable: usable as a jit static arg)."""
+    """Static quantization switches (hashable: usable as a jit static arg).
+
+    ``comp_mode`` selects how a compressed layer executes:
+      * ``"fake_quant"`` — dense matmul on fake-quantized weights (training
+        and the QAT reference forward);
+      * ``"serve"`` — dispatch layers that have a `ServeArtifact` to the
+        packed 4-bit LUT GEMM (`repro.kernels.lut_matmul`); layers without
+        an artifact fall back to fake-quant.
+    """
 
     enabled: bool = False
     act_quant: bool = True
+    comp_mode: str = "fake_quant"
+    use_ref_kernel: bool = False  # serve via the jnp oracle (CPU-fast tests)
 
     @staticmethod
     def off() -> "QuantConfig":
@@ -33,6 +43,22 @@ class QuantConfig:
     @staticmethod
     def on() -> "QuantConfig":
         return QuantConfig(enabled=True)
+
+    @staticmethod
+    def serve(*, use_ref_kernel: bool = False) -> "QuantConfig":
+        return QuantConfig(enabled=True, comp_mode="serve",
+                           use_ref_kernel=use_ref_kernel)
+
+
+def _record_tap(tap, tap_name, x, w, comp):
+    """Profiling tap: int8 views of what sits in the MAC registers. Recorded
+    on both the fake-quant and serve paths (the served weights dequantize to
+    the same integers the tap reports)."""
+    if tap is not None and tap_name is not None:
+        tap[tap_name] = {
+            "a_int": qat.quantize_act_int(x),
+            "w_int": qat.quantize_weight_int(w, comp),
+        }
 
 
 # --------------------------------------------------------------------- dense
@@ -61,22 +87,21 @@ def apply_dense(
     *,
     qcfg: QuantConfig = QuantConfig.off(),
     comp: Optional[qat.CompState] = None,
+    serve_art=None,
     tap: Optional[dict] = None,
     tap_name: Optional[str] = None,
 ) -> jax.Array:
     w = params["w"]
-    if qcfg.enabled:
-        if qcfg.act_quant:
-            x = qat.fake_quant_act(x)
-        w_eff = qat.fake_quant_weight(w, comp)
+    if qcfg.enabled and qcfg.act_quant:
+        x = qat.fake_quant_act(x)
+    _record_tap(tap, tap_name, x, w, comp)
+    if qcfg.enabled and qcfg.comp_mode == "serve" and serve_art is not None:
+        from repro.core.export import serve_dense
+
+        y = serve_dense(x, serve_art, use_ref=qcfg.use_ref_kernel)
     else:
-        w_eff = w
-    if tap is not None and tap_name is not None:
-        tap[tap_name] = {
-            "a_int": qat.quantize_act_int(x),
-            "w_int": qat.quantize_weight_int(w, comp),
-        }
-    y = jnp.einsum("...k,kn->...n", x, w_eff.astype(x.dtype))
+        w_eff = qat.fake_quant_weight(w, comp) if qcfg.enabled else w
+        y = jnp.einsum("...k,kn->...n", x, w_eff.astype(x.dtype))
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y
@@ -113,29 +138,29 @@ def apply_conv(
     padding: str = "SAME",
     qcfg: QuantConfig = QuantConfig.off(),
     comp: Optional[qat.CompState] = None,
+    serve_art=None,
     tap: Optional[dict] = None,
     tap_name: Optional[str] = None,
 ) -> jax.Array:
     """NHWC conv with HWIO kernel."""
     w = params["w"]
-    if qcfg.enabled:
-        if qcfg.act_quant:
-            x = qat.fake_quant_act(x)
-        w_eff = qat.fake_quant_weight(w, comp)
+    if qcfg.enabled and qcfg.act_quant:
+        x = qat.fake_quant_act(x)
+    _record_tap(tap, tap_name, x, w, comp)
+    if qcfg.enabled and qcfg.comp_mode == "serve" and serve_art is not None:
+        from repro.core.export import serve_conv
+
+        y = serve_conv(x, serve_art, stride=stride, padding=padding,
+                       use_ref=qcfg.use_ref_kernel)
     else:
-        w_eff = w
-    if tap is not None and tap_name is not None:
-        tap[tap_name] = {
-            "a_int": qat.quantize_act_int(x),
-            "w_int": qat.quantize_weight_int(w, comp),
-        }
-    y = jax.lax.conv_general_dilated(
-        x,
-        w_eff.astype(x.dtype),
-        window_strides=(stride, stride),
-        padding=padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-    )
+        w_eff = qat.fake_quant_weight(w, comp) if qcfg.enabled else w
+        y = jax.lax.conv_general_dilated(
+            x,
+            w_eff.astype(x.dtype),
+            window_strides=(stride, stride),
+            padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y

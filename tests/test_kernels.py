@@ -78,6 +78,35 @@ def test_lut_matmul_matches_dense_qat_layer():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_lut_matmul_k_sweep_accumulates_in_f32():
+    """Accumulation across many K steps must happen in f32, with a single
+    cast to the narrow out_dtype at the end.
+
+    Construction: K block 0 contributes a partial sum of 8192 per column
+    (f16 ulp there is 8); each of the remaining 32 blocks nets +2. An
+    out_dtype (f16) accumulator rounds every +2 away (8192 + 2 -> 8192) and
+    lands on 8192; f32 accumulation gives the exact 8256.
+    """
+    block_k, nblk, m, n = 128, 33, 8, 8
+    k = block_k * nblk
+    cb = jnp.asarray([-1, 1, 64] + [64] * 13, jnp.int8)
+    idx = np.zeros((k, n), np.int32)
+    idx[:block_k] = 2                       # value 64
+    for b in range(1, nblk):
+        blk = np.zeros((block_k, n), np.int32)
+        blk[:65] = 1                        # 65 x (+1)
+        idx[b * block_k:(b + 1) * block_k] = blk  # 63 x (-1)
+    packed = pack_indices(jnp.asarray(idx), block_k)
+    scale = jnp.ones((n,), jnp.float32)
+    x = jnp.ones((m, k), jnp.float16)
+    got = lut_matmul(x, packed, cb, scale, interpret=True)
+    want = lut_matmul_ref(x, packed, cb, scale, block_k=block_k)
+    assert got.dtype == jnp.float16
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.full((m, n), 8256.0, np.float16))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_encode_weights_snaps_to_nearest():
     cb = jnp.asarray([-50, 0, 50], jnp.int32)
     cb16 = jnp.pad(cb, (0, 13), constant_values=50)

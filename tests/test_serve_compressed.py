@@ -1,0 +1,351 @@
+"""Compressed serving parity suite: exported 4-bit LUT path vs QAT forward.
+
+Headline guarantee of the serving subsystem (`repro.core.export` +
+`comp_mode="serve"`): for any post-schedule comp tree, the packed-artifact
+forward through `lut_matmul` matches the QAT fake-quant forward to float
+round-off — per layer and for full-model logits, across codebook sizes,
+pruned and unpruned layers, and shapes that exercise the M/N/K padding path.
+
+Everything runs on CPU: the Pallas kernel in interpret mode for the smaller
+checks, the jnp oracle (`use_ref_kernel`) for the big full-model sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qat
+from repro.core.export import (
+    export_layer,
+    export_model,
+    export_summary,
+    serve_conv,
+    serve_dense,
+    servable,
+)
+from repro.core.runner import CnnRunner
+from repro.core.schedule import ScheduleConfig, energy_prioritized_compression
+from repro.core.weight_selection import SelectionConfig
+from repro.data.synthetic import SyntheticImages
+from repro.kernels.lut_matmul.ops import (
+    compress_layer_weights,
+    encode_weights,
+    lut_matmul,
+    pack_indices,
+)
+from repro.kernels.lut_matmul.ref import unpack_indices
+from repro.nn import cnn
+from repro.nn.layers import QuantConfig
+from repro.nn.spec import init_params
+
+CODEBOOKS = {
+    4: [-96, -32, 0, 64],
+    8: [-112, -64, -32, -8, 0, 16, 48, 96],
+    16: [-120, -96, -72, -56, -40, -28, -16, -8, 0, 8, 20, 32, 52, 76, 100,
+         124],
+}
+
+
+def restricted_comp(model, params, values, prune=()):
+    """Identity comp with every layer restricted to ``values``; layers named
+    in ``prune`` additionally get a 50% magnitude mask."""
+    comp = {}
+    for cl in model.comp_layers:
+        w = model.get_weight(params, cl.name)
+        c = qat.identity_comp(w.shape, w.dtype)
+        c["codebook"], c["codebook_k"] = qat.make_codebook(values)
+        if cl.name in prune:
+            c["mask"] = qat.magnitude_prune_mask(w, 0.5)
+        comp[cl.name] = c
+    return comp
+
+
+def logits_pair(model, params, state, comp, arts, x, *, use_ref=False):
+    l_fake, _, _ = model.apply(params, state, x, train=False,
+                               qcfg=QuantConfig.on(), comp=comp)
+    l_serve, _, _ = model.apply(params, state, x, train=False,
+                                qcfg=QuantConfig.serve(use_ref_kernel=use_ref),
+                                comp=comp, serve=arts)
+    return l_fake, l_serve
+
+
+def rel_err(got, want):
+    return float(jnp.linalg.norm(got - want)
+                 / jnp.maximum(jnp.linalg.norm(want), 1e-9))
+
+
+# ------------------------------------------------------------ per-layer parity
+
+
+@pytest.mark.parametrize("k", [4, 8, 16])
+@pytest.mark.parametrize("kdim,n", [(128, 64), (200, 130), (75, 10)])
+def test_dense_layer_parity(k, kdim, n):
+    """Exported dense layer == fake-quant dense, incl. non-multiple-of-block
+    M/N/K (the padding path) and a pruning mask."""
+    key = jax.random.PRNGKey(k * 1000 + kdim + n)
+    w = jax.random.normal(key, (kdim, n)) * 0.05
+    comp = qat.identity_comp(w.shape)
+    comp["codebook"], comp["codebook_k"] = qat.make_codebook(CODEBOOKS[k])
+    comp["mask"] = qat.magnitude_prune_mask(w, 0.4)
+
+    art = export_layer(w, comp, kind="dense")
+    assert art is not None and art.k_dim == kdim and art.n_dim == n
+
+    x = jax.random.normal(jax.random.fold_in(key, 1), (37, kdim))
+    got = serve_dense(x, art, interpret=True)
+    want = x @ qat.fake_quant_weight(w, comp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("k", [4, 8, 16])
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                            (1, "VALID")])
+def test_conv_layer_parity(k, stride, padding):
+    """Exported conv layer through im2col + LUT GEMM == fake-quant lax.conv."""
+    key = jax.random.PRNGKey(k + stride * 10)
+    w = jax.random.normal(key, (3, 3, 5, 12)) * 0.1   # K = 45: padding path
+    comp = qat.identity_comp(w.shape)
+    comp["codebook"], comp["codebook_k"] = qat.make_codebook(CODEBOOKS[k])
+
+    art = export_layer(w, comp, kind="conv")
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 9, 9, 5))
+    got = serve_conv(x, art, stride=stride, padding=padding, interpret=True)
+    w_fake = qat.fake_quant_weight(w, comp)
+    want = jax.lax.conv_general_dilated(
+        x, w_fake, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_unrestricted_layer_is_not_servable():
+    comp = qat.identity_comp((16, 8))
+    assert not servable(comp)
+    assert export_layer(jnp.ones((16, 8)), comp) is None
+
+
+def test_non_square_conv_kernel_rejected_at_export():
+    """serve_conv assumes square kernels; export must refuse, not mis-serve."""
+    w = jnp.ones((1, 3, 4, 8))
+    comp = qat.identity_comp(w.shape)
+    comp["codebook"], comp["codebook_k"] = qat.make_codebook(CODEBOOKS[4])
+    with pytest.raises(ValueError, match="square"):
+        export_layer(w, comp, kind="conv")
+
+
+# ----------------------------------------------------------- full-model parity
+
+
+@pytest.mark.parametrize("k", [4, 8, 16])
+def test_lenet_full_model_parity(k):
+    """Full LeNet logits: every layer served on the (interpreted) Pallas LUT
+    kernel vs the fake-quant forward; two layers pruned."""
+    model = cnn.lenet5()
+    key = jax.random.PRNGKey(k)
+    params = init_params(key, model.spec)
+    comp = restricted_comp(model, params, CODEBOOKS[k],
+                           prune=("conv2", "fc1"))
+    arts = export_model(model, params, comp)
+    assert set(arts) == {cl.name for cl in model.comp_layers}
+
+    x = jax.random.normal(key, (4, 32, 32, 3))
+    l_fake, l_serve = logits_pair(model, params, {}, comp, arts, x)
+    assert rel_err(l_serve, l_fake) < 1e-3
+    # served model still classifies identically on this batch
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(l_serve, -1)),
+                                  np.asarray(jnp.argmax(l_fake, -1)))
+
+
+@pytest.mark.parametrize("k", [4, 16])
+def test_resnet8_full_model_parity(k):
+    """Reduced ResNet-20 (3 stages x 1 block): full-model logits through the
+    serve path (jnp oracle for CPU speed; the Pallas path is covered by the
+    per-layer and LeNet tests) vs fake-quant, pruned + unpruned layers."""
+    model = cnn.resnet8()
+    key = jax.random.PRNGKey(100 + k)
+    params = init_params(key, model.spec)
+    state = init_params(key, model.state_spec)
+    comp = restricted_comp(model, params, CODEBOOKS[k],
+                           prune=("s2b1/conv1", "fc"))
+    arts = export_model(model, params, comp)
+    assert set(arts) == {cl.name for cl in model.comp_layers}
+    summary = export_summary(arts)
+    assert summary["compression_vs_int8"] > 1.0
+
+    x = jax.random.normal(key, (2, 32, 32, 3))
+    l_fake, l_serve = logits_pair(model, params, state, comp, arts, x,
+                                  use_ref=True)
+    assert rel_err(l_serve, l_fake) < 1e-5
+
+
+def test_resnet8_one_layer_on_pallas_path():
+    """Spot-check one ResNet conv (stride-2 downsample) on the interpreted
+    Pallas kernel inside the full model: mixed serve/fallback dispatch."""
+    model = cnn.resnet8()
+    key = jax.random.PRNGKey(5)
+    params = init_params(key, model.spec)
+    state = init_params(key, model.state_spec)
+    comp = restricted_comp(model, params, CODEBOOKS[8])
+    # only restrict s2b1 layers -> others have k=0 and must fall back
+    for cl in model.comp_layers:
+        if not cl.name.startswith("s2b1"):
+            comp[cl.name]["codebook_k"] = jnp.zeros((), jnp.int32)
+    arts = export_model(model, params, comp)
+    assert set(arts) == {"s2b1/conv1", "s2b1/conv2", "s2b1/down"}
+
+    x = jax.random.normal(key, (2, 32, 32, 3))
+    l_fake, l_serve = logits_pair(model, params, state, comp, arts, x)
+    # deep nets amplify fp32 accumulation-order noise: a ~1e-7 difference in
+    # a mid-network conv can push a downstream activation across a
+    # fake_quant_act rounding boundary (one full int8 step). 1e-2 on logits
+    # still means the two paths agree on every quantization bin but a few.
+    assert rel_err(l_serve, l_fake) < 1e-2
+
+
+def test_serve_without_artifacts_falls_back_to_fake_quant():
+    """comp_mode='serve' with an empty artifact dict must be exactly the
+    fake-quant forward (per-layer fallback)."""
+    model = cnn.lenet5()
+    key = jax.random.PRNGKey(9)
+    params = init_params(key, model.spec)
+    comp = restricted_comp(model, params, CODEBOOKS[8])
+    x = jax.random.normal(key, (2, 32, 32, 3))
+    l_fake, l_serve = logits_pair(model, params, {}, comp, {}, x)
+    np.testing.assert_array_equal(np.asarray(l_fake), np.asarray(l_serve))
+
+
+# ------------------------------------------------------- pruning honored as 0
+
+
+def test_pruned_weights_serve_as_exact_zero_without_zero_in_codebook():
+    """Even when C_l lacks 0, exported pruned positions dequantize to exactly
+    0 (0 is force-included): zero-gated MACs stay zero-gated on the array."""
+    key = jax.random.PRNGKey(11)
+    w = jax.random.normal(key, (64, 32)) * 0.05
+    comp = qat.identity_comp(w.shape)
+    comp["codebook"], comp["codebook_k"] = qat.make_codebook([-80, -20, 30, 90])
+    comp["mask"] = qat.magnitude_prune_mask(w, 0.5)
+
+    art = export_layer(w, comp, kind="dense")
+    assert 0 in [int(v) for v in np.asarray(art.codebook)]
+    idx = unpack_indices(art.packed, art.block_k)[: art.k_dim]
+    w_served = np.asarray(art.codebook, np.int32)[np.asarray(idx)]
+    mask = np.asarray(comp["mask"])
+    assert (w_served[mask == 0] == 0).all()
+
+
+# --------------------------------------------------- schedule regression test
+
+
+@pytest.fixture(scope="module")
+def scheduled_lenet():
+    """Tiny LeNet through QAT + a one-layer compression schedule."""
+    runner = CnnRunner(cnn.lenet5(), SyntheticImages(seed=3), batch_size=64,
+                       lr=2e-3, seed=0)
+    params, state, opt_state, comp = runner.init()
+    params, state, opt_state, _ = runner.train(params, state, opt_state,
+                                               comp, 200)
+    stats = runner.profile(params, state, comp, n_batches=1, max_tiles=6)
+    cfg = ScheduleConfig(prune_ratios=(0.5,), k_targets=(16,), delta_acc=0.08,
+                         finetune_steps=20, trial_finetune_steps=10,
+                         eval_batches=2, max_layers=1, min_energy_share=0.0)
+    sel = SelectionConfig(k_init=20, k_target=16, delta_acc=0.08,
+                          score_batches=1, accept_batches=1,
+                          max_score_candidates=4)
+    params, state, opt_state, comp, result = energy_prioritized_compression(
+        runner, params, state, opt_state, comp, stats, cfg, sel)
+    return runner, params, state, comp, result, cfg
+
+
+def test_schedule_export_serve_accuracy_matches_reported(scheduled_lenet):
+    """schedule -> export -> compressed inference: the serve-path accuracy on
+    the schedule's own eval batches equals the reported acc_final (parity
+    means at most a borderline sample or two can flip)."""
+    runner, params, state, comp, result, cfg = scheduled_lenet
+    accepted = [d for d in result.decisions if d.accepted]
+    assert accepted, "schedule must accept its one layer at delta=0.08"
+    arts = export_model(runner.model, params, comp)
+    assert accepted[0].layer in arts
+
+    qserve = QuantConfig.serve(use_ref_kernel=True)
+    correct = 0
+    for i in range(cfg.eval_batches):
+        x, y = runner.dataset.batch(i, runner.batch_size, "val")
+        logits, _, _ = runner.model.apply(params, state, x, train=False,
+                                          qcfg=qserve, comp=comp, serve=arts)
+        correct += int(jnp.sum((jnp.argmax(logits, -1) == y)))
+    acc_serve = correct / (cfg.eval_batches * runner.batch_size)
+    noise = 2.0 / (cfg.eval_batches * runner.batch_size)
+    assert abs(acc_serve - result.acc_final) <= noise, (
+        acc_serve, result.acc_final)
+
+
+# ------------------------------------------------------- kernel edge cases
+
+
+def test_pack_indices_rejects_bad_k():
+    idx = jnp.zeros((100, 8), jnp.int32)
+    with pytest.raises(ValueError, match="multiple of block_k"):
+        pack_indices(idx, 128)
+    with pytest.raises(ValueError, match="even"):
+        pack_indices(jnp.zeros((128, 8), jnp.int32), 127)
+
+
+def test_lut_matmul_rejects_unpadded_k():
+    x = jnp.zeros((8, 100))
+    packed = jnp.zeros((50, 8), jnp.int8)
+    with pytest.raises(ValueError, match="multiple of block_k"):
+        lut_matmul(x, packed, jnp.zeros((16,), jnp.int8), jnp.ones((8,)),
+                   interpret=True)
+
+
+def test_encode_weights_stable_with_duplicate_codebook_entries():
+    """Padded/duplicate codebooks must encode to indices that decode to the
+    same value the projection picked (ties -> lowest index)."""
+    cb = jnp.asarray([-40, -40, 0, 10, 10, 10] + [10] * 10, jnp.int32)
+    w = jnp.asarray([[-40, -39, 0, 10, 10, 7]], jnp.int32)
+    idx = encode_weights(w, cb)
+    decoded = np.asarray(cb)[np.asarray(idx)]
+    np.testing.assert_array_equal(decoded, [[-40, -40, 0, 10, 10, 10]])
+    # duplicates resolve to the first occurrence
+    assert int(idx[0, 0]) == 0 and int(idx[0, 3]) == 3
+
+
+def test_all_negative_codebook_roundtrip():
+    """An all-negative restricted set survives encode -> pack -> unpack ->
+    dequant and matches the fake-quant projection."""
+    key = jax.random.PRNGKey(13)
+    w = jax.random.normal(key, (128, 24)) * 0.05
+    values = [-120, -80, -45, -20, -5]
+    packed, cb, scale = compress_layer_weights(w, values, block_k=128)
+    assert set(int(v) for v in np.asarray(cb)).issubset(set(values))
+
+    comp = qat.identity_comp(w.shape)
+    comp["codebook"], comp["codebook_k"] = qat.make_codebook(values)
+    w_fake = qat.fake_quant_weight(w, comp)
+    idx = unpack_indices(packed, 128)
+    w_served = (np.asarray(cb, np.int32)[np.asarray(idx)]
+                * np.asarray(scale)[None, :])
+    np.testing.assert_allclose(w_served, np.asarray(w_fake), rtol=1e-6,
+                               atol=1e-7)
+
+
+def test_compress_layer_weights_force_includes_zero_for_masks():
+    key = jax.random.PRNGKey(17)
+    w = jax.random.normal(key, (128, 16)) * 0.05
+    mask = qat.magnitude_prune_mask(w, 0.5)
+    values = [-90, -30, 40, 110]           # no 0
+    packed, cb, scale = compress_layer_weights(w, values, mask=mask,
+                                               block_k=128)
+    cb_vals = [int(v) for v in np.asarray(cb)]
+    assert 0 in cb_vals
+    idx = unpack_indices(packed, 128)
+    w_served = np.asarray(cb, np.int32)[np.asarray(idx)]
+    assert (w_served[np.asarray(mask) == 0] == 0).all()
+    # a full 16-value set without 0 + mask cannot fit the forced 0
+    full_no_zero = [v for v in CODEBOOKS[16] if v != 0] + [127]
+    with pytest.raises(ValueError, match="forced 0"):
+        compress_layer_weights(w, full_no_zero, mask=mask)

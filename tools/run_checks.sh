@@ -16,7 +16,7 @@ case "${1:-}" in
   --fast)
     echo "== tier-1 tests (fast subset) =="
     python -m pytest -x -q tests/test_kernels.py tests/test_core_energy.py \
-      tests/test_profiler.py
+      tests/test_profiler.py tests/test_serve_compressed.py
     ;;
   "")
     echo "== tier-1 tests =="
@@ -40,6 +40,17 @@ speed = d["profile_speedup_batched_vs_looped"]
 assert d["all_within_tolerance"], d
 assert speed >= 5.0, f"batched profiler speedup regressed: {speed:.1f}x < 5x"
 print(f"profiler speedup {speed:.1f}x (>= 5x), parity within tolerance")
+
+# compressed serving gates: LUT forward must match the dense fake-quant
+# forward, stay >= 3.5x smaller than int8 weights, and the CPU serve
+# dispatch must not regress below 5% of dense matmul throughput
+assert d["serve_forward_rel_err"] < 2e-2, d["serve_forward_rel_err"]
+comp = d["serve_weight_compression_vs_bf16"]
+assert comp >= 3.5, f"serve weight compression regressed: {comp:.2f}x"
+ratio = d["serve_vs_dense_throughput"]
+assert ratio >= 0.05, f"compressed serve dispatch regressed: {ratio:.3f}x"
+print(f"compressed serve: parity ok, {comp:.1f}x weight compression vs "
+      f"bf16, {ratio:.2f}x dense throughput on CPU")
 PY
 
 echo "All checks passed."
