@@ -24,9 +24,8 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import best_of, emit
 from repro.core import qat
 from repro.core.export import export_layer, serve_dense
 from repro.core.mac_model import DEFAULT_COEFFS
@@ -148,17 +147,7 @@ def run():
     batch_err = rel_err(got_batch)
     shard_err = rel_err(got_shard)
 
-    def best_of(fn, n=3):
-        """min wall time over n runs — one scheduler hiccup on a loaded
-        host must not fail the >= 5x gate in tools/run_checks.sh."""
-        best = float("inf")
-        for _ in range(n):
-            t = time.time()
-            fn()
-            best = min(best, time.time() - t)
-        return best
-
-    t_loop = best_of(looped_seed, 2)   # slowest variant: 2 repeats suffice
+    t_loop = best_of(looped_seed, n=2)  # slowest variant: 2 repeats suffice
     t_batch = best_of(batched)
     t_shard = best_of(sharded)
 
@@ -217,16 +206,9 @@ def run():
     serve_err = float(jnp.linalg.norm(y_serve - y_dense)
                       / jnp.linalg.norm(y_dense))
 
-    def best_of_fwd(fn, *a, n=5):
-        best = float("inf")
-        for _ in range(n):
-            t = time.time()
-            jax.block_until_ready(fn(*a))
-            best = min(best, time.time() - t)
-        return best
-
-    t_dense = best_of_fwd(dense_fwd, xs, w_fake)
-    t_serve = best_of_fwd(serve_fwd, xs)
+    t_dense = best_of(lambda: jax.block_until_ready(dense_fwd(xs, w_fake)),
+                      n=5)
+    t_serve = best_of(lambda: jax.block_until_ready(serve_fwd(xs)), n=5)
     for label, secs in (("serve_forward_dense_fakequant", t_dense),
                         ("serve_forward_compressed_lut", t_serve)):
         rows.append({

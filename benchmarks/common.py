@@ -38,25 +38,26 @@ _MODELS = {
                              SyntheticImages(num_classes=100, seed=13)),
 }
 
-_CACHE: Dict[str, dict] = {}
+_CACHE: Dict[tuple, dict] = {}
 
 
 def trained(model_key: str, *, qat_steps: int | None = None) -> dict:
-    """QAT-train a model once per process and profile it."""
-    if model_key in _CACHE:
-        return _CACHE[model_key]
+    """QAT-train a model once per (model, budget) per process and profile it."""
+    n = qat_steps if qat_steps is not None else steps(250)
+    key = (model_key, n)
+    if key in _CACHE:
+        return _CACHE[key]
     model, data = _MODELS[model_key]()
     runner = CnnRunner(model, data, batch_size=64, lr=2e-3, seed=0)
     params, state, opt_state, comp = runner.init()
-    n = qat_steps if qat_steps is not None else steps(250)
     params, state, opt_state, loss = runner.train(params, state, opt_state,
                                                   comp, n)
     acc0 = runner.accuracy(params, state, comp, n_batches=4)
     stats = runner.profile(params, state, comp, n_batches=1, max_tiles=8)
-    _CACHE[model_key] = dict(runner=runner, params=params, state=state,
-                             opt_state=opt_state, comp=comp, stats=stats,
-                             acc0=acc0, loss=loss)
-    return _CACHE[model_key]
+    _CACHE[key] = dict(runner=runner, params=params, state=state,
+                       opt_state=opt_state, comp=comp, stats=stats,
+                       acc0=acc0, loss=loss)
+    return _CACHE[key]
 
 
 def fresh_copy(bundle: dict) -> dict:
@@ -69,6 +70,17 @@ def fresh_copy(bundle: dict) -> dict:
     out["state"] = jax.tree.map(lambda x: x, bundle["state"])
     out["opt_state"] = jax.tree.map(lambda x: x, bundle["opt_state"])
     return out
+
+
+def best_of(fn, *args, n: int = 3) -> float:
+    """Min wall time of ``fn(*args)`` over n runs — one scheduler hiccup on a
+    loaded host must not fail the speedup gates in tools/run_checks.sh."""
+    best = float("inf")
+    for _ in range(n):
+        t = time.time()
+        fn(*args)
+        best = min(best, time.time() - t)
+    return best
 
 
 def emit(name: str, t0: float, rows, derived: dict):

@@ -5,10 +5,9 @@ from __future__ import annotations
 
 import time
 
-import jax
 
 from benchmarks.common import emit, fresh_copy, steps, trained
-from repro.core import baselines, qat
+from repro.core import baselines
 
 
 def _energy_and_acc(b, comp, params, state):

@@ -17,6 +17,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_kernels,
+        bench_schedule,
         fig1_weight_power,
         fig2_grouping_features,
         fig3_activation_heatmaps,
@@ -38,6 +39,7 @@ def main() -> None:
         ("table4_weight_selection", table4_weight_selection.run),
         ("fig4_components", fig4_components.run),
         ("bench_kernels", bench_kernels.run),
+        ("bench_schedule", bench_schedule.run),
         ("roofline", roofline.run),
     ]
     only = os.environ.get("BENCH_ONLY")

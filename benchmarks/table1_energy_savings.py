@@ -9,7 +9,6 @@ see EXPERIMENTS.md for the scaling note).
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
 from benchmarks.common import emit, fresh_copy, steps, trained

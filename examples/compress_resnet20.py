@@ -48,6 +48,11 @@ def main():
     ap.add_argument("--use-ref-kernel", action="store_true",
                     help="serve through the jnp oracle instead of the "
                          "(interpreted on CPU) Pallas kernel")
+    ap.add_argument("--search-mode", choices=("batched", "serial"),
+                    default="batched",
+                    help="schedule candidate search: vmapped sweep of all "
+                         "(prune, k) configs per layer, or the serial "
+                         "trial-and-rollback reference")
     args = ap.parse_args()
 
     model = cnn.resnet8() if args.reduced else cnn.resnet20()
@@ -61,7 +66,8 @@ def main():
         schedule=ScheduleConfig(prune_ratios=(0.7, 0.5), k_targets=(16,),
                                 delta_acc=0.05, finetune_steps=20,
                                 trial_finetune_steps=12, eval_batches=2,
-                                max_layers=2 if args.reduced else 4),
+                                max_layers=2 if args.reduced else 4,
+                                search_mode=args.search_mode),
         selection=SelectionConfig(k_init=24, k_target=16, delta_acc=0.05,
                                   score_batches=1, accept_batches=2,
                                   max_score_candidates=4 if args.reduced

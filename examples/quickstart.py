@@ -27,7 +27,9 @@ def main():
         profile_max_tiles=6,
         final_finetune_steps=30,
         eval_batches=2,
-        schedule=ScheduleConfig(prune_ratios=(0.5,), k_targets=(16,),
+        # two candidate configs per layer: the default search_mode="batched"
+        # sweeps both in one vmapped trial (see docs/schedule.md)
+        schedule=ScheduleConfig(prune_ratios=(0.7, 0.5), k_targets=(16,),
                                 delta_acc=0.06, finetune_steps=15,
                                 trial_finetune_steps=10, eval_batches=2,
                                 max_layers=2),

@@ -11,10 +11,8 @@ data, CheckpointManager + resilient loop, straggler monitor.
 """
 
 import argparse
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
@@ -22,7 +20,6 @@ from repro.core.lm_compress import init_lm_comp, lm_comp_layers, set_codebook
 from repro.data.synthetic import SyntheticTokens
 from repro.distributed.fault import StragglerMonitor, run_resilient_loop
 from repro.launch.train import StepConfig, init_train_state, make_train_step
-from repro.models.config import model_param_count
 from repro.models.lm import build_lm
 from repro.nn.spec import spec_count
 

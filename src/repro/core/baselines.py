@@ -17,7 +17,6 @@ import dataclasses
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import qat
 from repro.core.weight_selection import (

@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 from repro.core.runner import CnnRunner
 from repro.core.schedule import (

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import qat
 from repro.models.lm import LMModel
-from repro.nn.spec import ParamSpec, is_spec
+from repro.nn.spec import ParamSpec
 
 # sub-module name -> weight keys eligible for weight-value restriction
 ELIGIBLE: Dict[str, Tuple[str, ...]] = {

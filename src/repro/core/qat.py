@@ -26,10 +26,11 @@ channel; quantization scales are per-output-channel over all other axes.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import ad_checkpoint as _adc
 
 K_MAX = 32          # maximum codebook size the pipeline ever uses (paper: 32)
@@ -60,6 +61,26 @@ def make_codebook(values) -> Tuple[jax.Array, jax.Array]:
     return jnp.asarray(padded, jnp.int32), jnp.asarray(k, jnp.int32)
 
 
+def make_codebooks(value_sets) -> Tuple[jax.Array, jax.Array]:
+    """Batched `make_codebook`: (E, K_MAX) sorted padded codebooks + (E,)
+    valid counts, built host-side and shipped as TWO device arrays.
+
+    The lockstep elimination evaluates dozens of trial codebooks per round;
+    per-set `make_codebook` calls would cost two dispatches each."""
+    cbs = np.zeros((len(value_sets), K_MAX), np.int32)
+    ks = np.zeros((len(value_sets),), np.int32)
+    for e, values in enumerate(value_sets):
+        vals = sorted(int(v) for v in values)
+        k = len(vals)
+        if k > K_MAX:
+            raise ValueError(f"codebook size {k} exceeds K_MAX={K_MAX}")
+        ks[e] = k
+        if k:
+            cbs[e, :k] = vals
+            cbs[e, k:] = vals[-1]
+    return jnp.asarray(cbs), jnp.asarray(ks)
+
+
 def weight_scale(w: jax.Array) -> jax.Array:
     """Per-output-channel symmetric scale, broadcastable against ``w``."""
     reduce_axes = tuple(range(w.ndim - 1))
@@ -72,12 +93,21 @@ def project_to_codebook(q: jax.Array, codebook: jax.Array, k: jax.Array) -> jax.
 
     ``q`` int32 of any shape, ``codebook`` (K_MAX,) int32 sorted. ``k == 0``
     means unrestricted (identity). Ties break toward the smaller value.
+
+    Implemented in the *value* domain: the nearest-member map is resolved
+    once for all 256 possible int8 values (256 x K_MAX mini-table) and
+    applied to the weights as a single gather. The naive form — a
+    ``|w| x K_MAX`` distance matrix per projection — was the dominant
+    compute of every train/eval step once the candidate sweep batched away
+    the dispatch overhead (|w| ~ 6e4 per LeNet eval, x candidates x trial
+    codebooks per sweep round).
     """
     valid = jnp.arange(K_MAX) < jnp.maximum(k, 1)
-    dist = jnp.abs(q[..., None] - codebook[(None,) * q.ndim])
+    vals = jnp.arange(-128, 128, dtype=jnp.int32)
+    dist = jnp.abs(vals[:, None] - codebook[None, :])
     dist = jnp.where(valid, dist, jnp.int32(1 << 20))
-    idx = jnp.argmin(dist, axis=-1)
-    projected = codebook[idx]
+    proj_lut = codebook[jnp.argmin(dist, axis=-1)]       # (256,)
+    projected = proj_lut[q + 128]
     return jnp.where(k > 0, projected, q)
 
 
@@ -146,3 +176,45 @@ def apply_comp_dtype(comp: CompState, dtype) -> CompState:
     out = dict(comp)
     out["mask"] = comp["mask"].astype(dtype)
     return out
+
+
+# ----------------------------------------------------------- stacked pytrees
+#
+# The schedule's batched candidate sweep (`repro.core.schedule`,
+# ``search_mode="batched"``) stacks N per-candidate pytrees — comp dicts, but
+# also params/opt_state once the trial fine-tunes diverge — along a new
+# leading *candidate* axis and runs the jitted train/eval steps under
+# ``jax.vmap`` (optionally ``shard_map`` over a 1-D device mesh). The tree
+# structure is fixed, so the whole sweep compiles once per candidate count.
+
+
+def stack_pytrees(trees: Sequence):
+    """Stack identically-structured pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def broadcast_pytree(tree, n: int):
+    """Replicate every leaf ``n`` times along a new leading candidate axis."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+
+def index_pytree(tree, i: int):
+    """Slice candidate ``i`` out of a stacked pytree."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def pad_leading(tree, n_to: int):
+    """Pad the leading axis up to ``n_to`` by repeating the last entry.
+
+    Used to round a candidate batch up to a multiple of the sweep-mesh size;
+    callers discard the padded slots (the repeats are correct-by-construction
+    but redundant)."""
+
+    def one(x):
+        pad = n_to - x.shape[0]
+        if pad <= 0:
+            return x
+        return jnp.concatenate([x, jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])])
+
+    return jax.tree.map(one, tree)

@@ -9,15 +9,15 @@ codebook/mask edits made by the scheduler never trigger recompiles.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import zlib
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import qat
-from repro.core.layer_energy import LayerEnergyModel, MatmulDims
+from repro.core.layer_energy import LayerEnergyModel
 from repro.core.stats import (
     LayerStats,
     collect_layer_stats,
@@ -47,6 +47,7 @@ class CnnRunner:
     seed: int = 0
     use_kernel_stats: bool = False
     profile_mesh: Optional[object] = None  # 1-D tile mesh (sharding.tile_mesh)
+    sweep_mesh: Optional[object] = None    # 1-D candidate mesh (sharding.sweep_mesh)
 
     def __post_init__(self):
         self.optimizer = adamw(self.lr)
@@ -75,6 +76,28 @@ class CnnRunner:
 
         self._train_step = jax.jit(train_step)
         self._eval_step = jax.jit(eval_step)
+        # candidate-sweep entry points (schedule ``search_mode="batched"``):
+        # vmap over the leading candidate axis of the stacked trees, the data
+        # batch shared across candidates. comp is a pure data argument with a
+        # fixed tree structure, so one sweep compiles once per candidate
+        # count and codebook/mask edits never retrigger compilation.
+        self._train_step_raw = train_step
+        self._eval_step_raw = eval_step
+        self._cand_train_step = jax.jit(
+            jax.vmap(train_step, in_axes=(0, 0, 0, 0, None)))
+        self._cand_eval_step = jax.jit(
+            jax.vmap(eval_step, in_axes=(0, 0, 0, None)))
+        self._comp_eval_step = jax.jit(
+            jax.vmap(eval_step, in_axes=(None, None, 0, None)))
+
+        def gather_eval(params_s, state_s, comps_e, idx, batch):
+            p = jax.tree.map(lambda x: x[idx], params_s)
+            s = jax.tree.map(lambda x: x[idx], state_s)
+            return jax.vmap(eval_step, in_axes=(0, 0, 0, None))(
+                p, s, comps_e, batch)
+
+        self._gather_eval_step = jax.jit(gather_eval)
+        self._sweep_sharded = None
         self._tap_fn = jax.jit(
             lambda params, state, comp, x: model.apply(
                 params, state, x, train=False, qcfg=qcfg, comp=comp,
@@ -117,6 +140,145 @@ class CnnRunner:
         for i in range(n_batches):
             batch = self.dataset.batch(i, self.batch_size, split)
             correct += int(self._eval_step(params, state, comp, batch))
+        return correct / (n_batches * self.batch_size)
+
+    # ------------------------------------------------------- candidate sweep
+
+    def _sweep_fns(self):
+        """(train, eval, comp_eval) batched steps, honoring ``sweep_mesh``.
+
+        Without a mesh these are the plain vmapped steps; with one, each is
+        wrapped in `shard_map` over the 1-D candidate axis — every device
+        trains/evaluates its local candidate slice, no collectives (the
+        accept decision only needs the gathered per-candidate accuracies).
+        """
+        if self.sweep_mesh is None:
+            return (self._cand_train_step, self._cand_eval_step,
+                    self._comp_eval_step)
+        if self._sweep_sharded is None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec
+            from repro.distributed.sharding import SWEEP_AXIS
+
+            mesh = self.sweep_mesh
+            cand = PartitionSpec(SWEEP_AXIS)
+            rep = PartitionSpec()
+            vt = jax.vmap(self._train_step_raw, in_axes=(0, 0, 0, 0, None))
+            ve = jax.vmap(self._eval_step_raw, in_axes=(0, 0, 0, None))
+            vc = jax.vmap(self._eval_step_raw, in_axes=(None, None, 0, None))
+            self._sweep_sharded = (
+                jax.jit(shard_map(
+                    vt, mesh, in_specs=(cand, cand, cand, cand, rep),
+                    out_specs=cand, check_rep=False)),
+                jax.jit(shard_map(
+                    ve, mesh, in_specs=(cand, cand, cand, rep),
+                    out_specs=cand, check_rep=False)),
+                jax.jit(shard_map(
+                    vc, mesh, in_specs=(rep, rep, cand, rep),
+                    out_specs=cand, check_rep=False)),
+            )
+        return self._sweep_sharded
+
+    def _sweep_multiple(self) -> int:
+        if self.sweep_mesh is None:
+            return 1
+        from repro.distributed.sharding import SWEEP_AXIS
+
+        return int(self.sweep_mesh.shape[SWEEP_AXIS])
+
+    @staticmethod
+    def _n_candidates(comps) -> int:
+        return int(jax.tree.leaves(comps)[0].shape[0])
+
+    def train_batched(self, params, state, opt_state, comps, n_steps: int,
+                      start_step: int = 0):
+        """Train N stacked candidates in lockstep, one vmapped step per batch.
+
+        ``params/state/opt_state/comps`` carry a leading candidate axis (see
+        `qat.stack_pytrees` / `qat.broadcast_pytree`). Every candidate sees
+        exactly the batch stream the serial path would feed it, so the
+        per-candidate trajectories reproduce serial trial fine-tunes.
+        Returns (params, state, opt_state, per-candidate final loss).
+        """
+        train_fn, _, _ = self._sweep_fns()
+        n = self._n_candidates(comps)
+        m = self._sweep_multiple()
+        n_pad = -(-n // m) * m
+        if n_pad != n:
+            params, state, opt_state, comps = (
+                qat.pad_leading(t, n_pad)
+                for t in (params, state, opt_state, comps))
+        loss = jnp.full((n_pad,), jnp.nan)
+        for i in range(n_steps):
+            batch = self.dataset.batch(start_step + i, self.batch_size,
+                                       "train")
+            params, state, opt_state, loss = train_fn(
+                params, state, opt_state, comps, batch)
+        if n_pad != n:
+            params, state, opt_state = (
+                jax.tree.map(lambda x: x[:n], t)
+                for t in (params, state, opt_state))
+            loss = loss[:n]
+        return params, state, opt_state, np.asarray(jax.device_get(loss))
+
+    def accuracy_batched(self, params, state, comps, n_batches: int = 8,
+                         split: str = "val") -> np.ndarray:
+        """Per-candidate accuracy vector: stacked params/state/comps."""
+        _, eval_fn, _ = self._sweep_fns()
+        n = self._n_candidates(comps)
+        m = self._sweep_multiple()
+        n_pad = -(-n // m) * m
+        if n_pad != n:
+            params, state, comps = (
+                qat.pad_leading(t, n_pad) for t in (params, state, comps))
+        correct = jnp.zeros((n_pad,), jnp.int32)
+        for i in range(n_batches):
+            batch = self.dataset.batch(i, self.batch_size, split)
+            correct = correct + eval_fn(params, state, comps, batch)
+        correct = np.asarray(jax.device_get(correct), np.float64)[:n]
+        return correct / (n_batches * self.batch_size)
+
+    def accuracy_comps(self, params, state, comps, n_batches: int = 8,
+                       split: str = "val") -> np.ndarray:
+        """Accuracy of N stacked comp variants sharing one params/state —
+        one vmapped (or sharded) dispatch instead of one eval per variant.
+        The schedule's lockstep elimination uses `accuracy_gather` (variants
+        against *per-candidate* params); this is the shared-params form for
+        ablations and sweeps over comp settings."""
+        _, _, comp_fn = self._sweep_fns()
+        n = self._n_candidates(comps)
+        m = self._sweep_multiple()
+        n_pad = -(-n // m) * m
+        if n_pad != n:
+            comps = qat.pad_leading(comps, n_pad)
+        correct = jnp.zeros((n_pad,), jnp.int32)
+        for i in range(n_batches):
+            batch = self.dataset.batch(i, self.batch_size, split)
+            correct = correct + comp_fn(params, state, comps, batch)
+        correct = np.asarray(jax.device_get(correct), np.float64)[:n]
+        return correct / (n_batches * self.batch_size)
+
+    def accuracy_gather(self, params_s, state_s, comps_e, idx,
+                        n_batches: int = 8, split: str = "val") -> np.ndarray:
+        """Accuracy of E comp variants, element e using the params/state of
+        stacked candidate ``idx[e]``.
+
+        This serves `lockstep_backward_elimination`: one dispatch evaluates a
+        whole elimination round's trial codebooks across ALL sweep candidates
+        (each against its own fine-tuned weights). The candidate gather runs
+        inside the jit, so E-element rounds cost one compiled call per
+        distinct E (callers pad to fixed capacities). Always runs through
+        the vmapped step — ``sweep_mesh`` shards the train/accept stages,
+        but gathered per-request evals stay single-replica for now.
+        """
+        idx = jnp.asarray(idx, jnp.int32)
+        n_e = self._n_candidates(comps_e)
+        correct = jnp.zeros((n_e,), jnp.int32)
+        for i in range(n_batches):
+            batch = self.dataset.batch(i, self.batch_size, split)
+            correct = correct + self._gather_eval_step(
+                params_s, state_s, comps_e, idx, batch)
+        correct = np.asarray(jax.device_get(correct), np.float64)
         return correct / (n_batches * self.batch_size)
 
     # ---------------------------------------------------------------- profile
@@ -217,16 +379,26 @@ class CnnRunner:
     def refresh_counts(self, params, comp,
                        models: Dict[str, LayerEnergyModel]) -> Dict[str, LayerEnergyModel]:
         """Recompute weight-value histograms after params/comp changed."""
-        from repro.core.layer_energy import weight_value_counts
-
         out = {}
         for cl in self.model.comp_layers:
-            m = models[cl.name]
-            w = self.model.get_weight(params, cl.name)
-            w_int = qat.quantize_weight_int(w, comp[cl.name])
-            w_int = conv_weight_matrix(w_int) if cl.kind == "conv" else w_int.T
-            out[cl.name] = m.with_counts(weight_value_counts(w_int, m.dims))
+            out[cl.name] = self.refresh_layer_counts(params, comp, models,
+                                                     cl.name)
         return out
+
+    def refresh_layer_counts(self, params, comp,
+                             models: Dict[str, LayerEnergyModel],
+                             layer: str) -> LayerEnergyModel:
+        """One layer's refreshed histogram — the candidate sweep's per-trial
+        ΔE refresh only needs the layer under search, so it skips the other
+        layers' quantize dispatches."""
+        from repro.core.layer_energy import weight_value_counts
+
+        cl = self.model.comp_layer(layer)
+        m = models[layer]
+        w = self.model.get_weight(params, layer)
+        w_int = qat.quantize_weight_int(w, comp[layer])
+        w_int = conv_weight_matrix(w_int) if cl.kind == "conv" else w_int.T
+        return m.with_counts(weight_value_counts(w_int, m.dims))
 
 
 def total_energy(models: Dict[str, LayerEnergyModel]) -> float:

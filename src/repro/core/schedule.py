@@ -6,11 +6,32 @@ processed in descending order. For each layer we try candidate configurations
 estimated energy saving), and accept the first whose post-finetune *global*
 validation accuracy stays above ``acc0 - δ``. Low-energy layers therefore
 naturally receive milder compression — exactly the behaviour of Table 2.
+
+Two search modes implement the same accept semantics:
+
+* ``search_mode="serial"`` — the reference trial-and-rollback loop: one
+  candidate at a time, each paying its own trial fine-tune, greedy weight
+  selection and eval before rolling back on reject.
+* ``search_mode="batched"`` (default) — the candidate sweep: all candidate
+  comp states for a layer are stacked along a leading axis
+  (`qat.stack_pytrees`) and the trial fine-tune + accuracy evals run for the
+  whole candidate set in one vmapped dispatch per step
+  (`CnnRunner.train_batched` / `accuracy_batched`); the greedy weight-set
+  eliminations of all candidates advance in lockstep
+  (`weight_selection.lockstep_backward_elimination`), fusing each round's
+  codebook evals across candidates into one gathered dispatch
+  (`CnnRunner.accuracy_gather`). Accept-the-most-aggressive becomes a
+  single scan over the per-candidate accuracy vector against the
+  ``acc0 - δ`` floor — because `_config_order` sorts most-aggressive-first,
+  the first passing index is exactly the candidate the serial walk would
+  accept. An optional 1-D device mesh (`CnnRunner.sweep_mesh`,
+  `repro.distributed.sharding.sweep_mesh`) shards the candidate axis via
+  `shard_map`, mirroring the profiler's tile mesh. Decision parity with the
+  serial walk is exact (see docs/schedule.md) and gated in CI.
 """
 
 from __future__ import annotations
 
-import copy
 import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
@@ -18,13 +39,13 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core import qat
-from repro.core.layer_energy import LayerEnergyModel, layer_energy_from_counts
 from repro.core.weight_selection import (
     SelectionConfig,
     SelectionReport,
     codebook_comp,
     greedy_backward_elimination,
     initial_candidate_set,
+    lockstep_backward_elimination,
 )
 
 
@@ -40,6 +61,7 @@ class ScheduleConfig:
     eval_batches: int = 4
     min_energy_share: float = 0.01  # skip layers below this ρ (tiny fc heads)
     max_layers: Optional[int] = None  # cap processed layers (tests)
+    search_mode: str = "batched"    # "batched" candidate sweep | "serial"
 
 
 @dataclasses.dataclass
@@ -75,11 +97,205 @@ class ScheduleResult:
         return 1.0 - self.energy_after / max(self.energy_before, 1e-12)
 
 
+# upper bound on how many gathered param/comp copies one lockstep eval may
+# materialize at once (memory guard; requests beyond it are chunked)
+_MAX_EVAL_FANOUT = 64
+
+
 def _config_order(cfg: ScheduleConfig) -> List[Tuple[float, int]]:
     """All (prune, k) combos, most aggressive (highest expected saving) first."""
     combos = [(p, k) for p in cfg.prune_ratios for k in cfg.k_targets]
     # higher prune + smaller k first
     return sorted(combos, key=lambda pk: (-pk[0], pk[1]))
+
+
+def _sweep_layer_serial(runner, params, state, opt_state, comp, models,
+                        layer, share, acc0, cfg, sel_cfg, verbose):
+    """Reference trial-and-rollback walk: one candidate config at a time."""
+    e_before = models[layer].energy
+    tried: List[Tuple[float, int]] = []
+    for prune, k_target in _config_order(cfg):
+        tried.append((prune, k_target))
+        t0 = time.time()
+        # --- trial state (rollback on reject)
+        t_params, t_state, t_opt = params, state, opt_state
+        t_comp = {n: dict(c) for n, c in comp.items()}
+
+        # 1. prune
+        w = runner.model.get_weight(t_params, layer)
+        t_comp[layer]["mask"] = qat.magnitude_prune_mask(w, prune)
+
+        # 2. fine-tune with the mask (paper: pruning first, then finetune)
+        if cfg.trial_finetune_steps:
+            t_params, t_state, t_opt, _ = runner.train(
+                t_params, t_state, t_opt, t_comp, cfg.trial_finetune_steps)
+
+        # 3. weight-set selection on the pruned layer
+        t_models = runner.refresh_counts(t_params, t_comp, models)
+        lsel = dataclasses.replace(sel_cfg, k_target=k_target)
+        init_set = initial_candidate_set(
+            t_models[layer].counts, t_models[layer].lut, lsel)
+
+        def eval_with_codebook(values, n_batches, _layer=layer,
+                               _params=t_params, _state=t_state,
+                               _comp=t_comp):
+            c2 = codebook_comp(_comp, _layer, values)
+            return runner.accuracy(_params, _state, c2, n_batches=n_batches)
+
+        final_set, rep = greedy_backward_elimination(
+            t_models[layer], init_set, lsel, acc0,
+            eval_with_codebook=eval_with_codebook)
+        t_comp = codebook_comp(t_comp, layer, final_set)
+
+        # 4. short fine-tune with the restriction active, then accept check
+        if cfg.finetune_steps:
+            t_params, t_state, t_opt, _ = runner.train(
+                t_params, t_state, t_opt, t_comp, cfg.finetune_steps)
+        acc = runner.accuracy(t_params, t_state, t_comp,
+                              n_batches=cfg.eval_batches)
+        if verbose:
+            print(f"  try prune={prune} k={k_target}: acc={acc:.3f} "
+                  f"(floor {acc0 - cfg.delta_acc:.3f}) "
+                  f"[{time.time() - t0:.1f}s]")
+        if acc >= acc0 - cfg.delta_acc:
+            models = runner.refresh_counts(t_params, t_comp, models)
+            decision = LayerDecision(
+                layer, share, prune, k_target, e_before,
+                models[layer].energy, acc, True, tried)
+            return t_params, t_state, t_opt, t_comp, models, decision, rep
+
+    decision = LayerDecision(layer, share, None, None, e_before, e_before,
+                             acc0, False, tried)
+    return params, state, opt_state, comp, models, decision, None
+
+
+def _sweep_layer_batched(runner, params, state, opt_state, comp, models,
+                         layer, share, acc0, cfg, sel_cfg, verbose):
+    """Batched candidate sweep: every (prune, k) trial advances in lockstep.
+
+    The N candidates are independent given their comp states, so the serial
+    walk's rollback discipline is free here — rejected candidates are simply
+    never selected out of the stacked trees, and the caller's
+    params/opt_state are returned untouched when no candidate passes.
+    """
+    combos = _config_order(cfg)
+    n = len(combos)
+    e_before = models[layer].energy
+    t0 = time.time()
+    w = runner.model.get_weight(params, layer)
+
+    # 1. prune: per-candidate comp trees (identical except this layer's mask)
+    cand_comps = []
+    for prune, _k in combos:
+        c = {nm: dict(cc) for nm, cc in comp.items()}
+        c[layer]["mask"] = qat.magnitude_prune_mask(w, prune)
+        cand_comps.append(c)
+    comps_s = qat.stack_pytrees(cand_comps)
+    params_s = qat.broadcast_pytree(params, n)
+    state_s = qat.broadcast_pytree(state, n)
+    opt_s = qat.broadcast_pytree(opt_state, n)
+
+    # 2. trial fine-tune, all candidates per step in one vmapped dispatch;
+    # each candidate sees the batch stream the serial walk would feed it
+    if cfg.trial_finetune_steps:
+        params_s, state_s, opt_s, _ = runner.train_batched(
+            params_s, state_s, opt_s, comps_s, cfg.trial_finetune_steps)
+
+    # 3. weight-set selection: all candidates' greedy eliminations advance
+    # in lockstep — every sync point fuses the outstanding codebook evals
+    # across candidates (a round's trial codebooks, then the accept checks,
+    # then the acc_ref refreshes) into one gathered vmapped dispatch, each
+    # trial scored against its own candidate's fine-tuned weights. The
+    # per-trial ΔE refresh touches only the layer under search.
+    lsels = [dataclasses.replace(sel_cfg, k_target=k) for _, k in combos]
+    t_models: List[object] = []
+    init_sets: List[List[int]] = []
+    for i in range(n):
+        t_params = qat.index_pytree(params_s, i)
+        m_i = runner.refresh_layer_counts(t_params, cand_comps[i], models,
+                                          layer)
+        t_models.append(m_i)
+        init_sets.append(initial_candidate_set(m_i.counts, m_i.lut, lsels[i]))
+
+    masks_s = comps_s[layer]["mask"]
+    # requests are padded to multiples of n so `accuracy_gather` compiles a
+    # handful of shapes per sweep while late rounds — when most candidates
+    # have finished — don't re-evaluate a full scoring round's worth of
+    # padding. Each gathered eval materializes `cap` param/comp copies, so
+    # big rounds (n x max_score_candidates requests) are chunked to keep
+    # device memory bounded; the shared non-target comp broadcasts are
+    # cached per capacity.
+    rest_cache: Dict[int, Dict[str, qat.CompState]] = {}
+    max_chunk = max(n, (_MAX_EVAL_FANOUT // n) * n)
+
+    def eval_chunk(reqs, n_batches):
+        n_req = len(reqs)
+        cap = -(-n_req // n) * n
+        padded = list(reqs) + [reqs[-1]] * (cap - n_req)
+        idx = [i for i, _ in padded]
+        cbs, ks = qat.make_codebooks([v for _, v in padded])
+        if cap not in rest_cache:
+            rest_cache[cap] = {nm: qat.broadcast_pytree(cc, cap)
+                               for nm, cc in comp.items() if nm != layer}
+        comps_e = dict(rest_cache[cap])
+        comps_e[layer] = {
+            "mask": jnp.take(masks_s, jnp.asarray(idx), axis=0),
+            "codebook": cbs,
+            "codebook_k": ks,
+        }
+        return runner.accuracy_gather(params_s, state_s, comps_e, idx,
+                                      n_batches=n_batches)[:n_req]
+
+    def eval_requests(reqs, n_batches):
+        out = []
+        for lo in range(0, len(reqs), max_chunk):
+            out.extend(eval_chunk(reqs[lo:lo + max_chunk], n_batches))
+        return out
+
+    sel_out = lockstep_backward_elimination(
+        t_models, init_sets, lsels, acc0, eval_requests=eval_requests)
+    sel_reports: List[SelectionReport] = [rep for _, rep in sel_out]
+    for i, (final_set, _) in enumerate(sel_out):
+        cand_comps[i] = codebook_comp(cand_comps[i], layer, final_set)
+    comps_s = qat.stack_pytrees(cand_comps)
+
+    # 4. short fine-tune with restrictions active, then the accept check:
+    # one vmapped eval yields the whole per-candidate accuracy vector
+    if cfg.finetune_steps:
+        params_s, state_s, opt_s, _ = runner.train_batched(
+            params_s, state_s, opt_s, comps_s, cfg.finetune_steps)
+    accs = runner.accuracy_batched(params_s, state_s, comps_s,
+                                   n_batches=cfg.eval_batches)
+
+    floor = acc0 - cfg.delta_acc
+    if verbose:
+        for (prune, k_target), acc in zip(combos, accs):
+            print(f"  cand prune={prune} k={k_target}: acc={acc:.3f} "
+                  f"(floor {floor:.3f})")
+        print(f"  [batched sweep of {n} candidates: {time.time() - t0:.1f}s]")
+
+    # accept the most aggressive passing candidate (combos are ordered
+    # aggressive -> mild, so this is the serial walk's first accept)
+    passing = [i for i, acc in enumerate(accs) if acc >= floor]
+    if not passing:
+        decision = LayerDecision(layer, share, None, None, e_before, e_before,
+                                 acc0, False, list(combos))
+        return params, state, opt_state, comp, models, decision, None
+
+    i = passing[0]
+    prune, k_target = combos[i]
+    params = qat.index_pytree(params_s, i)
+    state = qat.index_pytree(state_s, i)
+    opt_state = qat.index_pytree(opt_s, i)
+    comp = cand_comps[i]
+    models = runner.refresh_counts(params, comp, models)
+    decision = LayerDecision(layer, share, prune, k_target, e_before,
+                             models[layer].energy, float(accs[i]), True,
+                             list(combos[: i + 1]))
+    return params, state, opt_state, comp, models, decision, sel_reports[i]
+
+
+_SEARCH_MODES = {"serial": _sweep_layer_serial, "batched": _sweep_layer_batched}
 
 
 def energy_prioritized_compression(
@@ -101,6 +317,12 @@ def energy_prioritized_compression(
     the runner); every ΔE refresh below reuses those trace statistics — only
     the O(256) weight-value histograms are recomputed per trial."""
     sel_cfg = sel_cfg or SelectionConfig(delta_acc=cfg.delta_acc)
+    try:
+        sweep_layer = _SEARCH_MODES[cfg.search_mode]
+    except KeyError:
+        raise ValueError(
+            f"search_mode must be one of {sorted(_SEARCH_MODES)}, "
+            f"got {cfg.search_mode!r}") from None
 
     acc0 = runner.accuracy(params, state, comp, n_batches=cfg.eval_batches)
     if stats is None:
@@ -123,67 +345,15 @@ def energy_prioritized_compression(
                                            e_before, acc0, False))
             continue
         if verbose:
-            print(f"[schedule] layer={layer} share={share:.3f}")
+            print(f"[schedule] layer={layer} share={share:.3f} "
+                  f"mode={cfg.search_mode}")
 
-        accepted = False
-        tried: List[Tuple[float, int]] = []
-        for prune, k_target in _config_order(cfg):
-            tried.append((prune, k_target))
-            t0 = time.time()
-            # --- trial state (rollback on reject)
-            t_params, t_state, t_opt = params, state, opt_state
-            t_comp = {n: dict(c) for n, c in comp.items()}
-
-            # 1. prune
-            w = runner.model.get_weight(t_params, layer)
-            t_comp[layer]["mask"] = qat.magnitude_prune_mask(w, prune)
-
-            # 2. fine-tune with the mask (paper: pruning first, then finetune)
-            if cfg.trial_finetune_steps:
-                t_params, t_state, t_opt, _ = runner.train(
-                    t_params, t_state, t_opt, t_comp, cfg.trial_finetune_steps)
-
-            # 3. weight-set selection on the pruned layer
-            t_models = runner.refresh_counts(t_params, t_comp, models)
-            lsel = dataclasses.replace(sel_cfg, k_target=k_target)
-            init_set = initial_candidate_set(
-                t_models[layer].counts, t_models[layer].lut, lsel)
-
-            def eval_with_codebook(values, n_batches, _layer=layer,
-                                   _params=t_params, _state=t_state,
-                                   _comp=t_comp):
-                c2 = codebook_comp(_comp, _layer, values)
-                return runner.accuracy(_params, _state, c2, n_batches=n_batches)
-
-            final_set, rep = greedy_backward_elimination(
-                t_models[layer], init_set, lsel, acc0,
-                eval_with_codebook=eval_with_codebook)
-            t_comp = codebook_comp(t_comp, layer, final_set)
-
-            # 4. short fine-tune with the restriction active, then accept check
-            if cfg.finetune_steps:
-                t_params, t_state, t_opt, _ = runner.train(
-                    t_params, t_state, t_opt, t_comp, cfg.finetune_steps)
-            acc = runner.accuracy(t_params, t_state, t_comp,
-                                  n_batches=cfg.eval_batches)
-            if verbose:
-                print(f"  try prune={prune} k={k_target}: acc={acc:.3f} "
-                      f"(floor {acc0 - cfg.delta_acc:.3f}) "
-                      f"[{time.time() - t0:.1f}s]")
-            if acc >= acc0 - cfg.delta_acc:
-                params, state, opt_state, comp = t_params, t_state, t_opt, t_comp
-                models = runner.refresh_counts(params, comp, models)
-                e_after = models[layer].energy
-                decisions.append(LayerDecision(
-                    layer, share, prune, k_target, e_before, e_after, acc,
-                    True, tried))
-                reports.append(rep)
-                accepted = True
-                break
-
-        if not accepted:
-            decisions.append(LayerDecision(layer, share, None, None, e_before,
-                                           e_before, acc0, False, tried))
+        params, state, opt_state, comp, models, decision, rep = sweep_layer(
+            runner, params, state, opt_state, comp, models, layer, share,
+            acc0, cfg, sel_cfg, verbose)
+        decisions.append(decision)
+        if rep is not None:
+            reports.append(rep)
 
     models = runner.refresh_counts(params, comp, models)
     e_total_after = sum(m.energy for m in models.values())

@@ -26,11 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import qat
-from repro.core.layer_energy import (
-    LayerEnergyModel,
-    delta_energy_remove,
-    layer_energy_from_counts,
-)
+from repro.core.layer_energy import PASS_ENERGY_SCALE, LayerEnergyModel
 
 
 @dataclasses.dataclass
@@ -79,32 +75,38 @@ def nearest_other(values: Sequence[int], w: int) -> int:
     return min(others, key=lambda v: (abs(v - w), v))
 
 
-def _counts_after_remove(counts: jnp.ndarray, w: int, nearest: int) -> jnp.ndarray:
-    wi, ni = w + 128, nearest + 128
-    moved = counts[wi]
-    return counts.at[ni].add(moved).at[wi].set(0.0)
 
 
-def greedy_backward_elimination(
+def _elimination_requests(
     model: LayerEnergyModel,
     candidate: List[int],
     cfg: SelectionConfig,
     acc0: float,
-    *,
-    eval_with_codebook,   # (codebook_values: List[int], n_batches: int) -> float
-) -> Tuple[List[int], SelectionReport]:
-    """Paper 4.2.2. ``eval_with_codebook`` measures global val accuracy with
-    this layer restricted to the given values (other layers unchanged)."""
+):
+    """Generator core of greedy backward elimination (paper 4.2.2).
+
+    Yields ``(value_sets, n_batches)`` accuracy requests — a *list* of trial
+    codebooks to measure — and expects ``send()`` to answer with the matching
+    list of accuracies. Returns ``(final_values, SelectionReport)`` through
+    ``StopIteration.value``. Keeping the decision logic in one generator is
+    what lets the serial driver, the batched-scoring driver and the lockstep
+    multi-candidate driver all make *identical* decisions: they differ only
+    in how many requests they fuse into one eval dispatch.
+    """
     values = sorted(candidate)
-    counts = model.counts
-    lut = model.lut
+    # host-side numpy mirrors of the O(256) energy model: the ΔE ranking
+    # runs hundreds of times per layer and must not cost a device round-trip
+    # per candidate value (`delta_energy_remove` is the jnp equivalent)
+    counts = np.asarray(model.counts, np.float64).copy()
+    lut = np.asarray(model.lut, np.float64)
     dims = model.dims
-    e_before = float(layer_energy_from_counts(counts, lut, dims))
+    scale = float(PASS_ENERGY_SCALE) * dims.n_tiles
+    e_before = float(np.sum(counts * lut) * scale)
     essential: set[int] = set()
     removed: List[int] = []
     acc_checks = 0
 
-    acc_ref = eval_with_codebook(values, cfg.score_batches)
+    (acc_ref,) = yield ([values], cfg.score_batches)
     acc_checks += 1
 
     while len(values) > cfg.k_target:
@@ -116,33 +118,35 @@ def greedy_backward_elimination(
         d_es = {}
         for w in removable:
             nb = nearest_other(values, w)
-            d_es[w] = float(delta_energy_remove(counts, lut, dims, w, nb))
+            d_es[w] = float(counts[w + 128] * (lut[w + 128] - lut[nb + 128])
+                            * scale)
         by_de = sorted(removable, key=lambda w: -d_es[w])
         to_score = by_de[: cfg.max_score_candidates]
 
+        trials = [[v for v in values if v != w] for w in to_score]
+        accs = yield (trials, cfg.score_batches)
+        acc_checks += len(trials)
         scores = {}
-        for w in to_score:
-            trial = [v for v in values if v != w]
-            acc_w = eval_with_codebook(trial, cfg.score_batches)
-            acc_checks += 1
-            d_acc = max(acc_ref - acc_w, 0.0)
+        for w, acc_w in zip(to_score, accs):
+            d_acc = max(acc_ref - float(acc_w), 0.0)
             scores[w] = d_es[w] / (d_acc + cfg.epsilon)
 
         w_star = max(scores, key=scores.get)
         trial = [v for v in values if v != w_star]
-        acc_new = eval_with_codebook(trial, cfg.accept_batches)
+        (acc_new,) = yield ([trial], cfg.accept_batches)
         acc_checks += 1
         if acc_new >= acc0 - cfg.delta_acc:
             nb = nearest_other(values, w_star)
-            counts = _counts_after_remove(counts, w_star, nb)
+            counts[nb + 128] += counts[w_star + 128]
+            counts[w_star + 128] = 0.0
             values = trial
             removed.append(w_star)
-            acc_ref = eval_with_codebook(values, cfg.score_batches)
+            (acc_ref,) = yield ([values], cfg.score_batches)
             acc_checks += 1
         else:
             essential.add(w_star)
 
-    e_after = float(layer_energy_from_counts(counts, lut, dims))
+    e_after = float(np.sum(counts * lut) * scale)
     report = SelectionReport(
         layer=model.name,
         initial=sorted(candidate),
@@ -154,6 +158,77 @@ def greedy_backward_elimination(
         acc_checks=acc_checks,
     )
     return sorted(values), report
+
+
+def greedy_backward_elimination(
+    model: LayerEnergyModel,
+    candidate: List[int],
+    cfg: SelectionConfig,
+    acc0: float,
+    *,
+    eval_with_codebook,   # (codebook_values: List[int], n_batches: int) -> float
+) -> Tuple[List[int], SelectionReport]:
+    """Paper 4.2.2, serial driver. ``eval_with_codebook`` measures global val
+    accuracy with this layer restricted to the given values (other layers
+    unchanged). The batched sweep drives the same generator through
+    `lockstep_backward_elimination` instead."""
+    gen = _elimination_requests(model, candidate, cfg, acc0)
+    answer = None
+    try:
+        while True:
+            value_sets, n_batches = gen.send(answer) if answer is not None \
+                else next(gen)
+            answer = [eval_with_codebook(v, n_batches) for v in value_sets]
+    except StopIteration as stop:
+        return stop.value
+
+
+def lockstep_backward_elimination(
+    models: Sequence[LayerEnergyModel],
+    candidates: Sequence[List[int]],
+    cfgs: Sequence[SelectionConfig],
+    acc0: float,
+    *,
+    eval_requests,  # ([(cand_idx, values)], n_batches) -> per-request accs
+) -> List[Tuple[List[int], SelectionReport]]:
+    """Advance N independent greedy eliminations in lockstep.
+
+    This is the batched candidate sweep's selection stage: each elimination
+    is the same `_elimination_requests` generator the serial path drives, so
+    per-candidate decisions are identical — but every sync point fuses all
+    outstanding requests with the same ``n_batches`` (a whole round's trial
+    codebooks across *all* candidates, then all accept checks, then all
+    acc_ref refreshes) into one ``eval_requests`` call, which the runner
+    serves as a single vmapped dispatch (`CnnRunner.accuracy_gather`).
+    """
+    gens = [_elimination_requests(m, c, cfg, acc0)
+            for m, c, cfg in zip(models, candidates, cfgs)]
+    results: List[Optional[Tuple[List[int], SelectionReport]]] = [None] * len(gens)
+    pending = {}
+    for i, g in enumerate(gens):
+        try:
+            pending[i] = next(g)
+        except StopIteration as stop:   # pragma: no cover - first yield always
+            results[i] = stop.value
+    while pending:
+        by_nb: Dict[int, List[int]] = {}
+        for i, (_, n_batches) in pending.items():
+            by_nb.setdefault(n_batches, []).append(i)
+        next_pending = {}
+        for n_batches, idxs in sorted(by_nb.items()):
+            reqs = [(i, vals) for i in idxs for vals in pending[i][0]]
+            accs = eval_requests(reqs, n_batches)
+            pos = 0
+            for i in idxs:
+                take = len(pending[i][0])
+                mine = [float(a) for a in accs[pos:pos + take]]
+                pos += take
+                try:
+                    next_pending[i] = gens[i].send(mine)
+                except StopIteration as stop:
+                    results[i] = stop.value
+        pending = next_pending
+    return results
 
 
 def naive_lowest_energy_set(lut: jnp.ndarray, k: int) -> List[int]:

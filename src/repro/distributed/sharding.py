@@ -26,13 +26,13 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from repro.nn.spec import ParamSpec, is_spec, param_axes
+from repro.nn.spec import ParamSpec, is_spec
 
 log = logging.getLogger(__name__)
 
@@ -211,6 +211,24 @@ def tile_mesh(devices: Optional[Sequence] = None) -> Mesh:
     this module never touches jax device state."""
     devs = list(jax.devices()) if devices is None else list(devices)
     return Mesh(np.asarray(devs), (TILE_AXIS,))
+
+
+SWEEP_AXIS = "candidates"
+
+
+def sweep_mesh(devices: Optional[Sequence] = None) -> Mesh:
+    """1-D ("candidates",) mesh for the schedule's batched candidate sweep.
+
+    Mirrors `tile_mesh`: the layer-wise schedule stacks every candidate
+    ``(prune_ratio, k_target)`` trial — its comp tree plus the diverging
+    params/opt_state copies — along a leading candidate axis; sharding that
+    axis over this mesh trains and evaluates each device's candidate slice
+    locally with no collectives (accept decisions need only the per-candidate
+    accuracy vector, gathered at the end). `CnnRunner` pads the candidate
+    batch to a multiple of the axis size and discards the padded slots.
+    Built lazily — importing this module never touches jax device state."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    return Mesh(np.asarray(devs), (SWEEP_AXIS,))
 
 
 def tile_batch_sharding(mesh: Mesh, axis: str = TILE_AXIS) -> NamedSharding:

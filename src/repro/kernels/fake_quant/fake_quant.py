@@ -15,7 +15,6 @@ the custom VJP in ops.py never re-runs the kernel.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

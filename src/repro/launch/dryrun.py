@@ -17,16 +17,16 @@ Usage:
   python -m repro.launch.dryrun --all --jobs 4      # everything, subprocesses
 """
 
-import argparse
-import json
-import re
-import subprocess
-import sys
-import time
-from pathlib import Path
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
 
-import jax
-import jax.numpy as jnp
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "out" / "dryrun"
 

@@ -9,8 +9,7 @@ rules, so the same code drives the real trainer, the smoke tests, and the
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,6 @@ from repro.distributed.sharding import (
     ShardingRules,
     activation_constraint,
     batch_sharding,
-    logical_to_spec,
     logits_constraint,
     make_param_shardings,
     shardings_from_axes_tree,

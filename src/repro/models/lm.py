@@ -15,7 +15,6 @@ assignment).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any, Callable, Dict, Optional, Tuple
 

@@ -13,7 +13,6 @@ optional (qcfg, comp) pair as Dense layers (see `repro.core.qat`).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax

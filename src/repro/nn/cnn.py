@@ -12,12 +12,10 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.layer_energy import MatmulDims, conv_matmul_dims, dense_matmul_dims
 from repro.nn import layers as L
 from repro.nn.layers import QuantConfig
-from repro.nn.spec import ParamSpec, fan_in_init
 
 
 @dataclasses.dataclass(frozen=True)

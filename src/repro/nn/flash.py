@@ -19,7 +19,6 @@ autodiff path); gradients validated against jax.autodiff in tests.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

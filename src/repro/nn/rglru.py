@@ -23,7 +23,7 @@ operands and are excluded from weight-value restriction (DESIGN.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ the simulated network volume for the benchmark harness.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax

@@ -8,7 +8,6 @@ callables of the int step (kept inside the state).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -10,7 +10,7 @@ import pytest
 from repro.configs import ALL_ARCHS, SHAPES, cell_is_runnable, get_config, skip_reason
 from repro.models.config import active_param_count, model_param_count
 from repro.models.lm import build_lm
-from repro.nn.spec import abstract_params, init_params, spec_count
+from repro.nn.spec import abstract_params, init_params
 
 
 @pytest.mark.parametrize("arch", ALL_ARCHS)

@@ -1,8 +1,6 @@
 """Tests for weight selection, layer-wise scheduling, and the full pipeline."""
 
-import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.configs import SHAPES, get_config
-from repro.distributed.sharding import DEFAULT_RULES, ShardingRules
+from repro.distributed.sharding import DEFAULT_RULES
 from repro.launch import train as TR
 from repro.launch.hlo_cost import loop_corrected_cost
 from repro.models.lm import build_lm

@@ -8,9 +8,9 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.distributed.fault import Heartbeat, LoopReport, StragglerMonitor, run_resilient_loop
+from repro.distributed.fault import Heartbeat, StragglerMonitor, run_resilient_loop
 from repro.optim.compression import compressed, int8_compressor, topk_compressor
-from repro.optim.optimizers import adamw, apply_updates, sgdm
+from repro.optim.optimizers import apply_updates, sgdm
 
 
 def _toy_state(key=0):

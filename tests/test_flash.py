@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.nn.attention import AttnDims, blocked_attention
-from repro.nn.flash import flash_attention
 
 
 def _case(key, b, s, hkv, g, hd):

@@ -3,12 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.config import ArchConfig
 from repro.models.lm import build_lm
 from repro.nn.layers import QuantConfig
-from repro.nn.spec import init_params, spec_count
+from repro.nn.spec import init_params
 
 
 def _mk(name="t", **kw):

@@ -1,0 +1,275 @@
+"""Batched candidate sweep: decision parity with the serial reference,
+rollback correctness, lockstep elimination, and the sharded sweep path."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import qat
+from repro.core.layer_energy import LayerEnergyModel, MatmulDims
+from repro.core.runner import CnnRunner
+from repro.core.schedule import ScheduleConfig, energy_prioritized_compression
+from repro.core.weight_selection import (
+    SelectionConfig,
+    greedy_backward_elimination,
+    lockstep_backward_elimination,
+)
+from repro.data.synthetic import SyntheticImages
+from repro.nn import cnn
+
+
+# ------------------------------------------------------ stacked-comp helpers
+
+
+def test_stack_broadcast_index_roundtrip():
+    comps = [qat.identity_comp((4, 3)) for _ in range(3)]
+    comps[1]["codebook"], comps[1]["codebook_k"] = qat.make_codebook([-8, 0, 8])
+    stacked = qat.stack_pytrees(comps)
+    assert stacked["mask"].shape == (3, 4, 3)
+    back = qat.index_pytree(stacked, 1)
+    assert int(back["codebook_k"]) == 3
+    bc = qat.broadcast_pytree(comps[0], 5)
+    assert bc["codebook"].shape == (5, qat.K_MAX)
+    padded = qat.pad_leading(stacked, 4)
+    assert padded["mask"].shape == (4, 4, 3)
+    np.testing.assert_array_equal(np.asarray(padded["mask"][3]),
+                                  np.asarray(stacked["mask"][2]))
+
+
+def test_make_codebooks_matches_make_codebook():
+    sets = [[-16, 0, 16], [0], list(range(-8, 8))]
+    cbs, ks = qat.make_codebooks(sets)
+    for e, values in enumerate(sets):
+        cb, k = qat.make_codebook(values)
+        np.testing.assert_array_equal(np.asarray(cbs[e]), np.asarray(cb))
+        assert int(ks[e]) == int(k)
+
+
+# -------------------------------------------------------- lockstep selection
+
+
+def _toy_model(name="t"):
+    counts = np.zeros((256,))
+    lut = np.ones((256,))
+    candidate = [-64, -32, -8, 0, 8, 32, 64, 96]
+    for v in candidate:
+        counts[v + 128] = 50.0
+        lut[v + 128] = 1.0 + abs(v) / 32.0
+    return LayerEnergyModel(name, MatmulDims(64, 64, 64),
+                            np.asarray(lut), np.asarray(counts)), candidate
+
+
+def _toy_eval(values, n_batches, sensitivity=(32, -32)):
+    del n_batches
+    if any(s not in values for s in sensitivity):
+        return 0.2
+    return 0.9 - 0.005 * (8 - len(values))
+
+
+def test_lockstep_matches_serial_elimination():
+    """N independent eliminations advanced in lockstep must emit exactly the
+    per-candidate decisions of N serial `greedy_backward_elimination` runs."""
+    cfgs = [SelectionConfig(k_target=k, delta_acc=0.05, score_batches=1,
+                            accept_batches=2, max_score_candidates=3)
+            for k in (4, 5, 6)]
+    models, candidates = [], []
+    for name in ("a", "b", "c"):
+        m, cand = _toy_model(name)
+        models.append(m)
+        candidates.append(cand)
+
+    serial = [greedy_backward_elimination(
+        m, c, cfg, acc0=0.9, eval_with_codebook=_toy_eval)
+        for m, c, cfg in zip(models, candidates, cfgs)]
+
+    calls = []
+
+    def eval_requests(reqs, n_batches):
+        calls.append(len(reqs))
+        return [_toy_eval(v, n_batches) for _, v in reqs]
+
+    lock = lockstep_backward_elimination(models, candidates, cfgs, 0.9,
+                                         eval_requests=eval_requests)
+    for (sv, sr), (lv, lr) in zip(serial, lock):
+        assert sv == lv
+        assert sr.removed == lr.removed
+        assert sr.essential == lr.essential
+        assert sr.acc_checks == lr.acc_checks
+        assert sr.energy_after == lr.energy_after
+    # the whole point: rounds fuse across candidates into multi-request calls
+    assert max(calls) > 1
+
+
+# ------------------------------------------------------------- seeded parity
+
+
+def _runner():
+    # noisier images than the default so the aggressive candidates actually
+    # cost accuracy and the accept decision has something to decide
+    return CnnRunner(cnn.lenet5(), SyntheticImages(seed=3, noise=1.4),
+                     batch_size=64, lr=2e-3, seed=0)
+
+
+@pytest.fixture(scope="module")
+def trained_lenet():
+    runner = _runner()
+    params, state, opt_state, comp = runner.init()
+    params, state, opt_state, _ = runner.train(params, state, opt_state,
+                                               comp, 180)
+    stats = runner.profile(params, state, comp, n_batches=1, max_tiles=6)
+    return runner, params, state, opt_state, comp, stats
+
+
+def _schedule_cfg(mode):
+    return ScheduleConfig(
+        search_mode=mode,
+        prune_ratios=(0.95, 0.5), k_targets=(8,), delta_acc=0.04,
+        finetune_steps=8, trial_finetune_steps=6, eval_batches=2,
+        max_layers=2, min_energy_share=0.0)
+
+
+_SEL = SelectionConfig(k_init=12, k_target=8, delta_acc=0.04,
+                       score_batches=1, accept_batches=2,
+                       max_score_candidates=4)
+
+
+def test_batched_reproduces_serial_decisions(trained_lenet):
+    """The headline parity gate: on a seeded LeNet run, the batched sweep
+    must accept exactly the serial walk's (prune, k) per layer and land on
+    the same energy saving (decisions identical; trajectories only differ by
+    vmapped-vs-single fp summation order)."""
+    runner, params, state, opt_state, comp, stats = trained_lenet
+    results = {}
+    for mode in ("serial", "batched"):
+        _, _, _, _, res = energy_prioritized_compression(
+            runner, params, state, opt_state, comp, stats,
+            _schedule_cfg(mode), _SEL)
+        results[mode] = res
+
+    ser, bat = results["serial"], results["batched"]
+    assert [(d.layer, d.prune_ratio, d.k, d.accepted) for d in ser.decisions] \
+        == [(d.layer, d.prune_ratio, d.k, d.accepted) for d in bat.decisions]
+    assert ser.acc0 == bat.acc0
+    # identical decisions -> identical codebook sizes; energies agree to the
+    # fp drift of the diverging fine-tune trajectories
+    np.testing.assert_allclose(bat.energy_saving, ser.energy_saving,
+                               atol=5e-3)
+    for ds, db in zip(ser.decisions, bat.decisions):
+        if ds.accepted:
+            np.testing.assert_allclose(db.saving, ds.saving, atol=5e-3)
+    # selection reports pair up accept-for-accept
+    assert [r.layer for r in ser.selection_reports] \
+        == [r.layer for r in bat.selection_reports]
+
+
+def test_rejected_candidates_leave_state_untouched(trained_lenet):
+    """Rollback correctness: when no candidate passes the floor, the sweep
+    must hand back the caller's params/opt_state/comp objects unchanged."""
+    runner, params, state, opt_state, comp, stats = trained_lenet
+    cfg = _schedule_cfg("batched")
+    cfg.delta_acc = -1.0   # floor acc0 + 1: unreachable, every candidate fails
+    cfg.max_layers = 1
+    p2, s2, o2, c2, res = energy_prioritized_compression(
+        runner, params, state, opt_state, comp, stats, cfg, _SEL)
+    assert all(not d.accepted for d in res.decisions)
+    assert res.energy_saving == 0.0
+    for got, want in ((p2, params), (o2, opt_state)):
+        leaves_got = jax.tree.leaves(got)
+        leaves_want = jax.tree.leaves(want)
+        assert len(leaves_got) == len(leaves_want)
+        for a, b in zip(leaves_got, leaves_want):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in comp:
+        for leaf in ("mask", "codebook", "codebook_k"):
+            np.testing.assert_array_equal(np.asarray(c2[name][leaf]),
+                                          np.asarray(comp[name][leaf]))
+
+
+def test_accuracy_batched_matches_singles(trained_lenet):
+    """The vmapped eval vector must agree with per-candidate evals."""
+    runner, params, state, opt_state, comp, stats = trained_lenet
+    comps = []
+    for prune in (0.0, 0.5, 0.9):
+        c = {nm: dict(cc) for nm, cc in comp.items()}
+        w = runner.model.get_weight(params, "conv2")
+        c["conv2"]["mask"] = qat.magnitude_prune_mask(w, prune)
+        comps.append(c)
+    stacked = qat.stack_pytrees(comps)
+    params_s = qat.broadcast_pytree(params, 3)
+    state_s = qat.broadcast_pytree(state, 3)
+    accs = runner.accuracy_batched(params_s, state_s, stacked, n_batches=2)
+    singles = [runner.accuracy(params, state, c, n_batches=2) for c in comps]
+    # integer correct-counts: vmapped and single evals may flip an argmax on
+    # a knife-edge sample, nothing more
+    bound = 2.0 / (2 * runner.batch_size)
+    np.testing.assert_allclose(accs, singles, atol=bound)
+    comp_accs = runner.accuracy_comps(params, state, stacked, n_batches=2)
+    np.testing.assert_allclose(comp_accs, singles, atol=bound)
+    idx = np.asarray([2, 0, 1], np.int32)
+    gathered = runner.accuracy_gather(
+        params_s, state_s, jax.tree.map(lambda x: x[idx], stacked), idx,
+        n_batches=2)
+    np.testing.assert_allclose(gathered, [singles[2], singles[0], singles[1]],
+                               atol=bound)
+
+
+# --------------------------------------------------------------- sharded path
+
+
+def test_multi_device_sharded_sweep_subprocess():
+    """Force 4 host devices and check the shard_map candidate sweep (3
+    candidates padded to 4) matches the single-device vmapped path."""
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        assert jax.device_count() == 4, jax.device_count()
+        from repro.core import qat
+        from repro.core.runner import CnnRunner
+        from repro.data.synthetic import SyntheticImages
+        from repro.distributed.sharding import sweep_mesh
+        from repro.nn import cnn
+
+        def build(mesh):
+            return CnnRunner(cnn.lenet5(), SyntheticImages(seed=3),
+                             batch_size=32, lr=2e-3, seed=0, sweep_mesh=mesh)
+
+        runner = build(None)
+        params, state, opt_state, comp = runner.init()
+        comps = []
+        for prune in (0.0, 0.5, 0.9):
+            c = {nm: dict(cc) for nm, cc in comp.items()}
+            w = runner.model.get_weight(params, "conv1")
+            c["conv1"]["mask"] = qat.magnitude_prune_mask(w, prune)
+            comps.append(c)
+        stacked = qat.stack_pytrees(comps)
+        ps, ss, os_ = (qat.broadcast_pytree(t, 3)
+                       for t in (params, state, opt_state))
+
+        p1, s1, o1, l1 = runner.train_batched(ps, ss, os_, stacked, 3)
+        a1 = runner.accuracy_batched(p1, s1, stacked, n_batches=2)
+
+        sharded = build(sweep_mesh())
+        p2, s2, o2, l2 = sharded.train_batched(ps, ss, os_, stacked, 3)
+        a2 = sharded.accuracy_batched(p2, s2, stacked, n_batches=2)
+
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4)
+        np.testing.assert_allclose(a1, a2, atol=2.0 / 64)
+        for x, y in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-5)
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Run the gated benchmarks and emit a machine-readable gate summary.
+
+Replaces the bare ``assert`` gauntlet that used to live inline in
+``tools/run_checks.sh``: every gate is evaluated (no die-on-first), the full
+table is written to ``benchmarks/out/gate_summary.json`` as
+``[{name, value, threshold, op, pass}, ...]``, and the exit code reflects
+whether *all* gates passed. With ``--ci`` each failure is additionally
+printed as a GitHub Actions error annotation so CI surfaces the failing gate
+by name instead of a dead shell.
+
+    PYTHONPATH=src python tools/check_gates.py [--ci] [--skip-bench]
+
+``--skip-bench`` evaluates whatever JSON is already in benchmarks/out/
+(useful to re-check without re-running the benchmarks).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+for p in (ROOT, ROOT / "src"):   # standalone invocation: python tools/check_gates.py
+    if str(p) not in sys.path:
+        sys.path.insert(0, str(p))
+
+OUT_DIR = ROOT / "benchmarks" / "out"
+
+# (gate name, source benchmark, derived key, operator, threshold)
+GATES = [
+    ("profiler_parity", "bench_kernels", "all_within_tolerance", "==", True),
+    ("profiler_speedup_batched_vs_looped", "bench_kernels",
+     "profile_speedup_batched_vs_looped", ">=", 5.0),
+    ("serve_forward_parity", "bench_kernels", "serve_forward_rel_err",
+     "<", 2e-2),
+    ("serve_weight_compression_vs_bf16", "bench_kernels",
+     "serve_weight_compression_vs_bf16", ">=", 3.5),
+    ("serve_vs_dense_throughput", "bench_kernels",
+     "serve_vs_dense_throughput", ">=", 0.05),
+    ("schedule_sweep_speedup_batched_vs_serial", "bench_schedule",
+     "sweep_speedup_batched_vs_serial", ">=", 3.0),
+    ("schedule_sweep_decisions_match", "bench_schedule", "decisions_match",
+     "==", True),
+]
+
+OPS = {
+    ">=": lambda v, t: v >= t,
+    "<": lambda v, t: v < t,
+    "==": lambda v, t: v == t,
+}
+
+
+def run_benchmarks() -> None:
+    from benchmarks import bench_kernels, bench_schedule
+
+    print("== bench_kernels ==", flush=True)
+    bench_kernels.run()
+    print("== bench_schedule ==", flush=True)
+    bench_schedule.run()
+
+
+def evaluate() -> list:
+    derived = {}
+    summary = []
+    for name, bench, key, op, threshold in GATES:
+        if bench not in derived:
+            path = OUT_DIR / f"{bench}.json"
+            derived[bench] = (json.loads(path.read_text())["derived"]
+                              if path.exists() else None)
+        d = derived[bench]
+        value = None if d is None else d.get(key)
+        ok = value is not None and OPS[op](value, threshold)
+        summary.append({
+            "name": name,
+            "benchmark": bench,
+            "value": value,
+            "op": op,
+            "threshold": threshold,
+            "pass": bool(ok),
+        })
+    return summary
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci", action="store_true",
+                    help="emit GitHub Actions annotations for failures")
+    ap.add_argument("--skip-bench", action="store_true",
+                    help="evaluate existing benchmarks/out/*.json only")
+    args = ap.parse_args(argv)
+
+    if not args.skip_bench:
+        run_benchmarks()
+
+    summary = evaluate()
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (OUT_DIR / "gate_summary.json").write_text(json.dumps(summary, indent=2))
+
+    failed = [g for g in summary if not g["pass"]]
+    for g in summary:
+        status = "PASS" if g["pass"] else "FAIL"
+        val = "missing" if g["value"] is None else f"{g['value']:.4g}" \
+            if isinstance(g["value"], float) else g["value"]
+        print(f"  [{status}] {g['name']}: {val} (want {g['op']} "
+              f"{g['threshold']})")
+        if not g["pass"] and args.ci:
+            print(f"::error title=gate {g['name']} failed::"
+                  f"{g['name']} = {val}, required {g['op']} {g['threshold']} "
+                  f"(from benchmarks/out/{g['benchmark']}.json)")
+    print(f"{len(summary) - len(failed)}/{len(summary)} gates passed "
+          f"(summary: benchmarks/out/gate_summary.json)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

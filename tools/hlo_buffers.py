@@ -5,11 +5,11 @@ Usage: PYTHONPATH=src python tools/hlo_buffers.py <arch> <shape> [n]
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-import collections
-import re
-import sys
+import collections  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
 
-import jax
+import jax  # noqa: E402
 
 sys.path.insert(0, "src")
 
