@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, steps, trained
+from benchmarks.common import best_of, emit, steps, trained
 from repro.core import schedule as sched
 from repro.core.schedule import ScheduleConfig
 from repro.core.weight_selection import SelectionConfig
@@ -76,14 +76,16 @@ def run():
         times = {}
         for mode in ("serial", "batched"):
             _sweep_once(mode, runner, bundle, layer, models, cfg, acc0)  # warmup
-            best = float("inf")
-            for _ in range(2):   # best-of-2: shield the gate from scheduler noise
-                t = time.time()
-                out = _sweep_once(mode, runner, bundle, layer, models, cfg,
-                                  acc0)
-                best = min(best, time.time() - t)
-            times[mode] = best
-            results[mode] = out[5]  # LayerDecision
+            last = {}
+
+            def timed(mode=mode, last=last):
+                last["out"] = _sweep_once(mode, runner, bundle, layer, models,
+                                          cfg, acc0)
+
+            # best-of-2 locally (CI bumps repeats): shield the gate from
+            # scheduler noise
+            times[mode] = best_of(timed, n=2)
+            results[mode] = last["out"][5]  # LayerDecision
 
         decision_tuple = lambda d: (d.layer, d.prune_ratio, d.k, d.accepted)  # noqa: E731
 

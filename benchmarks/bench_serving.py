@@ -1,0 +1,119 @@
+"""Serving benchmark: continuous-batching engine vs single-shot fallback.
+
+Drains a fixed mixed-length request trace (two prompt buckets, per-request
+``new_tokens``) through `repro.serving.ServingEngine` in both modes on a
+reduced olmo-1b and reports tokens/sec. Both modes implement the same
+pad-to-bucket contract and the same AOT compile-cache discipline (each mode
+warms its own cache — their bucket widths differ — and both are timed only
+after warmup), so the ratio isolates exactly what the engine adds — wave
+batching plus admission/decode interleaving — not compile-time accounting
+tricks.
+
+Gated in tools/check_gates.py:
+
+* ``serving_speedup_engine_vs_oneshot`` >= 2.0 — the batching win;
+* ``recompiles_after_warmup`` == 0 — after bucket warmup, serving the whole
+  trace must not build a single new executable (the AOT cache would raise
+  on a shape miss, so this both measures and enforces);
+* ``parity_engine_vs_oneshot`` — greedy outputs identical per request.
+
+`BENCH_serving.json` at the repo root tracks the throughput trajectory
+across PRs (tools/check_gates.py --trajectory gates on it).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import best_of, emit
+from repro.configs import get_config
+from repro.models.lm import build_lm
+from repro.nn.spec import init_params
+from repro.serving import EngineConfig, ServingEngine
+
+ARCH = "olmo-1b"
+# (prompt_len, new_tokens) per request: 16 requests over two prompt buckets
+# (16, 32) and one new-token bucket, mixed so waves pack partially and the
+# admission loop has to interleave buckets.
+TRACE = [
+    (12, 16), (16, 12), (30, 16), (9, 16),
+    (16, 16), (25, 10), (32, 16), (14, 8),
+    (31, 16), (16, 16), (10, 12), (28, 16),
+    (16, 10), (24, 16), (13, 16), (32, 12),
+]
+ENGINE_CFG = EngineConfig(max_batch=8, prompt_buckets=(16, 32),
+                          new_token_buckets=(16,), max_waves=2)
+
+
+def _build():
+    cfg = get_config(ARCH).scaled_down(compute_dtype="float32")
+    model = build_lm(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.spec)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+               for plen, _ in TRACE]
+    news = [n for _, n in TRACE]
+    return model, params, prompts, news
+
+
+def _drain(engine, prompts, news):
+    for p, n in zip(prompts, news):
+        engine.submit(p, n)
+    engine.run()
+
+
+def run():
+    t0 = time.time()
+    model, params, prompts, news = _build()
+    new_tokens = sum(news)
+
+    rows = []
+    walls = {}
+    compiles = {}
+    tokens = {}
+    for mode in ("engine", "oneshot"):
+        eng = ServingEngine(model, params, mode=mode, config=ENGINE_CFG)
+        eng.warmup(TRACE)
+        _drain(eng, prompts, news)      # warm run: process-level jax caches
+        warm_compiles = eng.cache.compile_count
+        walls[mode] = best_of(lambda e=eng: _drain(e, prompts, news))
+        compiles[mode] = eng.cache.compile_count - warm_compiles
+        # untimed verification pass: per-request tokens in trace order
+        res = eng.serve(prompts, news)
+        tokens[mode] = [res[r].tokens for r in sorted(res)]
+        rep = eng.report()
+        rows.append({
+            "mode": mode,
+            "requests": len(TRACE),
+            "new_tokens": new_tokens,
+            "wall_s": walls[mode],
+            "tokens_per_s": new_tokens / walls[mode],
+            "buckets_compiled": rep["cache_buckets_compiled"],
+            "compile_count": rep["cache_compile_count"],
+            "recompiles_after_warmup": compiles[mode],
+            "energy_eu_per_token": rep["energy_eu_per_token"],
+            "latency_p50_s": rep["latency_p50_s"],
+            "ttft_p50_s": rep["ttft_p50_s"],
+        })
+
+    parity = tokens["engine"] == tokens["oneshot"]
+    lengths_ok = all(len(t) == n for t, n in zip(tokens["engine"], news))
+    derived = {
+        "requests": len(TRACE),
+        "new_tokens": new_tokens,
+        "engine_wall_s": walls["engine"],
+        "oneshot_wall_s": walls["oneshot"],
+        "engine_tokens_per_s": new_tokens / walls["engine"],
+        "oneshot_tokens_per_s": new_tokens / walls["oneshot"],
+        "serving_speedup_engine_vs_oneshot": walls["oneshot"] / walls["engine"],
+        "recompiles_after_warmup": compiles["engine"] + compiles["oneshot"],
+        "parity_engine_vs_oneshot": bool(parity and lengths_ok),
+    }
+    return emit("bench_serving", t0, rows, derived)
+
+
+if __name__ == "__main__":
+    run()

@@ -72,9 +72,29 @@ def fresh_copy(bundle: dict) -> dict:
     return out
 
 
-def best_of(fn, *args, n: int = 3) -> float:
+DEFAULT_BEST_OF = 3
+CI_BEST_OF = 5
+
+
+def bench_ci() -> bool:
+    """True when running under CI (tools/run_checks.sh --ci exports
+    REPRO_BENCH_CI=1). Timing-sensitive benches take more repeats and the
+    gate thresholds get a documented slack factor (tools/check_gates.py)
+    instead of hard-coded CI-tuned numbers."""
+    return os.environ.get("REPRO_BENCH_CI", "") == "1"
+
+
+def best_of(fn, *args, n: int | None = None) -> float:
     """Min wall time of ``fn(*args)`` over n runs — one scheduler hiccup on a
-    loaded host must not fail the speedup gates in tools/run_checks.sh."""
+    loaded host must not fail the speedup gates in tools/run_checks.sh.
+
+    ``n=None`` resolves to DEFAULT_BEST_OF locally and CI_BEST_OF under
+    ``--ci`` (shared 2-core runners schedule far noisier than the reference
+    host); explicit n is bumped to CI_BEST_OF in CI too."""
+    if n is None:
+        n = CI_BEST_OF if bench_ci() else DEFAULT_BEST_OF
+    elif bench_ci():
+        n = max(n, CI_BEST_OF)
     best = float("inf")
     for _ in range(n):
         t = time.time()

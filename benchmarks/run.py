@@ -18,6 +18,7 @@ def main() -> None:
     from benchmarks import (
         bench_kernels,
         bench_schedule,
+        bench_serving,
         fig1_weight_power,
         fig2_grouping_features,
         fig3_activation_heatmaps,
@@ -40,6 +41,7 @@ def main() -> None:
         ("fig4_components", fig4_components.run),
         ("bench_kernels", bench_kernels.run),
         ("bench_schedule", bench_schedule.run),
+        ("bench_serving", bench_serving.run),
         ("roofline", roofline.run),
     ]
     only = os.environ.get("BENCH_ONLY")

@@ -1,30 +1,32 @@
-"""Serve a small LM with batched requests: prefill + decode loop.
+"""Serve a small LM through the continuous-batching engine.
 
-Demonstrates the serving path the decode_* dry-run cells lower: batched
-prefill building the per-layer KV/recurrent caches, then step-wise greedy
-decoding via `decode_step`. Runs a gemma3-family reduced config (5:1
-local:global pattern with ring-buffer window caches) so both cache kinds are
-exercised.
+Demonstrates the serving subsystem end to end: a mixed-length request trace
+is queued into `repro.serving.ServingEngine`, packed into padded shape
+buckets (one jit compile per bucket, never per request), prefetched and
+decoded in waves, and accounted per request (latency, tokens/sec, estimated
+MAC energy). Runs a gemma3-family reduced config (5:1 local:global pattern
+with ring-buffer window caches) so both cache kinds are exercised, and
+cross-checks the engine output against the ``mode="oneshot"`` fallback.
 
-    PYTHONPATH=src python examples/serve_lm.py [--batch 4] [--new-tokens 24]
+    PYTHONPATH=src python examples/serve_lm.py [--requests 6] [--new-tokens 16]
 """
 
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models.lm import build_lm
 from repro.nn.spec import init_params, spec_count
+from repro.serving import EngineConfig, ServingEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--arch", default="gemma3-4b")
     args = ap.parse_args()
 
@@ -34,39 +36,44 @@ def main():
           f" pattern={cfg.pattern}, window={cfg.window})")
     params = init_params(jax.random.PRNGKey(0), model.spec)
 
-    key = jax.random.PRNGKey(1)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab)
-    max_len = args.prompt_len + args.new_tokens
+    # mixed-length trace over two prompt buckets (floors match the bucket
+    # derivation so any --prompt-len >= 2 fits)
+    p_max = max(args.prompt_len, 2)
+    shapes = [(max(p_max - 9 * (i % 3), 2), args.new_tokens)
+              for i in range(args.requests)]
+    prompts = [
+        jax.random.randint(jax.random.PRNGKey(1 + i), (plen,), 0, cfg.vocab)
+        for i, (plen, _) in enumerate(shapes)
+    ]
+
+    ecfg = EngineConfig(max_batch=4,
+                        prompt_buckets=(max(p_max // 2, 2), p_max),
+                        new_token_buckets=(args.new_tokens,))
+    engine = ServingEngine(model, params, mode="engine", config=ecfg)
+    engine.warmup(shapes)
 
     t0 = time.time()
-    logits, cache = model.prefill(params, prompts, max_len=max_len,
-                                  cache_dtype=jnp.float32, q_block=8,
-                                  kv_block=8)
-    t_prefill = time.time() - t0
-    next_tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
+    results = engine.serve(prompts, [n for _, n in shapes])
+    dt = time.time() - t0
+    rep = engine.report()
+    print(f"engine: {rep['requests']} requests / {rep['new_tokens']} tokens "
+          f"in {dt*1e3:.0f} ms ({rep['tokens_per_s']:.0f} tok/s), "
+          f"ttft p50 {rep['ttft_p50_s']*1e3:.0f} ms, "
+          f"latency p50 {rep['latency_p50_s']*1e3:.0f} ms, "
+          f"{rep['cache_buckets_compiled']} buckets / "
+          f"{rep['cache_compile_count']} compiles, "
+          f"energy {rep['energy_eu_per_token']:.3g} eu/token")
 
-    decode = jax.jit(model.decode_step)
-    seqs = [next_tok]
-    t0 = time.time()
-    for _ in range(args.new_tokens - 1):
-        logits, cache = decode(params, cache, next_tok)
-        next_tok = jnp.argmax(logits[:, 0, :cfg.vocab], axis=-1)[:, None]
-        seqs.append(next_tok)
-    jax.block_until_ready(next_tok)
-    t_decode = time.time() - t0
-
-    out = jnp.concatenate(seqs, axis=1)
-    print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
-          f"{t_prefill*1e3:.0f} ms")
-    print(f"decode : {args.batch}x{args.new_tokens} tokens in "
-          f"{t_decode*1e3:.0f} ms "
-          f"({args.batch*args.new_tokens/max(t_decode,1e-9):.0f} tok/s batch)")
-    for b in range(min(args.batch, 2)):
-        print(f"request {b}: prompt tail {list(map(int, prompts[b, -4:]))} -> "
-              f"generated {list(map(int, out[b, :8]))}...")
-    assert bool(jnp.all(out >= 0)) and bool(jnp.all(out < cfg.vocab))
-    print("OK")
+    # single-shot fallback: identical outputs, no batching
+    oneshot = ServingEngine(model, params, mode="oneshot", config=ecfg)
+    oneshot.warmup(shapes)
+    ref = oneshot.serve(prompts, [n for _, n in shapes])
+    assert all(results[r].tokens == ref[r].tokens for r in results), \
+        "engine vs oneshot token mismatch"
+    for rid in sorted(results)[:2]:
+        print(f"request {rid}: prompt[{len(prompts[rid])}] -> "
+              f"{results[rid].tokens[:8]}...")
+    print("OK (engine == oneshot)")
 
 
 if __name__ == "__main__":

@@ -120,3 +120,33 @@ def model_fidelity(stats: LayerStats, **grouped_kwargs) -> dict:
     rel_err = float(jnp.mean(jnp.abs(tv - gv) / jnp.maximum(tv, 1e-9)))
     return {"pearson": pearson, "spearman": spearman, "mean_rel_err": rel_err,
             "n_seen": int(jnp.sum(seen))}
+
+
+_UNIFORM_LUT_CACHE: dict[tuple, jax.Array] = {}
+
+
+def uniform_trace_lut(
+    n_mc: int = 2048,
+    seed: int = 23,
+    coeffs: MacEnergyCoeffs = DEFAULT_COEFFS,
+) -> jax.Array:
+    """Traffic-agnostic per-weight-value LUT (256,) for serve-time estimates.
+
+    At serving time there are no profiled activation statistics, so the
+    serving engine's per-request energy accounting Monte-Carlo-averages the
+    MAC transition energy over *uniform* int8 activation transitions with
+    accumulate-consistent partial sums (p_cur = p_prev + w * a_cur). Same
+    units as `LayerStats.trace_lut`; deterministic given the seed, cached
+    per process.
+    """
+    key = (n_mc, seed, coeffs)
+    if key not in _UNIFORM_LUT_CACHE:
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        w = jnp.arange(-128, 128, dtype=jnp.int32)[:, None]      # (256, 1)
+        a_prev = jax.random.randint(k1, (1, n_mc), -128, 128)
+        a_cur = jax.random.randint(k2, (1, n_mc), -128, 128)
+        p_prev = jax.random.randint(k3, (1, n_mc), -(1 << 21), 1 << 21)
+        p_cur = p_prev + w * a_cur
+        e = mac_transition_energy(w, a_prev, a_cur, p_prev, p_cur, coeffs)
+        _UNIFORM_LUT_CACHE[key] = jnp.mean(e, axis=1)
+    return _UNIFORM_LUT_CACHE[key]

@@ -67,6 +67,15 @@ class ServeArtifact:
         """What the same (unpadded) weight costs stored as plain int8."""
         return int(self.k_dim * self.n_dim)
 
+    def matmul_dims(self, n_tokens: int):
+        """Systolic mapping of this artifact's GEMM for ``n_tokens`` streamed
+        columns — bridges packed artifacts to `repro.core.layer_energy`
+        (serving-side energy accounting)."""
+        from repro.core.layer_energy import dense_matmul_dims
+
+        return dense_matmul_dims(fan_in=self.k_dim, fan_out=self.n_dim,
+                                 n_tokens=n_tokens)
+
 
 def _flatten_tree(art: ServeArtifact):
     return (art.packed, art.codebook, art.scale), (

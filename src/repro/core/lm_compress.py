@@ -127,16 +127,18 @@ def _serve_layout(key: str, ndim: int) -> Optional[str]:
     return None
 
 
-def iter_restricted_units(model: LMModel, params: dict, comp: dict):
-    """Yield (name, weight, comp_entry, layout) for every servable unit.
+def iter_eligible_units(model: LMModel, params: dict, comp: Optional[dict] = None):
+    """Yield (name, weight, comp_entry_or_None, layout) for every eligible
+    matmul the serving engine treats as one (K, N) GEMM, regardless of
+    restriction state.
 
     Stacked (scanned) units are yielded per scan layer — the scan applies
     fake-quant to per-layer slices, so each slice exports independently with
     its own scale, exactly matching the training semantics. Names follow
-    ``blocks/g0/attn/wq[3]`` for layer 3 of a stack.
+    ``blocks/g0/attn/wq[3]`` for layer 3 of a stack. With ``comp=None`` the
+    comp entries are None (used by serve-time energy accounting, which
+    charges the unrestricted int8 histogram).
     """
-    from repro.core import export as _export
-
     spec = make_lm_comp_spec(model)
     for top, groups in spec.items():
         entries = ({None: groups} if top == "enc_blocks"
@@ -145,25 +147,40 @@ def iter_restricted_units(model: LMModel, params: dict, comp: dict):
             for unit in units:
                 sub, key = unit.split("/")
                 node_p = params[top] if g is None else params[top][g]
-                node_c = comp[top] if g is None else comp[top][g]
                 w = node_p[sub][key]
-                c = node_c[unit]
-                stacked = c["codebook"].ndim == 2
+                if comp is None:
+                    c = None
+                    stacked = (spec[top][unit] if g is None
+                               else spec[top][g][unit])["codebook"].shape != (qat.K_MAX,)
+                else:
+                    node_c = comp[top] if g is None else comp[top][g]
+                    c = node_c[unit]
+                    stacked = c["codebook"].ndim == 2
                 base = f"{top}/{g}/{unit}" if g is not None else f"{top}/{unit}"
                 if stacked:
                     layout = _serve_layout(key, w.ndim - 1)
                     if layout is None:
                         continue
                     for li in range(w.shape[0]):
-                        c_l = {"mask": c["mask"][li],
-                               "codebook": c["codebook"][li],
-                               "codebook_k": c["codebook_k"][li]}
-                        if _export.servable(c_l):
-                            yield f"{base}[{li}]", w[li], c_l, layout
+                        c_l = None if c is None else {
+                            "mask": c["mask"][li],
+                            "codebook": c["codebook"][li],
+                            "codebook_k": c["codebook_k"][li]}
+                        yield f"{base}[{li}]", w[li], c_l, layout
                 else:
                     layout = _serve_layout(key, w.ndim)
-                    if layout is not None and _export.servable(c):
+                    if layout is not None:
                         yield base, w, c, layout
+
+
+def iter_restricted_units(model: LMModel, params: dict, comp: dict):
+    """Yield (name, weight, comp_entry, layout) for every *servable* unit —
+    the `iter_eligible_units` walk filtered to active <=16-value codebooks."""
+    from repro.core import export as _export
+
+    for name, w, c, layout in iter_eligible_units(model, params, comp):
+        if c is not None and _export.servable(c):
+            yield name, w, c, layout
 
 
 def export_lm_matmuls(model: LMModel, params: dict, comp: dict, *,
@@ -183,6 +200,28 @@ def export_lm_matmuls(model: LMModel, params: dict, comp: dict, *,
         if limit is not None and len(out) >= limit:
             break
     return out
+
+
+def symmetric_codebook_values(k: int) -> list:
+    """Restricted set of exactly k int8 values: 0 plus levels spread over the
+    int8 range (one extra negative level when k is even)."""
+    import numpy as np
+
+    n_neg = k // 2
+    n_pos = k - 1 - n_neg
+    values = sorted(
+        {0}
+        | {-int(v) for v in np.linspace(16, 120, n_neg)}
+        | {int(v) for v in np.linspace(16, 120, n_pos)})
+    assert len(values) == k, (k, values)
+    return values
+
+
+def restrict_all_codebooks(model: LMModel, comp: dict, values) -> dict:
+    """Apply one codebook value set to every compressible unit of the LM."""
+    for path in lm_comp_layers(model):
+        comp = set_codebook(comp, path, values)
+    return comp
 
 
 def set_codebook(comp: dict, path: str, values, layer: Optional[int] = None) -> dict:

@@ -280,3 +280,23 @@ def activation_constraint(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES,
             x, NamedSharding(mesh, PartitionSpec(*parts[:x.ndim])))
 
     return shard
+
+
+REQUEST_AXIS = "requests"
+
+
+def request_mesh(devices: Optional[Sequence] = None) -> Mesh:
+    """1-D ("requests",) mesh for the serving engine's optional sharded
+    decode.
+
+    Mirrors `tile_mesh`/`sweep_mesh`: every tensor of a serving wave —
+    padded prompts, the decode cache, the per-step token column — carries the
+    wave's request slots on its leading batch dim; sharding that dim over
+    this mesh runs each device's slot slice locally (attention, FFN and
+    cache updates are batch-independent, so decode needs no collectives
+    until the host gathers logits for sampling). `ServingEngine(mesh=...)`
+    replicates params and shards batch-major arrays whose leading dim
+    divides the mesh. Built lazily — importing this module never touches jax
+    device state."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    return Mesh(np.asarray(devs), (REQUEST_AXIS,))

@@ -1,15 +1,20 @@
-"""Serving launcher: batched prefill + decode driver around `serve_step`.
+"""Serving launcher: thin CLI over the continuous-batching engine.
 
-Production shape: restore params from a checkpoint (mesh-elastic), build the
-decode cache, run greedy/temperature decoding over a request batch. On this
+Production shape: restore params from a checkpoint (mesh-elastic), build a
+`repro.serving.ServingEngine`, and drain a request trace through it. On this
 CPU host it drives reduced configs (examples/serve_lm.py shows the same flow
-scripted); on a pod the identical code runs under `make_production_mesh()`
-with the sharding rules of `repro.distributed.sharding`.
+scripted); on a pod the identical code runs the engine's optional sharded
+decode over `repro.distributed.sharding.request_mesh()`.
 
     python -m repro.launch.serve --arch gemma3-4b --reduced --batch 4
 
-``--compress-k N`` additionally restricts every eligible matmul to an
-N-value codebook, exports the packed 4-bit serving artifacts
+``--mode oneshot`` swaps the engine for its single-shot fallback (batch-1
+waves, one request at a time, same buckets and compile cache) — the two
+modes are output-identical, and `benchmarks/bench_serving.py` gates the
+engine's throughput edge over this fallback.
+
+``--compress-k N`` restricts every eligible matmul to an N-value codebook,
+serves the compressed fake-quant forward, exports the packed 4-bit artifacts
 (`repro.core.lm_compress.export_lm_matmuls`), and verifies the LUT GEMM
 against the fake-quant matmul before serving (see docs/serving.md).
 """
@@ -26,6 +31,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
 from repro.models.lm import build_lm
 from repro.nn.spec import init_params, spec_count
+from repro.serving import EngineConfig, ServingEngine
 
 
 def compress_report(model, params, k: int, *, block_k: int = 128,
@@ -37,24 +43,12 @@ def compress_report(model, params, k: int, *, block_k: int = 128,
     fake-quant matmul on random activations for ``check_units`` units.
     Returns (artifacts, summary dict).
     """
-    import numpy as np
-
     from repro.core import lm_compress, qat
     from repro.core.export import export_summary, serve_dense
 
-    # restricted set of exactly k values: 0 plus levels spread over the int8
-    # range (one extra negative level when k is even)
-    n_neg = k // 2
-    n_pos = k - 1 - n_neg
-    values = sorted(
-        {0}
-        | {-int(v) for v in np.linspace(16, 120, n_neg)}
-        | {int(v) for v in np.linspace(16, 120, n_pos)})
-    assert len(values) == k, (k, values)
-
+    values = lm_compress.symmetric_codebook_values(k)
     comp = lm_compress.init_lm_comp(model)
-    for path in lm_compress.lm_comp_layers(model):
-        comp = lm_compress.set_codebook(comp, path, values)
+    comp = lm_compress.restrict_all_codebooks(model, comp, values)
     arts = lm_compress.export_lm_matmuls(model, params, comp, block_k=block_k)
     summary = export_summary(arts)
 
@@ -81,7 +75,11 @@ def compress_report(model, params, k: int, *, block_k: int = 128,
 def generate(model, params, prompts: jax.Array, *, new_tokens: int,
              temperature: float = 0.0, seed: int = 0, q_block: int = 8,
              kv_block: int = 8):
-    """Batched generation: prefill once, then scan decode steps."""
+    """Reference single-dispatch generation: prefill once, loop decode.
+
+    Kept as the pre-engine serving path; the engine reproduces it exactly
+    when a prompt fills its bucket (tested in tests/test_serving_engine.py).
+    """
     b, s = prompts.shape
     max_len = s + new_tokens
     logits, cache = model.prefill(params, prompts, max_len=max_len,
@@ -107,6 +105,17 @@ def generate(model, params, prompts: jax.Array, *, new_tokens: int,
     return jnp.concatenate(outs, axis=1)
 
 
+def trace_shapes(n_requests: int, prompt_len: int, new_tokens: int,
+                 mixed: bool) -> list:
+    """(prompt_len, new_tokens) per request; ``mixed`` varies lengths
+    deterministically to exercise several buckets."""
+    if not mixed:
+        return [(prompt_len, new_tokens)] * n_requests
+    lens = [max(2, prompt_len - 7 * (i % 3)) for i in range(n_requests)]
+    news = [max(2, new_tokens - 3 * (i % 2)) for i in range(n_requests)]
+    return list(zip(lens, news))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-4b")
@@ -114,13 +123,21 @@ def main(argv=None):
                     help="CPU-sized config of the same family")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from a CheckpointManager directory")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--mode", choices=("engine", "oneshot"), default="engine",
+                    help="continuous-batching engine or single-shot fallback")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests in the trace")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--mixed", action="store_true",
+                    help="vary request lengths across buckets")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="engine wave width")
     ap.add_argument("--compress-k", type=int, default=0,
                     help="restrict eligible matmuls to a k-value codebook, "
-                         "export packed 4-bit artifacts, verify LUT parity")
+                         "export packed 4-bit artifacts, verify LUT parity, "
+                         "and serve the compressed forward")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -145,16 +162,40 @@ def main(argv=None):
               f"LUT parity max rel err "
               f"{summary['parity_max_rel_err']:.2e}")
 
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)
+    shapes = trace_shapes(args.batch, args.prompt_len, args.new_tokens,
+                          args.mixed)
+    p_bucket = max(s[0] for s in shapes)
+    n_bucket = max(s[1] for s in shapes)
+    ecfg = EngineConfig(max_batch=args.max_batch,
+                        prompt_buckets=(max(p_bucket // 2, 2), p_bucket),
+                        new_token_buckets=(n_bucket,))
+    engine = ServingEngine(model, params, mode=args.mode, config=ecfg,
+                           compress_k=args.compress_k)
+    engine.warmup(shapes)
+
+    prompts = [
+        jax.random.randint(jax.random.PRNGKey(100 + i), (plen,), 0, cfg.vocab)
+        for i, (plen, _) in enumerate(shapes)
+    ]
     t0 = time.time()
-    out = generate(model, params, prompts, new_tokens=args.new_tokens,
-                   temperature=args.temperature)
+    for prompt, (_, ntok) in zip(prompts, shapes):
+        engine.submit(prompt, ntok, temperature=args.temperature)
+    results = engine.run()
     dt = time.time() - t0
-    print(f"generated {args.batch}x{args.new_tokens} tokens in {dt:.1f}s "
-          f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
-    for i in range(min(2, args.batch)):
-        print(f"  req{i}: {list(map(int, out[i, :10]))}...")
+
+    rep = engine.report()
+    print(f"{args.mode}: {rep['requests']} requests, "
+          f"{rep['new_tokens']} tokens in {dt:.2f}s "
+          f"({rep['tokens_per_s']:.1f} tok/s), "
+          f"latency p50/p99 {rep['latency_p50_s']*1e3:.0f}/"
+          f"{rep['latency_p99_s']*1e3:.0f} ms, "
+          f"ttft p50 {rep['ttft_p50_s']*1e3:.0f} ms, "
+          f"energy {rep['energy_eu_total']:.3g} eu "
+          f"({rep['energy_eu_per_token']:.3g} eu/token), "
+          f"{rep['cache_buckets_compiled']} buckets / "
+          f"{rep['cache_compile_count']} compiles")
+    for rid in sorted(results)[:2]:
+        print(f"  req{rid}: {results[rid].tokens[:10]}...")
 
 
 if __name__ == "__main__":

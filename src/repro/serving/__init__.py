@@ -1,0 +1,21 @@
+"""Continuous-batching compressed serving engine (see docs/serving.md)."""
+
+from repro.serving.bucketing import (  # noqa: F401
+    BucketSpec,
+    EngineConfig,
+    bucket_for,
+    bucket_up,
+    pad_prompts,
+)
+from repro.serving.cache import CompiledStep, ServeCompileCache  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    Request,
+    RequestResult,
+    ServingEngine,
+)
+from repro.serving.metrics import (  # noqa: F401
+    RequestStats,
+    per_token_energy,
+    percentile,
+    summarize,
+)

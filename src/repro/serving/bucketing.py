@@ -1,0 +1,86 @@
+"""Shape buckets for the continuous-batching serving engine.
+
+The engine never compiles per request: every request is mapped to a
+`BucketSpec` — a fixed ``(batch, prompt_len, total_len)`` triple — and the
+compile cache holds exactly one (prefill, decode) executable pair per bucket.
+Prompts are right-padded with ``pad_token`` up to the bucket prompt length
+and generation starts at position ``prompt_len`` (the padded length) for
+every request in the bucket; batches are padded with inert dummy rows. This
+"pad-to-bucket" contract is part of the serving semantics (the fixed-shape
+engine has no per-token attention masking), and it is shared bit-for-bit by
+``mode="engine"`` and the ``mode="oneshot"`` fallback, so the two modes stay
+output-identical. A request whose prompt exactly fills its bucket reproduces
+the unpadded `repro.launch.serve.generate` path exactly (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """One fixed compile shape: batch rows, padded prompt, total cache len."""
+
+    batch: int
+    prompt_len: int     # padded prompt length (generation starts here)
+    total_len: int      # prompt_len + padded new-token budget
+
+    @property
+    def new_tokens(self) -> int:
+        return self.total_len - self.prompt_len
+
+    def key(self) -> Tuple[int, int, int]:
+        return (self.batch, self.prompt_len, self.total_len)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine knobs (hashable; part of no compile key — buckets are)."""
+
+    max_batch: int = 8                 # wave width in engine mode
+    prompt_buckets: Tuple[int, ...] = (16, 32, 64)
+    new_token_buckets: Tuple[int, ...] = (16, 32)
+    max_waves: int = 2                 # in-flight decode waves
+    pad_token: int = 0
+    q_block: int = 8                   # prefill attention tiling (CPU-sized)
+    kv_block: int = 8
+    cache_dtype: str = "float32"
+
+
+def bucket_up(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n; raises if the request doesn't fit any bucket."""
+    for b in sorted(buckets):
+        if n <= b:
+            return int(b)
+    raise ValueError(f"no bucket >= {n} in {tuple(sorted(buckets))}")
+
+
+def bucket_for(prompt_len: int, new_tokens: int, cfg: EngineConfig,
+               batch: int) -> BucketSpec:
+    """Map a request shape to its compile bucket at the given wave width."""
+    if prompt_len < 1 or new_tokens < 1:
+        raise ValueError(f"need prompt_len>=1, new_tokens>=1, got "
+                         f"({prompt_len}, {new_tokens})")
+    p = bucket_up(prompt_len, cfg.prompt_buckets)
+    n = bucket_up(new_tokens, cfg.new_token_buckets)
+    return BucketSpec(batch=batch, prompt_len=p, total_len=p + n)
+
+
+def pad_prompts(prompts: Sequence[Sequence[int]], bucket: BucketSpec,
+                pad_token: int) -> np.ndarray:
+    """Right-pad prompts to the bucket prompt length and the batch with
+    all-pad dummy rows; returns (bucket.batch, bucket.prompt_len) int32."""
+    if len(prompts) > bucket.batch:
+        raise ValueError(f"{len(prompts)} prompts > bucket batch {bucket.batch}")
+    out = np.full((bucket.batch, bucket.prompt_len), pad_token, np.int32)
+    for i, p in enumerate(prompts):
+        p = np.asarray(p, np.int32)
+        if p.ndim != 1 or p.shape[0] > bucket.prompt_len:
+            raise ValueError(f"prompt {i} shape {p.shape} does not fit "
+                             f"bucket prompt_len {bucket.prompt_len}")
+        out[i, :p.shape[0]] = p
+    return out

@@ -1,0 +1,131 @@
+"""Artifact/compile cache for the serving engine.
+
+Two maps, both keyed on the engine identity ``(arch, k)`` (architecture name
+and codebook size, 0 = uncompressed):
+
+* ``(arch, k, bucket)`` -> `CompiledStep`: ahead-of-time compiled prefill and
+  decode executables for one `BucketSpec`. Compilation happens exactly once
+  per bucket, through `jax.jit(...).lower(...).compile()`; the resulting
+  executables *reject* any differently-shaped call with a ``TypeError``
+  instead of silently recompiling, so "compiles once per bucket, never per
+  request" is enforced structurally, not just measured.
+* ``(arch, k)`` -> exported `ServeArtifact` tree + summary for the packed
+  4-bit deployment form (`repro.core.lm_compress.export_lm_matmuls`), used
+  for footprint reporting and parity checks.
+
+``compile_count`` increments on every executable build; the serving benchmark
+gates on it staying flat after bucket warmup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import QuantConfig
+from repro.serving.bucketing import BucketSpec, EngineConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledStep:
+    """AOT executables for one bucket: ``prefill(params, prompts)`` ->
+    (logits, cache); ``decode(params, cache, tok)`` -> (logits, cache)."""
+
+    bucket: BucketSpec
+    prefill: Callable
+    decode: Callable
+
+
+class ServeCompileCache:
+    """Per-(arch, k) compile + artifact cache. Engine and oneshot serving
+    apply the same discipline; the oneshot fallback warms batch-1 buckets
+    (its wave width), so the two modes' bucket keys are disjoint."""
+
+    def __init__(self, model, *, arch: str, compress_k: int = 0,
+                 qcfg: Optional[QuantConfig] = None, comp=None,
+                 config: EngineConfig = EngineConfig(),
+                 place_prompts: Optional[Callable] = None):
+        self.model = model
+        self.arch = arch
+        self.compress_k = int(compress_k)
+        self.qcfg = qcfg if qcfg is not None else QuantConfig.off()
+        self.comp = comp
+        self.config = config
+        self._place = place_prompts if place_prompts is not None else (lambda x: x)
+        self._steps: Dict[Tuple, CompiledStep] = {}
+        self._artifacts: Dict[Tuple, Tuple[dict, dict]] = {}
+        self.compile_count = 0
+
+    # ------------------------------------------------------------ step fns
+
+    def _key(self, bucket: BucketSpec) -> Tuple:
+        return (self.arch, self.compress_k, bucket.key())
+
+    def fns(self, bucket: BucketSpec, params) -> CompiledStep:
+        """Compiled (prefill, decode) for the bucket; compiles on first use."""
+        key = self._key(bucket)
+        if key in self._steps:
+            return self._steps[key]
+
+        model, cfg = self.model, self.config
+        qcfg, comp = self.qcfg, self.comp
+        cache_dtype = jnp.dtype(cfg.cache_dtype)
+
+        def prefill_fn(p, prompts):
+            return model.prefill(p, prompts, max_len=bucket.total_len,
+                                 qcfg=qcfg, comp=comp, cache_dtype=cache_dtype,
+                                 q_block=cfg.q_block, kv_block=cfg.kv_block)
+
+        def decode_fn(p, cache, tok):
+            return model.decode_step(p, cache, tok, qcfg=qcfg, comp=comp)
+
+        prompts0 = self._place(
+            jnp.zeros((bucket.batch, bucket.prompt_len), jnp.int32))
+        prefill_c = jax.jit(prefill_fn).lower(params, prompts0).compile()
+        self.compile_count += 1
+        # lower decode from a *concrete* prefill output so avals (and, under
+        # an optional serving mesh, shardings) match the runtime cache exactly
+        _, cache0 = prefill_c(params, prompts0)
+        tok0 = self._place(jnp.zeros((bucket.batch, 1), jnp.int32))
+        decode_c = jax.jit(decode_fn).lower(params, cache0, tok0).compile()
+        self.compile_count += 1
+
+        step = CompiledStep(bucket=bucket, prefill=prefill_c, decode=decode_c)
+        self._steps[key] = step
+        return step
+
+    # ----------------------------------------------------------- artifacts
+
+    def artifacts(self, params) -> Tuple[dict, dict]:
+        """Packed `ServeArtifact` tree + footprint summary for (arch, k).
+
+        Empty when the engine is uncompressed (k == 0) — there is nothing to
+        pack without a codebook restriction.
+        """
+        key = (self.arch, self.compress_k)
+        if key in self._artifacts:
+            return self._artifacts[key]
+        if not self.compress_k or self.comp is None:
+            arts: dict = {}
+            summary = {"layers": 0, "weight_bytes_packed": 0}
+        else:
+            from repro.core.export import export_summary
+            from repro.core.lm_compress import export_lm_matmuls
+
+            arts = export_lm_matmuls(self.model, params, self.comp)
+            summary = export_summary(arts)
+        self._artifacts[key] = (arts, summary)
+        return self._artifacts[key]
+
+    # ------------------------------------------------------------- reports
+
+    def stats(self) -> dict:
+        return {
+            "arch": self.arch,
+            "compress_k": self.compress_k,
+            "buckets_compiled": len(self._steps),
+            "compile_count": self.compile_count,
+        }

@@ -1,0 +1,339 @@
+"""Continuous-batching serving engine over the compressed LM serving path.
+
+Requests enter a FIFO queue and are packed into *waves*: fixed-shape
+micro-batches padded to a `BucketSpec` (see `repro.serving.bucketing`), so
+jit compiles once per bucket and never per request. The scheduling loop
+interleaves admission (prefill of a new wave from the queue) with decode
+steps across all in-flight waves; a wave retires as soon as every request in
+it has its tokens, freeing capacity for the next admission. Requests with
+different ``new_tokens`` can share a wave — finished slots idle (their
+sampled tokens are discarded) until the longest request completes.
+
+``mode="oneshot"`` is the single-shot fallback: the same code path restricted
+to batch-1 waves, one request at a time, sharing the bucket padding contract
+and the compile cache — so engine-vs-oneshot output parity is exact (greedy
+*and* seeded-temperature sampling happen host-side per request in both
+modes), and the benchmarked speedup isolates the batching/scheduling win.
+
+Position bookkeeping: the decode cache keeps one scalar position for the
+whole wave, so all requests in a wave advance in lockstep from the padded
+prompt length. Slot-level refill of a retired request inside a live wave
+would need per-sequence positions in `repro.models.lm` — wave-level
+admission is the contract until then (see docs/serving.md).
+
+With ``compress_k > 0`` every eligible matmul is restricted to a symmetric
+k-value codebook (`repro.core.lm_compress.restrict_all_codebooks`) and both
+prefill and decode run the compressed fake-quant forward; the packed 4-bit
+`ServeArtifact` tree is exported into the cache for footprint/parity
+reporting, and per-request energy is charged via the tile-level model
+(`repro.serving.metrics.per_token_energy`).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import QuantConfig
+from repro.serving.bucketing import (
+    BucketSpec,
+    EngineConfig,
+    bucket_for,
+    pad_prompts,
+)
+from repro.serving.cache import ServeCompileCache
+from repro.serving.metrics import RequestStats, per_token_energy, summarize
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    new_tokens: int
+    temperature: float = 0.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: List[int]             # exactly new_tokens entries
+    stats: RequestStats
+
+
+class _Slot:
+    """One request's in-wave state."""
+
+    def __init__(self, req: Request, stats: RequestStats):
+        self.req = req
+        self.stats = stats
+        self.tokens: List[int] = []
+        # the sampling stream is a pure function of the request's own seed
+        # (not of engine-local ids), so engine and oneshot draws agree;
+        # submit distinct seeds for independent streams across requests
+        self.rng = np.random.default_rng(req.seed)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.req.new_tokens
+
+
+class _Wave:
+    """A fixed-shape micro-batch mid-decode."""
+
+    def __init__(self, bucket: BucketSpec, slots: List[_Slot], fns, cache,
+                 tok):
+        self.bucket = bucket
+        self.slots = slots
+        self.fns = fns
+        self.cache = cache
+        self.tok = tok            # (batch, 1) int32 device array
+
+    @property
+    def done(self) -> bool:
+        return all(s.done for s in self.slots)
+
+
+class ServingEngine:
+    """Queue + micro-batcher + compile cache over one LM and its params."""
+
+    def __init__(self, model, params, *, mode: str = "engine",
+                 config: EngineConfig = EngineConfig(), compress_k: int = 0,
+                 arch: Optional[str] = None, mesh=None):
+        if mode not in ("engine", "oneshot"):
+            raise ValueError(f"mode must be 'engine' or 'oneshot', got {mode!r}")
+        self.model = model
+        self.config = config
+        self.mode = mode
+        self.compress_k = int(compress_k)
+        self.arch = arch if arch is not None else model.cfg.name
+
+        if self.compress_k:
+            from repro.core import lm_compress
+
+            comp = lm_compress.init_lm_comp(model)
+            values = lm_compress.symmetric_codebook_values(self.compress_k)
+            self.comp = lm_compress.restrict_all_codebooks(model, comp, values)
+            self.qcfg = QuantConfig.on()
+        else:
+            self.comp = None
+            self.qcfg = QuantConfig.off()
+
+        self.mesh = mesh
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            self._replicated = NamedSharding(mesh, PartitionSpec())
+            params = jax.device_put(params, self._replicated)
+        self.params = params
+
+        self.cache = ServeCompileCache(
+            model, arch=self.arch, compress_k=self.compress_k, qcfg=self.qcfg,
+            comp=self.comp, config=config, place_prompts=self._place)
+
+        self._queue: collections.deque[Request] = collections.deque()
+        self._waves: List[_Wave] = []
+        self._next_rid = 0
+        self._stats_pending: Dict[int, RequestStats] = {}
+        self._completed: Dict[int, RequestResult] = {}
+        self._e_per_token: Optional[float] = None
+        self.last_wall_s = 0.0
+        self.total_wall_s = 0.0
+
+    # ------------------------------------------------------------ placement
+
+    def _place(self, x):
+        """Put a batch-major array on device (sharded over 'requests' when an
+        optional serving mesh is attached and the batch divides it)."""
+        x = jnp.asarray(x)
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        n = self.mesh.devices.size
+        if x.ndim >= 1 and x.shape[0] % n == 0:
+            spec = PartitionSpec("requests", *([None] * (x.ndim - 1)))
+            return jax.device_put(x, NamedSharding(self.mesh, spec))
+        return jax.device_put(x, self._replicated)
+
+    # ------------------------------------------------------------ admission
+
+    @property
+    def wave_width(self) -> int:
+        return 1 if self.mode == "oneshot" else self.config.max_batch
+
+    @property
+    def max_inflight(self) -> int:
+        """Oneshot means one request at a time — no wave overlap either."""
+        return 1 if self.mode == "oneshot" else self.config.max_waves
+
+    def submit(self, prompt: Sequence[int], new_tokens: int, *,
+               temperature: float = 0.0, seed: int = 0) -> int:
+        """Enqueue one request; returns its request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, new_tokens=int(new_tokens),
+                      temperature=float(temperature), seed=int(seed))
+        # validates the shape fits a bucket at submit time, not mid-run
+        bucket_for(prompt.shape[0], req.new_tokens, self.config,
+                   self.wave_width)
+        self._queue.append(req)
+        self._stats_pending[rid] = RequestStats(
+            rid=rid, prompt_len=int(prompt.shape[0]),
+            new_tokens=req.new_tokens, bucket=(),
+            t_submit=time.perf_counter())
+        return rid
+
+    def warmup(self, shapes: Sequence[tuple]) -> dict:
+        """Precompile the buckets for (prompt_len, new_tokens) shapes and the
+        per-token energy model; returns cache stats. After warmup, serving
+        those shapes adds zero compiles and no lazy one-time costs."""
+        for plen, ntok in shapes:
+            bucket = bucket_for(plen, ntok, self.config, self.wave_width)
+            self.cache.fns(bucket, self.params)
+        _ = self.per_token_energy_eu
+        return self.cache.stats()
+
+    def _sample_row(self, row: np.ndarray, slot: Optional[_Slot]) -> int:
+        """Host-side sampling — shared by both modes, so parity is exact."""
+        if slot is None or slot.req.temperature <= 0.0:
+            return int(np.argmax(row))
+        z = row / slot.req.temperature
+        z = z - np.max(z)
+        p = np.exp(z)
+        p /= np.sum(p)
+        return int(slot.rng.choice(row.shape[0], p=p))
+
+    def _admit(self) -> bool:
+        """Form one wave from the queue head's bucket; False if queue empty."""
+        if not self._queue:
+            return False
+        width = self.wave_width
+        head = self._queue[0]
+        bucket = bucket_for(head.prompt.shape[0], head.new_tokens,
+                            self.config, width)
+        taken: List[Request] = []
+        kept: collections.deque = collections.deque()
+        while self._queue:
+            r = self._queue.popleft()
+            same = bucket_for(r.prompt.shape[0], r.new_tokens, self.config,
+                              width) == bucket
+            if same and len(taken) < width:
+                taken.append(r)
+            else:
+                kept.append(r)
+        self._queue = kept
+
+        fns = self.cache.fns(bucket, self.params)
+        prompts = pad_prompts([r.prompt for r in taken], bucket,
+                              self.config.pad_token)
+        t_admit = time.perf_counter()
+        logits, kv = fns.prefill(self.params, self._place(prompts))
+        vocab = self.model.cfg.vocab
+        last = np.asarray(logits[:, -1, :vocab])
+
+        slots: List[_Slot] = []
+        tok = np.zeros((bucket.batch, 1), np.int32)
+        t_first = time.perf_counter()
+        for i in range(bucket.batch):
+            slot = None
+            if i < len(taken):
+                stats = self._stats_pending.pop(taken[i].rid)
+                stats.bucket = bucket.key()
+                stats.t_admitted = t_admit
+                slot = _Slot(taken[i], stats)
+                slots.append(slot)
+            tok[i, 0] = self._sample_row(last[i], slot)
+            if slot is not None:
+                slot.tokens.append(int(tok[i, 0]))
+                slot.stats.t_first_token = t_first
+        wave = _Wave(bucket, slots, fns, kv, self._place(tok))
+        self._finish_done(wave)
+        if not wave.done:
+            self._waves.append(wave)
+        return True
+
+    # --------------------------------------------------------------- decode
+
+    def _step(self, wave: _Wave) -> None:
+        logits, wave.cache = wave.fns.decode(self.params, wave.cache, wave.tok)
+        vocab = self.model.cfg.vocab
+        rows = np.asarray(logits[:, 0, :vocab])
+        tok = np.zeros((wave.bucket.batch, 1), np.int32)
+        t = time.perf_counter()
+        for i in range(wave.bucket.batch):
+            slot = wave.slots[i] if i < len(wave.slots) else None
+            active = slot is not None and not slot.done
+            tok[i, 0] = self._sample_row(rows[i], slot if active else None)
+            if active:
+                slot.tokens.append(int(tok[i, 0]))
+                if slot.done:
+                    slot.stats.t_finish = t
+        wave.tok = self._place(tok)
+        self._finish_done(wave)
+
+    def _finish_done(self, wave: _Wave) -> None:
+        t = time.perf_counter()
+        for slot in wave.slots:
+            if slot.done and slot.req.rid not in self._completed:
+                if slot.stats.t_finish == 0.0:
+                    slot.stats.t_finish = t
+                slot.stats.energy_eu = (
+                    self.per_token_energy_eu
+                    * (slot.stats.prompt_len + slot.stats.new_tokens))
+                self._completed[slot.req.rid] = RequestResult(
+                    rid=slot.req.rid, tokens=slot.tokens, stats=slot.stats)
+        if wave.done and wave in self._waves:
+            self._waves.remove(wave)
+
+    # ----------------------------------------------------------------- run
+
+    def run(self) -> Dict[int, RequestResult]:
+        """Drain the queue: admit + decode until every request completes."""
+        t0 = time.perf_counter()
+        while self._queue or self._waves:
+            while self._queue and len(self._waves) < self.max_inflight:
+                if not self._admit():
+                    break
+            for wave in list(self._waves):
+                self._step(wave)
+        self.last_wall_s = time.perf_counter() - t0
+        self.total_wall_s += self.last_wall_s
+        return dict(self._completed)
+
+    def serve(self, prompts: Sequence[Sequence[int]],
+              new_tokens) -> Dict[int, RequestResult]:
+        """Convenience: submit a trace (per-request or shared new_tokens) and
+        run it to completion."""
+        if isinstance(new_tokens, int):
+            new_tokens = [new_tokens] * len(prompts)
+        rids = [self.submit(p, n) for p, n in zip(prompts, new_tokens)]
+        out = self.run()
+        return {rid: out[rid] for rid in rids}
+
+    # -------------------------------------------------------------- reports
+
+    @property
+    def per_token_energy_eu(self) -> float:
+        if self._e_per_token is None:
+            self._e_per_token = per_token_energy(self.model, self.params,
+                                                 self.comp)
+        return self._e_per_token
+
+    def artifacts(self):
+        """Packed `ServeArtifact` tree + footprint summary (compressed only)."""
+        return self.cache.artifacts(self.params)
+
+    def report(self) -> dict:
+        """Aggregate over every request completed so far (throughput uses the
+        cumulative wall time of all `run()` calls)."""
+        stats = [r.stats for r in self._completed.values()]
+        return summarize(stats, self.total_wall_s, self.cache.stats())

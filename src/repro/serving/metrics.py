@@ -1,0 +1,119 @@
+"""Per-request accounting for the serving engine.
+
+Latency, time-to-first-token, throughput, and an estimated MAC energy per
+request. The energy estimate extends the paper's tile-level layer model
+(`repro.core.layer_energy`) to serving traffic: every eligible LM matmul
+contributes
+
+    E_unit(1 token) = sum_w counts_padded(w) * LUT(w) * 2T * ceil(1/64 tiles)
+
+with ``counts_padded`` the int8-projected weight histogram (codebook
+restriction applied when the engine serves compressed) and LUT the
+traffic-agnostic `repro.core.energy_lut.uniform_trace_lut` (no profiled
+activation statistics exist at serve time). A request is charged
+``per_token_energy * (prompt_len + new_tokens)`` — the token positions it
+actually pushed through the array. Energies are tile-granular (n is rounded
+up to one 64-column tile), consistent with the training-side model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Timing/energy record for one served request (times are wall-clock
+    seconds from a shared origin)."""
+
+    rid: int
+    prompt_len: int
+    new_tokens: int
+    bucket: tuple            # BucketSpec.key()
+    t_submit: float = 0.0
+    t_admitted: float = 0.0  # wave prefill started
+    t_first_token: float = 0.0
+    t_finish: float = 0.0
+    energy_eu: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_finish - self.t_submit
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first_token - self.t_submit
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Linear-interpolated percentile (q in [0, 100]); 0.0 on empty input."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    if len(xs) == 1:
+        return float(xs[0])
+    pos = (q / 100.0) * (len(xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return float(xs[lo] * (1.0 - frac) + xs[hi] * frac)
+
+
+def summarize(stats: List[RequestStats], wall_s: float,
+              cache_stats: Optional[dict] = None) -> Dict:
+    """Aggregate report over a set of completed requests."""
+    lat = [s.latency_s for s in stats]
+    ttft = [s.ttft_s for s in stats]
+    new_tokens = sum(s.new_tokens for s in stats)
+    all_tokens = sum(s.prompt_len + s.new_tokens for s in stats)
+    out = {
+        "requests": len(stats),
+        "wall_s": wall_s,
+        "new_tokens": new_tokens,
+        "total_tokens": all_tokens,
+        "tokens_per_s": new_tokens / wall_s if wall_s > 0 else 0.0,
+        "latency_p50_s": percentile(lat, 50),
+        "latency_p90_s": percentile(lat, 90),
+        "latency_p99_s": percentile(lat, 99),
+        "ttft_p50_s": percentile(ttft, 50),
+        "ttft_p90_s": percentile(ttft, 90),
+        "energy_eu_total": sum(s.energy_eu for s in stats),
+        "energy_eu_per_token": (sum(s.energy_eu for s in stats)
+                                / max(all_tokens, 1)),
+    }
+    if cache_stats:
+        out.update({f"cache_{k}": v for k, v in cache_stats.items()})
+    return out
+
+
+# ------------------------------------------------------------------ energy
+
+
+def per_token_energy(model, params, comp=None) -> float:
+    """Estimated MAC energy (eu) of pushing one token position through every
+    eligible LM matmul, on the paper's 64x64 weight-stationary array."""
+    from repro.core import qat
+    from repro.core.energy_lut import uniform_trace_lut
+    from repro.core.layer_energy import (
+        dense_matmul_dims,
+        layer_energy_from_counts,
+        weight_value_counts,
+    )
+    from repro.core.lm_compress import iter_eligible_units
+
+    lut = uniform_trace_lut()
+    total = jnp.zeros((), jnp.float32)
+    for _name, w, c, layout in iter_eligible_units(model, params, comp):
+        w_int = qat.quantize_weight_int(w, c)
+        if layout == "in_first":
+            mat = w_int.reshape(w_int.shape[0], -1)
+        else:
+            mat = w_int.reshape(-1, w_int.shape[-1])
+        dims = dense_matmul_dims(fan_in=mat.shape[0], fan_out=mat.shape[1],
+                                 n_tokens=1)
+        counts = weight_value_counts(mat.T, dims)  # (M, K) layout for padding
+        total = total + layer_energy_from_counts(counts, lut, dims)
+    return float(total)

@@ -1,0 +1,331 @@
+"""Continuous-batching serving engine: bucketing, engine-vs-oneshot parity,
+zero-recompile enforcement, accounting, trajectory gates, and the launcher
+CLI's compress_report path."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.models.lm import build_lm
+from repro.nn.spec import init_params
+from repro.serving import (
+    EngineConfig,
+    ServingEngine,
+    bucket_for,
+    bucket_up,
+    pad_prompts,
+    percentile,
+)
+
+CFG = EngineConfig(max_batch=4, prompt_buckets=(8, 16),
+                   new_token_buckets=(8,), max_waves=2)
+
+# (prompt_len, new_tokens) mixed-length trace over both prompt buckets,
+# with early-finishing requests inside a wave
+TRACE = [(6, 8), (8, 5), (14, 8), (5, 8), (8, 8), (16, 6), (12, 8)]
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("olmo-1b").scaled_down(compute_dtype="float32")
+    model = build_lm(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.spec)
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def prompts(lm):
+    model, _ = lm
+    rng = np.random.default_rng(3)
+    return [rng.integers(0, model.cfg.vocab, size=plen).astype(np.int32)
+            for plen, _ in TRACE]
+
+
+@pytest.fixture(scope="module")
+def engines(lm):
+    model, params = lm
+    eng = ServingEngine(model, params, mode="engine", config=CFG)
+    one = ServingEngine(model, params, mode="oneshot", config=CFG)
+    for e in (eng, one):
+        e.warmup(TRACE)
+    return eng, one
+
+
+# ------------------------------------------------------------- pure helpers
+
+
+def test_bucket_up_and_bucket_for():
+    assert bucket_up(5, (8, 16)) == 8
+    assert bucket_up(8, (8, 16)) == 8
+    assert bucket_up(9, (8, 16)) == 16
+    with pytest.raises(ValueError):
+        bucket_up(17, (8, 16))
+    b = bucket_for(5, 6, CFG, batch=4)
+    assert (b.batch, b.prompt_len, b.total_len) == (4, 8, 16)
+    assert b.new_tokens == 8
+    with pytest.raises(ValueError):
+        bucket_for(0, 6, CFG, batch=4)
+
+
+def test_pad_prompts():
+    b = bucket_for(5, 6, CFG, batch=4)
+    out = pad_prompts([[1, 2, 3], [4, 5, 6, 7, 8]], b, pad_token=0)
+    assert out.shape == (4, 8) and out.dtype == np.int32
+    assert list(out[0]) == [1, 2, 3, 0, 0, 0, 0, 0]
+    assert list(out[1]) == [4, 5, 6, 7, 8, 0, 0, 0]
+    assert not out[2:].any()          # dummy rows are all-pad
+    with pytest.raises(ValueError):
+        pad_prompts([[1]] * 5, b, pad_token=0)      # too many rows
+    with pytest.raises(ValueError):
+        pad_prompts([list(range(9))], b, pad_token=0)  # prompt too long
+
+
+def test_percentile():
+    assert percentile([], 50) == 0.0
+    assert percentile([3.0], 99) == 3.0
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+
+
+# ------------------------------------------------------------------- engine
+
+
+def test_engine_vs_oneshot_parity_mixed_lengths(engines, prompts):
+    eng, one = engines
+    news = [n for _, n in TRACE]
+    r_eng = eng.serve(prompts, news)
+    r_one = one.serve(prompts, news)
+    assert sorted(r_eng) == sorted(r_one)
+    for (rid_e, rid_o) in zip(sorted(r_eng), sorted(r_one)):
+        assert len(r_eng[rid_e].tokens) == news[sorted(r_eng).index(rid_e)]
+        assert r_eng[rid_e].tokens == r_one[rid_o].tokens
+
+
+def test_zero_recompiles_after_warmup(engines, prompts):
+    eng, one = engines
+    news = [n for _, n in TRACE]
+    for e in (eng, one):
+        before = e.cache.compile_count
+        e.serve(prompts, news)
+        e.serve(prompts[::-1], news[::-1])
+        assert e.cache.compile_count == before, \
+            "serving warmed shapes must not build new executables"
+
+
+def test_compiled_steps_reject_other_shapes(engines, lm):
+    """The AOT cache *enforces* one-compile-per-bucket: a shape miss raises
+    instead of silently recompiling."""
+    eng, _ = engines
+    model, params = lm
+    fns = eng.cache.fns(bucket_for(6, 8, CFG, batch=4), params)
+    import jax.numpy as jnp
+
+    with pytest.raises(TypeError):
+        fns.prefill(params, jnp.zeros((2, 8), jnp.int32))   # wrong batch
+    with pytest.raises(TypeError):
+        fns.prefill(params, jnp.zeros((4, 12), jnp.int32))  # wrong length
+
+
+def test_wave_packing_partial_and_multi_wave(lm, prompts):
+    """5 same-bucket requests at width 4 -> one full + one partial wave."""
+    model, params = lm
+    eng = ServingEngine(model, params, mode="engine", config=CFG)
+    eng.warmup([(8, 8)])
+    same = [p[:7] for p in prompts[:5]]
+    res = eng.serve(same, 8)
+    assert len(res) == 5
+    assert all(len(r.tokens) == 8 for r in res.values())
+    rep = eng.report()
+    assert rep["requests"] == 5
+    assert rep["cache_buckets_compiled"] == 1
+
+
+def test_exact_fit_matches_reference_generate(lm, engines, prompts):
+    """A prompt that fills its bucket reproduces the pre-engine
+    `repro.launch.serve.generate` path token for token."""
+    from repro.launch.serve import generate
+
+    model, params = lm
+    _, one = engines
+    prompt = prompts[1][:8]                     # exact bucket fit (8 -> 8)
+    res = one.serve([prompt], 8)
+    want = generate(model, params, np.asarray(prompt)[None, :], new_tokens=8)
+    assert list(res[min(res)].tokens) == [int(t) for t in np.asarray(want)[0]]
+
+
+def test_temperature_sampling_parity(engines, prompts):
+    """Seeded host-side sampling is mode-independent."""
+    eng, one = engines
+    outs = {}
+    for e in (eng, one):
+        rids = [e.submit(prompts[i], 6, temperature=0.7, seed=11)
+                for i in (0, 1, 3)]
+        res = e.run()
+        outs[e.mode] = [res[r].tokens for r in rids]
+    assert outs["engine"] == outs["oneshot"]
+    # and genuinely stochastic vs greedy
+    eng2, _ = engines
+    rid = eng2.submit(prompts[0], 6, temperature=0.0)
+    greedy = eng2.run()[rid].tokens
+    assert len(greedy) == 6
+
+
+def test_submit_rejects_unbucketable(engines):
+    eng, _ = engines
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(17, np.int32), 8)   # prompt > largest bucket
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(8, np.int32), 9)    # new_tokens > largest bucket
+
+
+# -------------------------------------------------------------- accounting
+
+
+def test_energy_accounting(engines, prompts):
+    eng, _ = engines
+    e_tok = eng.per_token_energy_eu
+    assert e_tok > 0.0
+    res = eng.serve([prompts[0]], 8)
+    stats = res[min(res)].stats
+    assert stats.energy_eu == pytest.approx(e_tok * (len(prompts[0]) + 8))
+    assert stats.latency_s >= stats.ttft_s >= 0.0
+
+
+def test_report_shape(engines, prompts):
+    eng, _ = engines
+    eng.serve([prompts[0]], 8)
+    rep = eng.report()
+    for key in ("requests", "tokens_per_s", "latency_p50_s", "latency_p99_s",
+                "ttft_p50_s", "energy_eu_total", "cache_compile_count",
+                "cache_buckets_compiled"):
+        assert key in rep, key
+    assert rep["tokens_per_s"] > 0
+
+
+# -------------------------------------------------------------- compressed
+
+
+def test_compressed_engine_parity_and_artifacts(lm, prompts):
+    model, params = lm
+    cfg_small = EngineConfig(max_batch=2, prompt_buckets=(8,),
+                             new_token_buckets=(6,), max_waves=1)
+    shapes = [(8, 6), (8, 6)]
+    pair = {}
+    for mode in ("engine", "oneshot"):
+        e = ServingEngine(model, params, mode=mode, config=cfg_small,
+                          compress_k=4)
+        e.warmup(shapes)
+        res = e.serve([prompts[1][:8], prompts[4][:8]], 6)
+        pair[mode] = ([res[r].tokens for r in sorted(res)], e)
+    assert pair["engine"][0] == pair["oneshot"][0]
+    arts, summary = pair["engine"][1].artifacts()
+    assert summary["layers"] > 0 and len(arts) == summary["layers"]
+    assert summary["weight_bytes_packed"] > 0
+
+
+# -------------------------------------------------------- trajectory gating
+
+
+def test_trajectory_gate_detects_regression(tmp_path, monkeypatch, capsys):
+    import tools.check_gates as cg
+
+    hist = {
+        "trajectory_keys": ["engine_tokens_per_s"],
+        "history": [
+            {"pr": 1, "engine_tokens_per_s": 100.0, "other_speedup": 3.0},
+            {"pr": 2, "engine_tokens_per_s": 80.5, "other_speedup": 1.0},
+        ],
+    }
+    (tmp_path / "BENCH_x.json").write_text(json.dumps(hist))
+    monkeypatch.setattr(cg, "ROOT", tmp_path)
+    monkeypatch.setattr(cg, "OUT_DIR", tmp_path / "out")
+    # 100 -> 80.5 is within the 20% tolerance; declared keys only, so the
+    # 3.0 -> 1.0 collapse of the undeclared key is ignored
+    assert cg.check_trajectory() == 0
+
+    hist["history"][1]["engine_tokens_per_s"] = 79.0   # > 20% regression
+    (tmp_path / "BENCH_x.json").write_text(json.dumps(hist))
+    assert cg.check_trajectory() == 1
+    capsys.readouterr()
+
+    # default key detection (no declared trajectory_keys): *_per_s + *speedup*
+    del hist["trajectory_keys"]
+    hist["history"][1]["engine_tokens_per_s"] = 99.0
+    (tmp_path / "BENCH_x.json").write_text(json.dumps(hist))
+    assert cg.check_trajectory() == 1   # other_speedup 3.0 -> 1.0 now gates
+
+
+# ------------------------------------------------------------ CLI coverage
+
+
+def _run_sub(args_or_code, *, code=False, extra_env=None, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    if extra_env:
+        env.update(extra_env)
+    cmd = [sys.executable] + (["-c", args_or_code] if code else args_or_code)
+    return subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+def test_launch_serve_compress_report_cli_smoke():
+    """`python -m repro.launch.serve --reduced --compress-k` end to end:
+    export + LUT parity report + engine serve through the restricted comp."""
+    out = _run_sub(["-m", "repro.launch.serve", "--arch", "olmo-1b",
+                    "--reduced", "--compress-k", "4", "--batch", "2",
+                    "--prompt-len", "12", "--new-tokens", "6", "--mixed",
+                    "--mode", "oneshot"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "compressed export" in out.stdout
+    assert "LUT parity max rel err" in out.stdout
+    assert "oneshot: 2 requests" in out.stdout
+
+
+def test_sharded_decode_subprocess():
+    """Optional sharded decode: 2 forced host devices, wave batch sharded
+    over the 'requests' mesh axis, outputs identical to unsharded."""
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        assert jax.device_count() == 2, jax.device_count()
+        from repro.configs import get_config
+        from repro.models.lm import build_lm
+        from repro.nn.spec import init_params
+        from repro.distributed.sharding import request_mesh
+        from repro.serving import EngineConfig, ServingEngine
+
+        cfg = get_config("olmo-1b").scaled_down(compute_dtype="float32")
+        model = build_lm(cfg)
+        params = init_params(jax.random.PRNGKey(0), model.spec)
+        ecfg = EngineConfig(max_batch=2, prompt_buckets=(8,),
+                            new_token_buckets=(6,), max_waves=1)
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(0, cfg.vocab, size=7).astype(np.int32)
+                   for _ in range(2)]
+        plain = ServingEngine(model, params, mode="engine", config=ecfg)
+        shard = ServingEngine(model, params, mode="engine", config=ecfg,
+                              mesh=request_mesh())
+        toks = {}
+        for name, e in (("plain", plain), ("shard", shard)):
+            e.warmup([(7, 6)])
+            res = e.serve(prompts, 6)
+            toks[name] = [res[r].tokens for r in sorted(res)]
+        assert toks["plain"] == toks["shard"], toks
+        print("OK")
+    """)
+    out = _run_sub(code, code=True, extra_env={
+        "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "") +
+                      " --xla_force_host_platform_device_count=2").strip()})
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

@@ -10,9 +10,23 @@ printed as a GitHub Actions error annotation so CI surfaces the failing gate
 by name instead of a dead shell.
 
     PYTHONPATH=src python tools/check_gates.py [--ci] [--skip-bench]
+    PYTHONPATH=src python tools/check_gates.py --trajectory [--ci]
 
 ``--skip-bench`` evaluates whatever JSON is already in benchmarks/out/
 (useful to re-check without re-running the benchmarks).
+
+CI slack: shared CI runners (2 cores, noisy neighbours) time the speedup
+gates far less repeatably than the reference host, so under ``--ci`` every
+*timing-ratio* gate keeps its documented local threshold but is enforced at
+``threshold * CI_SLACK`` (and the benchmarks take more best-of repeats, see
+``benchmarks.common.best_of``). Parity/compression gates are exact
+everywhere. The slack is one global, documented constant — not per-gate
+hand-tuned numbers.
+
+``--trajectory`` gates the *trend* instead of the absolute: each repo-root
+``BENCH_*.json`` keeps one history entry per PR that moved its number; the
+newest point must not regress more than TRAJECTORY_TOL (20%) below the
+previous point on any throughput/speedup key. Runs no benchmarks.
 """
 
 from __future__ import annotations
@@ -29,21 +43,34 @@ for p in (ROOT, ROOT / "src"):   # standalone invocation: python tools/check_gat
 
 OUT_DIR = ROOT / "benchmarks" / "out"
 
-# (gate name, source benchmark, derived key, operator, threshold)
+# timing-ratio gates are enforced at threshold * CI_SLACK under --ci
+CI_SLACK = 0.8
+# newest trajectory point must stay >= (1 - TRAJECTORY_TOL) * previous point
+TRAJECTORY_TOL = 0.20
+
+# (gate name, source benchmark, derived key, operator, threshold, timing?)
+# timing=True marks wall-clock-ratio gates that get CI_SLACK under --ci.
 GATES = [
-    ("profiler_parity", "bench_kernels", "all_within_tolerance", "==", True),
+    ("profiler_parity", "bench_kernels", "all_within_tolerance", "==", True,
+     False),
     ("profiler_speedup_batched_vs_looped", "bench_kernels",
-     "profile_speedup_batched_vs_looped", ">=", 5.0),
+     "profile_speedup_batched_vs_looped", ">=", 5.0, True),
     ("serve_forward_parity", "bench_kernels", "serve_forward_rel_err",
-     "<", 2e-2),
+     "<", 2e-2, False),
     ("serve_weight_compression_vs_bf16", "bench_kernels",
-     "serve_weight_compression_vs_bf16", ">=", 3.5),
+     "serve_weight_compression_vs_bf16", ">=", 3.5, False),
     ("serve_vs_dense_throughput", "bench_kernels",
-     "serve_vs_dense_throughput", ">=", 0.05),
+     "serve_vs_dense_throughput", ">=", 0.05, True),
     ("schedule_sweep_speedup_batched_vs_serial", "bench_schedule",
-     "sweep_speedup_batched_vs_serial", ">=", 3.0),
+     "sweep_speedup_batched_vs_serial", ">=", 3.0, True),
     ("schedule_sweep_decisions_match", "bench_schedule", "decisions_match",
-     "==", True),
+     "==", True, False),
+    ("serving_speedup_engine_vs_oneshot", "bench_serving",
+     "serving_speedup_engine_vs_oneshot", ">=", 2.0, True),
+    ("serving_recompiles_after_warmup", "bench_serving",
+     "recompiles_after_warmup", "==", 0, False),
+    ("serving_parity_engine_vs_oneshot", "bench_serving",
+     "parity_engine_vs_oneshot", "==", True, False),
 ]
 
 OPS = {
@@ -54,65 +81,129 @@ OPS = {
 
 
 def run_benchmarks() -> None:
-    from benchmarks import bench_kernels, bench_schedule
+    from benchmarks import bench_kernels, bench_schedule, bench_serving
 
     print("== bench_kernels ==", flush=True)
     bench_kernels.run()
     print("== bench_schedule ==", flush=True)
     bench_schedule.run()
+    print("== bench_serving ==", flush=True)
+    bench_serving.run()
 
 
-def evaluate() -> list:
+def evaluate(ci: bool = False) -> list:
     derived = {}
     summary = []
-    for name, bench, key, op, threshold in GATES:
+    for name, bench, key, op, threshold, timing in GATES:
         if bench not in derived:
             path = OUT_DIR / f"{bench}.json"
             derived[bench] = (json.loads(path.read_text())["derived"]
                               if path.exists() else None)
         d = derived[bench]
         value = None if d is None else d.get(key)
-        ok = value is not None and OPS[op](value, threshold)
+        effective = threshold
+        if ci and timing and op == ">=":
+            effective = threshold * CI_SLACK
+        ok = value is not None and OPS[op](value, effective)
         summary.append({
             "name": name,
             "benchmark": bench,
             "value": value,
             "op": op,
             "threshold": threshold,
+            "ci_slack": CI_SLACK if (ci and timing and op == ">=") else None,
+            "effective_threshold": effective,
             "pass": bool(ok),
         })
     return summary
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--ci", action="store_true",
-                    help="emit GitHub Actions annotations for failures")
-    ap.add_argument("--skip-bench", action="store_true",
-                    help="evaluate existing benchmarks/out/*.json only")
-    args = ap.parse_args(argv)
+def _fmt(value) -> str:
+    if value is None:
+        return "missing"
+    if isinstance(value, float):
+        return f"{value:.4g}"
+    return str(value)
 
-    if not args.skip_bench:
-        run_benchmarks()
 
-    summary = evaluate()
+def report(summary: list, ci: bool, out_name: str) -> int:
     OUT_DIR.mkdir(parents=True, exist_ok=True)
-    (OUT_DIR / "gate_summary.json").write_text(json.dumps(summary, indent=2))
-
+    (OUT_DIR / out_name).write_text(json.dumps(summary, indent=2))
     failed = [g for g in summary if not g["pass"]]
     for g in summary:
         status = "PASS" if g["pass"] else "FAIL"
-        val = "missing" if g["value"] is None else f"{g['value']:.4g}" \
-            if isinstance(g["value"], float) else g["value"]
-        print(f"  [{status}] {g['name']}: {val} (want {g['op']} "
-              f"{g['threshold']})")
-        if not g["pass"] and args.ci:
+        want = f"{g['op']} {_fmt(g['effective_threshold'])}"
+        if g.get("ci_slack"):
+            want += f" (= {_fmt(g['threshold'])} * ci_slack {g['ci_slack']})"
+        print(f"  [{status}] {g['name']}: {_fmt(g['value'])} (want {want})")
+        if not g["pass"] and ci:
             print(f"::error title=gate {g['name']} failed::"
-                  f"{g['name']} = {val}, required {g['op']} {g['threshold']} "
-                  f"(from benchmarks/out/{g['benchmark']}.json)")
+                  f"{g['name']} = {_fmt(g['value'])}, required {want} "
+                  f"(from {g['benchmark']})")
     print(f"{len(summary) - len(failed)}/{len(summary)} gates passed "
-          f"(summary: benchmarks/out/gate_summary.json)")
+          f"(summary: benchmarks/out/{out_name})")
     return 1 if failed else 0
+
+
+def _trajectory_keys(entry: dict, declared) -> list:
+    if declared:
+        return [k for k in declared if k in entry]
+    return [k for k, v in entry.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)
+            and (k.endswith("_per_s") or "speedup" in k)]
+
+
+def check_trajectory(ci: bool = False) -> int:
+    """Compare the newest vs previous point of each repo-root BENCH_*.json."""
+    summary = []
+    for path in sorted(ROOT.glob("BENCH_*.json")):
+        data = json.loads(path.read_text())
+        hist = data.get("history", [])
+        if len(hist) < 2:
+            print(f"  [----] {path.name}: {len(hist)} point(s), nothing to "
+                  f"compare")
+            continue
+        prev, cur = hist[-2], hist[-1]
+        for key in _trajectory_keys(cur, data.get("trajectory_keys")):
+            if not isinstance(prev.get(key), (int, float)) \
+                    or isinstance(prev.get(key), bool):
+                continue
+            floor = (1.0 - TRAJECTORY_TOL) * prev[key]
+            summary.append({
+                "name": f"{path.stem}:{key}",
+                "benchmark": path.name,
+                "value": cur[key],
+                "op": ">=",
+                "threshold": floor,
+                "ci_slack": None,
+                "effective_threshold": floor,
+                "pass": bool(cur[key] >= floor),
+                "previous": prev[key],
+            })
+    if not summary:
+        print("no BENCH_*.json trajectory with >= 2 points; nothing gated")
+        return 0
+    return report(summary, ci, "trajectory_summary.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci", action="store_true",
+                    help="emit GitHub Actions annotations for failures and "
+                         "apply CI_SLACK to timing-ratio gates")
+    ap.add_argument("--skip-bench", action="store_true",
+                    help="evaluate existing benchmarks/out/*.json only")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="gate repo-root BENCH_*.json newest-vs-previous "
+                         "trajectory instead of running benchmarks")
+    args = ap.parse_args(argv)
+
+    if args.trajectory:
+        return check_trajectory(ci=args.ci)
+
+    if not args.skip_bench:
+        run_benchmarks()
+    return report(evaluate(ci=args.ci), args.ci, "gate_summary.json")
 
 
 if __name__ == "__main__":
