@@ -1,12 +1,12 @@
 """End-to-end paper driver: ResNet-20 energy-aware layer-wise compression.
 
-The full Section 5 protocol — QAT base training, per-layer systolic-trace
-profiling, energy-prioritized layer-wise compression (pruning x weight-set
-selection under the global accuracy constraint), final fine-tune — then the
-deployment step: export every restricted layer to packed 4-bit serving
-artifacts (`repro.core.export`) and run the *whole model* through the LUT
-GEMM serve path, checking logits and accuracy against the QAT fake-quant
-forward. Schedule -> export -> compressed inference, one invocation.
+The full Section 5 protocol as ONE `repro.pipeline.Pipeline` run through
+every stage — QAT base training, per-layer systolic-trace profiling, the
+energy model, energy-prioritized layer-wise compression (pruning x weight-set
+selection under the global accuracy constraint), packed 4-bit export, and the
+whole-model LUT-GEMM serve check against the QAT fake-quant forward. The
+resulting `CompressionPlan` can be saved (``--plan-out``) and re-served later
+with ``repro serve --plan-in``.
 
     PYTHONPATH=src python examples/compress_resnet20.py [--steps N]
     PYTHONPATH=src python examples/compress_resnet20.py --reduced  # CPU smoke
@@ -15,29 +15,40 @@ forward. Schedule -> export -> compressed inference, one invocation.
 import argparse
 import json
 
-import jax.numpy as jnp
-
-from repro.core.compression import CompressionPipeline, PipelineConfig
-from repro.core.export import export_model, export_summary
-from repro.core.runner import CnnRunner
 from repro.core.schedule import ScheduleConfig
 from repro.core.weight_selection import SelectionConfig
-from repro.data.synthetic import SyntheticImages
-from repro.nn import cnn
-from repro.nn.layers import QuantConfig
+from repro.pipeline import (
+    Pipeline,
+    PipelineConfig,
+    ProfileStageConfig,
+    ServeStageConfig,
+    TargetConfig,
+    TrainStageConfig,
+)
 
 
-def serve_accuracy(runner, params, state, comp, arts, *, n_batches=3,
-                   use_ref_kernel=False):
-    """Val accuracy with every exported layer on the 4-bit LUT path."""
-    qserve = QuantConfig.serve(use_ref_kernel=use_ref_kernel)
-    correct = 0
-    for i in range(n_batches):
-        x, y = runner.dataset.batch(i, runner.batch_size, "val")
-        logits, _, _ = runner.model.apply(params, state, x, train=False,
-                                          qcfg=qserve, comp=comp, serve=arts)
-        correct += int(jnp.sum((jnp.argmax(logits, -1) == y)))
-    return correct / (n_batches * runner.batch_size)
+def build_config(args) -> PipelineConfig:
+    return PipelineConfig(
+        target=TargetConfig(kind="cnn",
+                            arch="resnet8" if args.reduced else "resnet20",
+                            data_seed=7, batch_size=64, lr=2e-3),
+        train=TrainStageConfig(
+            qat_steps=args.steps,
+            final_finetune_steps=max(args.steps // 6, 20),
+            eval_batches=2 if args.reduced else 3),
+        profile=ProfileStageConfig(batches=1,
+                                   max_tiles=4 if args.reduced else 8),
+        schedule=ScheduleConfig(prune_ratios=(0.7, 0.5), k_targets=(16,),
+                                delta_acc=0.05, finetune_steps=20,
+                                trial_finetune_steps=12, eval_batches=2,
+                                max_layers=2 if args.reduced else 4,
+                                search_mode=args.search_mode),
+        selection=SelectionConfig(k_init=24, k_target=16, delta_acc=0.05,
+                                  score_batches=1, accept_batches=2,
+                                  max_score_candidates=4 if args.reduced
+                                  else 6),
+        serve=ServeStageConfig(use_ref_kernel=args.use_ref_kernel),
+    )
 
 
 def main():
@@ -53,58 +64,28 @@ def main():
                     help="schedule candidate search: vmapped sweep of all "
                          "(prune, k) configs per layer, or the serial "
                          "trial-and-rollback reference")
+    ap.add_argument("--plan-out", default=None, metavar="BASE",
+                    help="save the CompressionPlan to BASE.json + BASE.npz")
     args = ap.parse_args()
 
-    model = cnn.resnet8() if args.reduced else cnn.resnet20()
-    runner = CnnRunner(model, SyntheticImages(seed=7), batch_size=64, lr=2e-3)
-    cfg = PipelineConfig(
-        qat_steps=args.steps,
-        profile_batches=1,
-        profile_max_tiles=4 if args.reduced else 8,
-        final_finetune_steps=max(args.steps // 6, 20),
-        eval_batches=2 if args.reduced else 3,
-        schedule=ScheduleConfig(prune_ratios=(0.7, 0.5), k_targets=(16,),
-                                delta_acc=0.05, finetune_steps=20,
-                                trial_finetune_steps=12, eval_batches=2,
-                                max_layers=2 if args.reduced else 4,
-                                search_mode=args.search_mode),
-        selection=SelectionConfig(k_init=24, k_target=16, delta_acc=0.05,
-                                  score_batches=1, accept_batches=2,
-                                  max_score_candidates=4 if args.reduced
-                                  else 6),
-    )
-    pipe = CompressionPipeline(runner, cfg)
-    result = pipe.run(verbose=True)
-    print(json.dumps(result.summary(), indent=2))
+    plan = Pipeline(build_config(args)).run(verbose=True)
+    print(json.dumps(plan.summary(), indent=2))
 
-    # ---- export: comp tree -> packed 4-bit serving artifacts
-    arts = export_model(runner.model, pipe.params, pipe.comp)
-    summary = export_summary(arts)
-    print(f"\nexported {summary['layers']} compressed layers: "
-          f"{summary['weight_bytes_packed']} bytes packed "
-          f"({summary['compression_vs_int8']:.2f}x vs dense int8)")
-    if not arts:
+    m = plan.metrics
+    print(f"\nexported {m['export_layers']} compressed layers: "
+          f"{m['export_weight_bytes_packed']} bytes packed "
+          f"({m['export_compression_vs_int8']:.2f}x vs dense int8)")
+    if not plan.artifacts:
         print("no layer accepted a <=16-value restriction; nothing to serve")
         return
-
-    # ---- compressed inference: full model through the LUT GEMM serve path
-    x, _ = runner.dataset.batch(0, runner.batch_size, "val")
-    l_fake, _, _ = runner.model.apply(
-        pipe.params, pipe.state, x, train=False, qcfg=QuantConfig.on(),
-        comp=pipe.comp)
-    l_serve, _, _ = runner.model.apply(
-        pipe.params, pipe.state, x, train=False,
-        qcfg=QuantConfig.serve(use_ref_kernel=args.use_ref_kernel),
-        comp=pipe.comp, serve=arts)
-    rel = float(jnp.linalg.norm(l_serve - l_fake)
-                / jnp.maximum(jnp.linalg.norm(l_fake), 1e-9))
-    acc = serve_accuracy(runner, pipe.params, pipe.state, pipe.comp, arts,
-                         n_batches=cfg.eval_batches,
-                         use_ref_kernel=args.use_ref_kernel)
-    print(f"compressed serve: {len(arts)} layers on the 4-bit LUT GEMM, "
-          f"full-model logit rel_err={rel:.2e} vs fake-quant forward")
-    print(f"compressed serve accuracy: {acc:.3f} "
-          f"(schedule reported acc_final={result.acc_final:.3f})")
+    print(f"compressed serve: {m['serve_layers']} layers on the 4-bit LUT "
+          f"GEMM, full-model logit rel_err={m['serve_logit_rel_err']:.2e} "
+          f"vs fake-quant forward")
+    print(f"compressed serve accuracy: {m['serve_accuracy']:.3f} "
+          f"(schedule reported acc_final={m['acc_final']:.3f})")
+    if args.plan_out:
+        json_path, npz_path = plan.save(args.plan_out)
+        print(f"plan saved: {json_path} + {npz_path}")
 
 
 if __name__ == "__main__":

@@ -1,32 +1,35 @@
 """Quickstart: the paper's pipeline in ~60 seconds on CPU.
 
-Trains a QAT LeNet-5 on the synthetic CIFAR-10 stand-in, profiles per-layer
-MAC energy on the 64x64 systolic model, runs energy-prioritized layer-wise
-compression on the top layer, and reports the energy/accuracy trade-off.
+One `repro.pipeline.Pipeline` run: QAT LeNet-5 on the synthetic CIFAR-10
+stand-in, per-layer MAC energy profiling on the 64x64 systolic model,
+energy-prioritized layer-wise compression of the top layers, and the
+energy/accuracy report — the same flow the `repro` CLI drives
+(``python -m repro compress --reduced``).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 
-from repro.core.compression import CompressionPipeline, PipelineConfig
-from repro.core.runner import CnnRunner
 from repro.core.schedule import ScheduleConfig
 from repro.core.weight_selection import SelectionConfig
-from repro.data.synthetic import SyntheticImages
-from repro.nn import cnn
+from repro.pipeline import (
+    Pipeline,
+    PipelineConfig,
+    ProfileStageConfig,
+    TargetConfig,
+    TrainStageConfig,
+)
 
 
 def main():
     print(f"devices: {jax.devices()}")
-    runner = CnnRunner(cnn.lenet5(), SyntheticImages(seed=5), batch_size=64,
-                       lr=2e-3)
     cfg = PipelineConfig(
-        qat_steps=200,
-        profile_batches=1,
-        profile_max_tiles=6,
-        final_finetune_steps=30,
-        eval_batches=2,
+        target=TargetConfig(kind="cnn", arch="lenet5", data_seed=5,
+                            batch_size=64, lr=2e-3),
+        train=TrainStageConfig(qat_steps=200, final_finetune_steps=30,
+                               eval_batches=2),
+        profile=ProfileStageConfig(batches=1, max_tiles=6),
         # two candidate configs per layer: the default search_mode="batched"
         # sweeps both in one vmapped trial (see docs/schedule.md)
         schedule=ScheduleConfig(prune_ratios=(0.7, 0.5), k_targets=(16,),
@@ -37,13 +40,14 @@ def main():
                                   score_batches=1, accept_batches=1,
                                   max_score_candidates=4),
     )
-    result = CompressionPipeline(runner, cfg).run(verbose=True)
-    print(f"\n== quickstart result ==")
-    print(f"baseline accuracy : {result.acc_base:.3f}")
-    print(f"final accuracy    : {result.acc_final:.3f} "
-          f"(drop {result.accuracy_drop:.3f})")
-    print(f"conv energy saving: {result.energy_saving:.1%}")
-    print(f"max codebook size : {result.max_codebook}")
+    plan = Pipeline(cfg).run_until("schedule", verbose=True)
+    m = plan.metrics
+    print("\n== quickstart result ==")
+    print(f"baseline accuracy : {m['acc_base']:.3f}")
+    print(f"final accuracy    : {m['acc_final']:.3f} "
+          f"(drop {m['accuracy_drop']:.3f})")
+    print(f"conv energy saving: {m['energy_saving']:.1%}")
+    print(f"max codebook size : {m['max_codebook']}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,13 @@
-"""Serve a small LM through the continuous-batching engine.
+"""Serve a small LM through the continuous-batching engine — pipeline-driven.
 
-Demonstrates the serving subsystem end to end: a mixed-length request trace
-is queued into `repro.serving.ServingEngine`, packed into padded shape
-buckets (one jit compile per bucket, never per request), prefetched and
-decoded in waves, and accounted per request (latency, tokens/sec, estimated
-MAC energy). Runs a gemma3-family reduced config (5:1 local:global pattern
-with ring-buffer window caches) so both cache kinds are exercised, and
-cross-checks the engine output against the ``mode="oneshot"`` fallback.
+One `repro.pipeline.Pipeline` run with an LM target: a mixed-length request
+trace is packed into padded shape buckets (one jit compile per bucket, never
+per request), prefetched and decoded in waves, accounted per request
+(latency, tokens/sec, estimated MAC energy), and cross-checked against the
+``mode="oneshot"`` fallback. Runs a gemma3-family reduced config (5:1
+local:global pattern with ring-buffer window caches) so both cache kinds are
+exercised. The identical flow is available from the shell as
+``repro serve --target lm --arch gemma3-4b --reduced``.
 
     PYTHONPATH=src python examples/serve_lm.py [--requests 6] [--new-tokens 16]
 """
@@ -14,12 +15,13 @@ cross-checks the engine output against the ``mode="oneshot"`` fallback.
 import argparse
 import time
 
-import jax
-
-from repro.configs import get_config
-from repro.models.lm import build_lm
-from repro.nn.spec import init_params, spec_count
-from repro.serving import EngineConfig, ServingEngine
+from repro.pipeline import (
+    Pipeline,
+    PipelineConfig,
+    ServeStageConfig,
+    TargetConfig,
+    TrainStageConfig,
+)
 
 
 def main():
@@ -30,49 +32,37 @@ def main():
     ap.add_argument("--arch", default="gemma3-4b")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).scaled_down(compute_dtype="float32")
-    model = build_lm(cfg)
-    print(f"arch={cfg.name} (reduced: {spec_count(model.spec)/1e6:.1f}M params,"
-          f" pattern={cfg.pattern}, window={cfg.window})")
-    params = init_params(jax.random.PRNGKey(0), model.spec)
-
-    # mixed-length trace over two prompt buckets (floors match the bucket
-    # derivation so any --prompt-len >= 2 fits)
-    p_max = max(args.prompt_len, 2)
-    shapes = [(max(p_max - 9 * (i % 3), 2), args.new_tokens)
-              for i in range(args.requests)]
-    prompts = [
-        jax.random.randint(jax.random.PRNGKey(1 + i), (plen,), 0, cfg.vocab)
-        for i, (plen, _) in enumerate(shapes)
-    ]
-
-    ecfg = EngineConfig(max_batch=4,
-                        prompt_buckets=(max(p_max // 2, 2), p_max),
-                        new_token_buckets=(args.new_tokens,))
-    engine = ServingEngine(model, params, mode="engine", config=ecfg)
-    engine.warmup(shapes)
-
+    cfg = PipelineConfig(
+        target=TargetConfig(kind="lm", arch=args.arch, reduced=True),
+        train=TrainStageConfig(qat_steps=0, final_finetune_steps=0),
+        # mixed-length trace over two prompt buckets; engine output is
+        # cross-checked token for token against the oneshot fallback
+        serve=ServeStageConfig(mode="engine", requests=args.requests,
+                               prompt_len=max(args.prompt_len, 2),
+                               new_tokens=args.new_tokens, mixed=True,
+                               mixed_stride=9, max_batch=4, prompt_seed=1,
+                               verify_oneshot=True),
+    )
+    pipe = Pipeline(cfg)
     t0 = time.time()
-    results = engine.serve(prompts, [n for _, n in shapes])
+    plan = pipe.run(verbose=True)
     dt = time.time() - t0
-    rep = engine.report()
-    print(f"engine: {rep['requests']} requests / {rep['new_tokens']} tokens "
-          f"in {dt*1e3:.0f} ms ({rep['tokens_per_s']:.0f} tok/s), "
-          f"ttft p50 {rep['ttft_p50_s']*1e3:.0f} ms, "
-          f"latency p50 {rep['latency_p50_s']*1e3:.0f} ms, "
-          f"{rep['cache_buckets_compiled']} buckets / "
-          f"{rep['cache_compile_count']} compiles, "
-          f"energy {rep['energy_eu_per_token']:.3g} eu/token")
 
-    # single-shot fallback: identical outputs, no batching
-    oneshot = ServingEngine(model, params, mode="oneshot", config=ecfg)
-    oneshot.warmup(shapes)
-    ref = oneshot.serve(prompts, [n for _, n in shapes])
-    assert all(results[r].tokens == ref[r].tokens for r in results), \
+    m = plan.metrics
+    print(f"engine: {m['serve_requests']} requests / "
+          f"{m['serve_new_tokens']} tokens in {dt*1e3:.0f} ms "
+          f"({m['serve_tokens_per_s']:.0f} tok/s), "
+          f"ttft p50 {m['serve_ttft_p50_s']*1e3:.0f} ms, "
+          f"latency p50 {m['serve_latency_p50_s']*1e3:.0f} ms, "
+          f"{m['serve_cache_buckets_compiled']} buckets / "
+          f"{m['serve_cache_compile_count']} compiles, "
+          f"energy {m['serve_energy_eu_per_token']:.3g} eu/token")
+
+    assert m["serve_parity_engine_vs_oneshot"], \
         "engine vs oneshot token mismatch"
+    results = pipe.target.last_serve_results
     for rid in sorted(results)[:2]:
-        print(f"request {rid}: prompt[{len(prompts[rid])}] -> "
-              f"{results[rid].tokens[:8]}...")
+        print(f"request {rid}: {results[rid].tokens[:8]}...")
     print("OK (engine == oneshot)")
 
 

@@ -4,4 +4,4 @@ Reproduction + production framework for "Layer-wise Weight Selection for
 Power-Efficient Neural Network Acceleration" (Fang, Zhang, Huang; CS.AR 2025).
 """
 
-__version__ = "0.1.0"
+__version__ = "0.4.0"

@@ -1,13 +1,15 @@
-"""End-to-end compression pipeline orchestration (paper Section 5 protocol).
+"""Deprecated shim: the seed-era CNN pipeline API over `repro.pipeline`.
 
-    1. quantization-aware training of the base model (8-bit W/A),
-    2. per-layer systolic-trace profiling -> energy LUTs + layer energies,
-    3. energy-prioritized layer-wise compression (pruning + weight selection),
-    4. final fine-tune + report.
+The orchestration that used to live here — QAT base training, per-layer
+systolic-trace profiling, energy-prioritized layer-wise compression, final
+fine-tune — is now the `profile -> energy_model -> schedule` prefix of the
+staged `repro.pipeline.Pipeline` (see docs/pipeline.md), which adds the
+export and serve stages, a serializable `CompressionPlan` artifact, resume,
+and the LM target behind the same interface.
 
-`CompressionPipeline.run()` returns a `PipelineResult` with everything the
-paper's tables report: accuracy before/after, conv-layer energy saving,
-selected weight counts, and per-layer decisions.
+`CompressionPipeline` and this module's `PipelineConfig` survive as thin
+delegates so seed-era callers and tests keep working; new code should build
+a `repro.pipeline.PipelineConfig` and call `Pipeline` directly.
 """
 
 from __future__ import annotations
@@ -15,14 +17,11 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
+import warnings
 from typing import Dict, Optional
 
 from repro.core.runner import CnnRunner
-from repro.core.schedule import (
-    ScheduleConfig,
-    ScheduleResult,
-    energy_prioritized_compression,
-)
+from repro.core.schedule import ScheduleConfig, ScheduleResult
 from repro.core.weight_selection import SelectionConfig
 
 
@@ -78,57 +77,47 @@ class PipelineResult:
 
 
 class CompressionPipeline:
+    """Deprecated delegate over `repro.pipeline.Pipeline` (CNN target).
+
+    Runs the `profile -> energy_model -> schedule` stage prefix on the
+    caller's runner and maps the resulting `CompressionPlan` back onto the
+    seed-era `PipelineResult`. Attribute contract is unchanged: after
+    ``run()`` the instance exposes ``params / state / opt_state / comp /
+    stats`` (plus the new ``plan``)."""
+
     def __init__(self, runner: CnnRunner, cfg: Optional[PipelineConfig] = None):
         self.runner = runner
         self.cfg = cfg or PipelineConfig()
 
     def run(self, *, verbose: bool = False) -> PipelineResult:
+        from repro.pipeline.config import from_legacy
+        from repro.pipeline.pipeline import Pipeline
+        from repro.pipeline.targets import CnnTarget
+
+        warnings.warn(
+            "repro.core.compression.CompressionPipeline is deprecated; "
+            "use repro.pipeline.Pipeline (see docs/pipeline.md)",
+            DeprecationWarning, stacklevel=2)
         t0 = time.time()
-        cfg = self.cfg
-        runner = self.runner
+        pcfg = from_legacy(self.cfg,
+                           arch=getattr(self.runner.model, "name", None))
+        target = CnnTarget(pcfg, runner=self.runner)
+        plan = Pipeline(target, pcfg).run_until("schedule", verbose=verbose)
+        sched = target.last_schedule_result
 
-        # 1. QAT base training
-        params, state, opt_state, comp = runner.init()
-        params, state, opt_state, loss = runner.train(
-            params, state, opt_state, comp, cfg.qat_steps)
-        acc_base = runner.accuracy(params, state, comp,
-                                   n_batches=cfg.eval_batches)
-        if verbose:
-            print(f"[pipeline] QAT base: loss={loss:.4f} acc={acc_base:.3f}")
-
-        # 2. profile
-        stats = runner.profile(params, state, comp,
-                               n_batches=cfg.profile_batches,
-                               max_tiles=cfg.profile_max_tiles)
-
-        # 3. energy-prioritized layer-wise compression
-        params, state, opt_state, comp, sched = energy_prioritized_compression(
-            runner, params, state, opt_state, comp, stats, cfg.schedule,
-            cfg.selection, verbose=verbose)
-
-        # 4. final fine-tune
-        if cfg.final_finetune_steps:
-            params, state, opt_state, _ = runner.train(
-                params, state, opt_state, comp, cfg.final_finetune_steps)
-        acc_final = runner.accuracy(params, state, comp,
-                                    n_batches=cfg.eval_batches)
-
-        models = runner.refresh_counts(
-            params, comp, runner.energy_models(params, comp, stats))
-        e_after = sum(m.energy for m in models.values())
-
-        ks = [int(d.k) for d in sched.decisions if d.k is not None]
+        self.params, self.state = plan.params, plan.state
+        self.opt_state, self.comp = plan.opt_state, plan.comp
+        self.stats = plan.stats
+        self.plan = plan
         result = PipelineResult(
-            acc_base=acc_base,
-            acc_final=acc_final,
+            acc_base=plan.metrics["acc_base"],
+            acc_final=plan.metrics["acc_final"],
             energy_before=sched.energy_before,
-            energy_after=float(e_after),
-            max_codebook=max(ks) if ks else 256,
+            energy_after=plan.metrics["energy_after"],
+            max_codebook=plan.metrics["max_codebook"],
             schedule=sched,
             wall_seconds=time.time() - t0,
         )
-        self.params, self.state, self.opt_state, self.comp = params, state, opt_state, comp
-        self.stats = stats
         if verbose:
             print(json.dumps(result.summary(), indent=2))
         return result

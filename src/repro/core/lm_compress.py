@@ -202,6 +202,36 @@ def export_lm_matmuls(model: LMModel, params: dict, comp: dict, *,
     return out
 
 
+def lut_parity_report(model: LMModel, params: dict, comp: dict, arts: Dict,
+                      *, check_units: int = 4, seed: int = 2) -> Dict[str, float]:
+    """LUT-GEMM vs fake-quant-matmul parity on random activations.
+
+    Checks up to ``check_units`` exported units (units without an artifact —
+    e.g. export called with ``limit`` — are skipped, not treated as the end
+    of the walk). Returns {unit_name: rel_err}. Shared by the pipeline's LM
+    export stage and `repro.launch.serve.compress_report`.
+    """
+    from repro.core.export import serve_dense
+
+    checked: Dict[str, float] = {}
+    for name, w, c, layout in iter_restricted_units(model, params, comp):
+        if len(checked) >= check_units:
+            break
+        if name not in arts:
+            continue
+        art = arts[name]
+        x = jax.random.normal(jax.random.PRNGKey(seed), (4, art.k_dim))
+        w_fake = qat.fake_quant_weight(w, c)
+        w_mat = (w_fake.reshape(w.shape[0], -1) if layout == "in_first"
+                 else w_fake.reshape(-1, w.shape[-1]))
+        want = x @ w_mat
+        got = serve_dense(x, art)
+        checked[name] = float(
+            jnp.linalg.norm(got - want)
+            / jnp.maximum(jnp.linalg.norm(want), 1e-9))
+    return checked
+
+
 def symmetric_codebook_values(k: int) -> list:
     """Restricted set of exactly k int8 values: 0 plus levels spread over the
     int8 range (one extra negative level when k is even)."""

@@ -30,8 +30,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.grouping import N_GROUPS, group_id
-from repro.core.mac_model import DEFAULT_COEFFS, MacEnergyCoeffs, mac_transition_energy
+from repro.core.grouping import N_GROUPS
+from repro.core.mac_model import DEFAULT_COEFFS, MacEnergyCoeffs
 
 TILE = 64  # systolic array dimension (64x64 weight-stationary, paper 3.2)
 N_WVALS = 256  # int8 weight values, indexed by w + 128
@@ -62,6 +62,17 @@ class LayerStats:
         seen = self.count > 0
         mean_seen = jnp.sum(jnp.where(seen, lut, 0.0)) / jnp.maximum(jnp.sum(seen), 1)
         return jnp.where(seen, lut, mean_seen)
+
+
+# registered as a pytree so stats dicts — and the CompressionPlan carrying
+# them between pipeline stages — pass through jax.tree utilities and device
+# placement as data (n_transitions is static aux)
+jax.tree_util.register_pytree_node(
+    LayerStats,
+    lambda s: ((s.act_hist, s.group_hist, s.energy_sum, s.count),
+               s.n_transitions),
+    lambda aux, ch: LayerStats(ch[0], ch[1], ch[2], ch[3], aux),
+)
 
 
 def empty_stats() -> LayerStats:
@@ -95,43 +106,19 @@ def tile_transition_stats(
     """Trace one tile; return (energy_sum[256], count[256], group_hist, act_hist).
 
     Shapes as in `tile_psum_trace`. Differentiable nowhere; int statistics.
+
+    Single-tile view of the batched oracle: the trace math lives ONCE, in
+    `repro.core.profiler.batched_stats_oracle` (the implementation behind the
+    pipeline's `profile` stage), and this wrapper is a batch of one. The
+    seed's standalone per-tile implementation survives only as the frozen
+    baseline of `benchmarks/bench_kernels.py`, where it is *the thing being
+    measured against*.
     """
-    w_tile = jnp.asarray(w_tile, jnp.int32)
-    a_block = jnp.asarray(a_block, jnp.int32)
-    k_t, m_t = w_tile.shape
-    t_len = a_block.shape[1]
+    from repro.core.profiler import batched_stats_oracle
 
-    psums = tile_psum_trace(w_tile, a_block)  # (K, M, T)
-    p_prev, p_cur = psums[:, :, :-1], psums[:, :, 1:]
-    a_prev, a_cur = a_block[:, None, :-1], a_block[:, None, 1:]
-    w = w_tile[:, :, None]
-
-    energy = mac_transition_energy(w, a_prev, a_cur, p_prev, p_cur, coeffs)  # (K, M, T-1)
-
-    w_bins = jnp.broadcast_to(w + 128, energy.shape).reshape(-1)
-    energy_flat = energy.reshape(-1)
-    energy_sum = jax.ops.segment_sum(energy_flat, w_bins, num_segments=N_WVALS)
-    count = jax.ops.segment_sum(jnp.ones_like(energy_flat), w_bins, num_segments=N_WVALS)
-
-    g_prev = group_id(p_prev).reshape(-1)
-    g_cur = group_id(p_cur).reshape(-1)
-    g_bins = g_prev * N_GROUPS + g_cur
-    group_hist = jax.ops.segment_sum(
-        jnp.ones_like(g_bins, jnp.float32), g_bins, num_segments=N_GROUPS * N_GROUPS
-    ).reshape(N_GROUPS, N_GROUPS)
-
-    ap = (a_block[:, :-1] + 128).reshape(-1)
-    ac = (a_block[:, 1:] + 128).reshape(-1)
-    a_bins = ap * N_WVALS + ac
-    act_hist = jax.ops.segment_sum(
-        jnp.ones_like(a_bins, jnp.float32), a_bins, num_segments=N_WVALS * N_WVALS
-    ).reshape(N_WVALS, N_WVALS)
-
-    del k_t, m_t, t_len
-    return energy_sum, count, group_hist, act_hist
-
-
-_tile_transition_stats_jit = jax.jit(tile_transition_stats, static_argnames=("coeffs",))
+    w = jnp.asarray(w_tile, jnp.int32)[None]
+    a = jnp.asarray(a_block, jnp.int32)[None]
+    return batched_stats_oracle(w, a, jnp.ones((1,), jnp.float32), coeffs)
 
 
 def pad_to_tiles(w_mat: jax.Array, x_cols: jax.Array) -> Tuple[jax.Array, jax.Array]:

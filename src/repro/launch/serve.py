@@ -1,12 +1,17 @@
-"""Serving launcher: thin CLI over the continuous-batching engine.
+"""Serving launcher: thin CLI over the unified compression pipeline.
 
-Production shape: restore params from a checkpoint (mesh-elastic), build a
-`repro.serving.ServingEngine`, and drain a request trace through it. On this
-CPU host it drives reduced configs (examples/serve_lm.py shows the same flow
-scripted); on a pod the identical code runs the engine's optional sharded
-decode over `repro.distributed.sharding.request_mesh()`.
+Production shape: `repro.pipeline.Pipeline` with an LM target — restore
+params from a checkpoint (mesh-elastic), optionally restrict every eligible
+matmul to a k-value codebook + export the packed 4-bit artifacts, and drain
+a request trace through `repro.serving.ServingEngine`. On this CPU host it
+drives reduced configs (examples/serve_lm.py shows the same flow scripted);
+on a pod the identical code runs the engine's optional sharded decode over
+`repro.distributed.sharding.request_mesh()`.
 
     python -m repro.launch.serve --arch gemma3-4b --reduced --batch 4
+
+Equivalent pipeline CLI: ``repro serve --target lm --arch gemma3-4b
+--reduced`` (same stages, same plan; see docs/pipeline.md).
 
 ``--mode oneshot`` swaps the engine for its single-shot fallback (batch-1
 waves, one request at a time, same buckets and compile cache) — the two
@@ -22,51 +27,33 @@ against the fake-quant matmul before serving (see docs/serving.md).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
-
-from repro.checkpoint.manager import CheckpointManager
-from repro.configs import get_config
-from repro.models.lm import build_lm
-from repro.nn.spec import init_params, spec_count
-from repro.serving import EngineConfig, ServingEngine
 
 
 def compress_report(model, params, k: int, *, block_k: int = 128,
                     check_units: int = 4, seed: int = 2):
     """Export eligible LM matmuls at codebook size ``k`` and verify parity.
 
-    Restricts every eligible matmul to a symmetric k-value codebook, exports
-    the packed 4-bit artifacts, and checks the LUT GEMM against the QAT
-    fake-quant matmul on random activations for ``check_units`` units.
-    Returns (artifacts, summary dict).
+    Standalone form of the pipeline's export stage
+    (`repro.pipeline.targets.LMTarget.stage_export`) for callers holding a
+    bare (model, params): restricts every eligible matmul to a symmetric
+    k-value codebook, exports the packed 4-bit artifacts, and checks the LUT
+    GEMM against the QAT fake-quant matmul on random activations for
+    ``check_units`` units. Returns (artifacts, summary dict).
     """
-    from repro.core import lm_compress, qat
-    from repro.core.export import export_summary, serve_dense
+    from repro.core import lm_compress
+    from repro.core.export import export_summary
 
     values = lm_compress.symmetric_codebook_values(k)
     comp = lm_compress.init_lm_comp(model)
     comp = lm_compress.restrict_all_codebooks(model, comp, values)
     arts = lm_compress.export_lm_matmuls(model, params, comp, block_k=block_k)
     summary = export_summary(arts)
-
-    checked = {}
-    for name, w, c, layout in lm_compress.iter_restricted_units(
-            model, params, comp):
-        if len(checked) >= check_units or name not in arts:
-            break
-        art = arts[name]
-        x = jax.random.normal(jax.random.PRNGKey(seed), (4, art.k_dim))
-        w_fake = qat.fake_quant_weight(w, c)
-        w_mat = (w_fake.reshape(w.shape[0], -1) if layout == "in_first"
-                 else w_fake.reshape(-1, w.shape[-1]))
-        want = x @ w_mat
-        got = serve_dense(x, art)
-        rel = float(jnp.linalg.norm(got - want)
-                    / jnp.maximum(jnp.linalg.norm(want), 1e-9))
-        checked[name] = rel
+    checked = lm_compress.lut_parity_report(model, params, comp, arts,
+                                            check_units=check_units,
+                                            seed=seed)
     summary["parity_checked"] = checked
     summary["parity_max_rel_err"] = max(checked.values()) if checked else 0.0
     return arts, summary
@@ -108,12 +95,11 @@ def generate(model, params, prompts: jax.Array, *, new_tokens: int,
 def trace_shapes(n_requests: int, prompt_len: int, new_tokens: int,
                  mixed: bool) -> list:
     """(prompt_len, new_tokens) per request; ``mixed`` varies lengths
-    deterministically to exercise several buckets."""
-    if not mixed:
-        return [(prompt_len, new_tokens)] * n_requests
-    lens = [max(2, prompt_len - 7 * (i % 3)) for i in range(n_requests)]
-    news = [max(2, new_tokens - 3 * (i % 2)) for i in range(n_requests)]
-    return list(zip(lens, news))
+    deterministically to exercise several buckets. Delegates to the
+    pipeline's trace generator so the CLI and the serve stage agree."""
+    from repro.pipeline.targets import lm_trace_shapes
+
+    return lm_trace_shapes(n_requests, prompt_len, new_tokens, mixed)
 
 
 def main(argv=None):
@@ -138,64 +124,57 @@ def main(argv=None):
                     help="restrict eligible matmuls to a k-value codebook, "
                          "export packed 4-bit artifacts, verify LUT parity, "
                          "and serve the compressed forward")
+    ap.add_argument("--plan-out", default=None, metavar="BASE",
+                    help="save the CompressionPlan to BASE.json + BASE.npz")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.scaled_down(compute_dtype="float32")
-    model = build_lm(cfg)
-    print(f"serving {cfg.name}: {spec_count(model.spec)/1e6:.1f}M params")
+    from repro.pipeline import (
+        Pipeline,
+        PipelineConfig,
+        ServeStageConfig,
+        TargetConfig,
+        TrainStageConfig,
+    )
 
-    if args.ckpt_dir:
-        ckpt = CheckpointManager(args.ckpt_dir)
-        step, state = ckpt.restore()
-        params = state["params"] if "params" in state else state
-        print(f"restored checkpoint step {step}")
-    else:
-        params = init_params(jax.random.PRNGKey(0), model.spec)
+    cfg = PipelineConfig(
+        target=TargetConfig(kind="lm", arch=args.arch, reduced=args.reduced,
+                            ckpt_dir=args.ckpt_dir),
+        train=TrainStageConfig(qat_steps=0, final_finetune_steps=0),
+        serve=ServeStageConfig(mode=args.mode, compress_k=args.compress_k,
+                               requests=args.batch,
+                               prompt_len=args.prompt_len,
+                               new_tokens=args.new_tokens, mixed=args.mixed,
+                               max_batch=args.max_batch,
+                               temperature=args.temperature),
+    )
+    pipe = Pipeline(cfg)
+    plan = pipe.run_until("serve", verbose=True)
+    m = plan.metrics
 
+    print(f"serving {pipe.target.name}: {m['n_params']/1e6:.1f}M params")
     if args.compress_k:
-        arts, summary = compress_report(model, params, args.compress_k)
-        print(f"compressed export: {summary['layers']} matmuls, "
-              f"{summary['weight_bytes_packed'] / 1e6:.2f} MB packed "
-              f"({summary['compression_vs_int8']:.2f}x vs int8), "
+        print(f"compressed export: {m['export_layers']} matmuls, "
+              f"{m['export_weight_bytes_packed'] / 1e6:.2f} MB packed "
+              f"({m['export_compression_vs_int8']:.2f}x vs int8), "
               f"LUT parity max rel err "
-              f"{summary['parity_max_rel_err']:.2e}")
+              f"{m['export_parity_max_rel_err']:.2e}")
 
-    shapes = trace_shapes(args.batch, args.prompt_len, args.new_tokens,
-                          args.mixed)
-    p_bucket = max(s[0] for s in shapes)
-    n_bucket = max(s[1] for s in shapes)
-    ecfg = EngineConfig(max_batch=args.max_batch,
-                        prompt_buckets=(max(p_bucket // 2, 2), p_bucket),
-                        new_token_buckets=(n_bucket,))
-    engine = ServingEngine(model, params, mode=args.mode, config=ecfg,
-                           compress_k=args.compress_k)
-    engine.warmup(shapes)
-
-    prompts = [
-        jax.random.randint(jax.random.PRNGKey(100 + i), (plen,), 0, cfg.vocab)
-        for i, (plen, _) in enumerate(shapes)
-    ]
-    t0 = time.time()
-    for prompt, (_, ntok) in zip(prompts, shapes):
-        engine.submit(prompt, ntok, temperature=args.temperature)
-    results = engine.run()
-    dt = time.time() - t0
-
-    rep = engine.report()
-    print(f"{args.mode}: {rep['requests']} requests, "
-          f"{rep['new_tokens']} tokens in {dt:.2f}s "
-          f"({rep['tokens_per_s']:.1f} tok/s), "
-          f"latency p50/p99 {rep['latency_p50_s']*1e3:.0f}/"
-          f"{rep['latency_p99_s']*1e3:.0f} ms, "
-          f"ttft p50 {rep['ttft_p50_s']*1e3:.0f} ms, "
-          f"energy {rep['energy_eu_total']:.3g} eu "
-          f"({rep['energy_eu_per_token']:.3g} eu/token), "
-          f"{rep['cache_buckets_compiled']} buckets / "
-          f"{rep['cache_compile_count']} compiles")
+    print(f"{args.mode}: {m['serve_requests']} requests, "
+          f"{m['serve_new_tokens']} tokens in {m['serve_wall_s']:.2f}s "
+          f"({m['serve_tokens_per_s']:.1f} tok/s), "
+          f"latency p50/p99 {m['serve_latency_p50_s']*1e3:.0f}/"
+          f"{m['serve_latency_p99_s']*1e3:.0f} ms, "
+          f"ttft p50 {m['serve_ttft_p50_s']*1e3:.0f} ms, "
+          f"energy {m['serve_energy_eu_total']:.3g} eu "
+          f"({m['serve_energy_eu_per_token']:.3g} eu/token), "
+          f"{m['serve_cache_buckets_compiled']} buckets / "
+          f"{m['serve_cache_compile_count']} compiles")
+    results = pipe.target.last_serve_results
     for rid in sorted(results)[:2]:
         print(f"  req{rid}: {results[rid].tokens[:10]}...")
+    if args.plan_out:
+        json_path, npz_path = plan.save(args.plan_out)
+        print(f"plan saved: {json_path} + {npz_path}")
 
 
 if __name__ == "__main__":

@@ -330,3 +330,57 @@ def cache_shardings(model: LMModel, shape: Shape, mesh: Mesh,
     axes = cache_axes(spec, kv_seq_shard=kv_seq_shard)
     return shardings_from_axes_tree(axes, spec, mesh, rules,
                                     guard_report=guard_report)
+
+
+# ====================================================================== CLI
+
+
+def main(argv=None):
+    """Thin train launcher over the unified pipeline: LM QAT base training
+    (the pipeline's `profile` stage with ``train.qat_steps > 0``, built on
+    this module's step factories) plus the energy model, saving the
+    resulting `CompressionPlan` for a later ``repro compress/serve`` resume.
+
+        python -m repro.launch.train --arch olmo-1b --reduced --steps 50 \
+            --plan-out /tmp/olmo_plan
+    """
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--steps", type=int, default=50,
+                    help="QAT training steps before profiling")
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore params instead of initializing")
+    ap.add_argument("--plan-out", default=None, metavar="BASE",
+                    help="save the plan to BASE.json + BASE.npz")
+    args = ap.parse_args(argv)
+
+    from repro.pipeline import (
+        Pipeline,
+        PipelineConfig,
+        TargetConfig,
+        TrainStageConfig,
+    )
+
+    cfg = PipelineConfig(
+        target=TargetConfig(kind="lm", arch=args.arch, reduced=args.reduced,
+                            seed=args.seed, batch_size=args.batch_size,
+                            lr=args.lr, ckpt_dir=args.ckpt_dir),
+        train=TrainStageConfig(qat_steps=args.steps, final_finetune_steps=0),
+    )
+    plan = Pipeline(cfg).run_until("energy_model", verbose=True)
+    print(json.dumps(plan.summary(), indent=2))
+    if args.plan_out:
+        json_path, npz_path = plan.save(args.plan_out)
+        print(f"plan saved: {json_path} + {npz_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Unified compression-pipeline API: one `CompressionPlan` from profile to
+serve (see docs/pipeline.md).
+
+Attribute access is lazy (PEP 562) so that importing `repro.pipeline` — as
+the `repro` CLI does before argument parsing — does not pull jax or any
+stage module. ``repro.pipeline.schema`` stays import-light by construction.
+"""
+
+from __future__ import annotations
+
+_EXPORTS = {
+    # config namespace
+    "PipelineConfig": "repro.pipeline.config",
+    "TargetConfig": "repro.pipeline.config",
+    "TrainStageConfig": "repro.pipeline.config",
+    "ProfileStageConfig": "repro.pipeline.config",
+    "ExportStageConfig": "repro.pipeline.config",
+    "ServeStageConfig": "repro.pipeline.config",
+    "reduced_cnn_config": "repro.pipeline.config",
+    "reduced_lm_config": "repro.pipeline.config",
+    # plan artifact
+    "CompressionPlan": "repro.pipeline.plan",
+    # targets
+    "CnnTarget": "repro.pipeline.targets",
+    "LMTarget": "repro.pipeline.targets",
+    "resolve_target": "repro.pipeline.targets",
+    # driver
+    "Pipeline": "repro.pipeline.pipeline",
+    # jax-free schema constants
+    "STAGES": "repro.pipeline.schema",
+    "PLAN_SCHEMA_VERSION": "repro.pipeline.schema",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module_name = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.pipeline' has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(module_name), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,312 @@
+"""One validated configuration namespace for the whole compression pipeline.
+
+`PipelineConfig` composes the per-stage configs that used to be wired by hand
+in every example/launcher — `ScheduleConfig` and `SelectionConfig` are the
+*existing* dataclasses from `repro.core`, embedded unchanged — plus target
+selection (CNN vs LM behind one `Target` protocol, see
+`repro.pipeline.targets`) and the train/profile/export/serve knobs that were
+previously loose function arguments.
+
+The whole tree round-trips through plain dicts / JSON (``to_dict`` /
+``from_dict`` / ``save`` / ``load``): tuples become lists on the way out and
+are restored by field type on the way in, unknown keys are rejected (typos in
+a config file fail loudly), and ``validate()`` checks cross-field invariants
+once instead of five call sites doing it differently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import typing
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.schedule import ScheduleConfig
+from repro.core.weight_selection import SelectionConfig
+
+CNN_ARCHS = ("lenet5", "resnet8", "resnet20", "resnet50")
+
+
+@dataclasses.dataclass
+class TargetConfig:
+    """What model the pipeline compresses and how its runtime is built."""
+
+    kind: str = "cnn"            # "cnn" | "lm"
+    arch: str = "lenet5"         # cnn: CNN_ARCHS; lm: repro.configs ids
+    reduced: bool = False        # lm: scaled_down CPU config of the family
+    seed: int = 0                # param init seed
+    data_seed: int = 7           # synthetic dataset seed (cnn)
+    batch_size: int = 64         # train/eval batch (cnn)
+    lr: float = 2e-3             # QAT learning rate (cnn)
+    ckpt_dir: Optional[str] = None  # lm: restore params instead of init
+
+
+@dataclasses.dataclass
+class TrainStageConfig:
+    """QAT base training before profiling + the post-schedule fine-tune."""
+
+    qat_steps: int = 300
+    final_finetune_steps: int = 100
+    eval_batches: int = 4
+
+
+@dataclasses.dataclass
+class ProfileStageConfig:
+    """Systolic-trace profiling budget (see repro.core.profiler)."""
+
+    batches: int = 1
+    max_tiles: int = 16
+
+
+@dataclasses.dataclass
+class ExportStageConfig:
+    """Packed 4-bit artifact export (see repro.core.export)."""
+
+    block_k: int = 128
+
+
+@dataclasses.dataclass
+class ServeStageConfig:
+    """Serve-stage behaviour.
+
+    CNN targets run the full-model LUT-GEMM forward and report parity vs the
+    fake-quant reference; LM targets drive `repro.serving.ServingEngine`
+    over a deterministic mixed-length trace.
+    """
+
+    mode: str = "engine"         # "engine" | "oneshot" (lm)
+    compress_k: int = 0          # lm: uniform k-value codebook restriction
+    requests: int = 4
+    prompt_len: int = 32
+    new_tokens: int = 16
+    mixed: bool = False          # vary request lengths across buckets
+    mixed_stride: int = 7        # prompt-length decrement for mixed traces
+    max_batch: int = 8           # engine wave width
+    temperature: float = 0.0
+    prompt_seed: int = 100       # base seed of the synthetic prompt trace
+    verify_oneshot: bool = False  # lm: cross-check engine vs oneshot tokens
+    use_ref_kernel: bool = False  # cnn: serve via the jnp oracle
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    target: TargetConfig = dataclasses.field(default_factory=TargetConfig)
+    train: TrainStageConfig = dataclasses.field(
+        default_factory=TrainStageConfig)
+    profile: ProfileStageConfig = dataclasses.field(
+        default_factory=ProfileStageConfig)
+    schedule: ScheduleConfig = dataclasses.field(
+        default_factory=ScheduleConfig)
+    selection: SelectionConfig = dataclasses.field(
+        default_factory=SelectionConfig)
+    export: ExportStageConfig = dataclasses.field(
+        default_factory=ExportStageConfig)
+    serve: ServeStageConfig = dataclasses.field(
+        default_factory=ServeStageConfig)
+
+    # ------------------------------------------------------------ round-trip
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PipelineConfig":
+        cfg = _build(cls, d, path="config")
+        cfg.validate()
+        return cfg
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PipelineConfig":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path) -> None:
+        Path(path).write_text(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path) -> "PipelineConfig":
+        return cls.from_json(Path(path).read_text())
+
+    # ------------------------------------------------------------ validation
+
+    def validate(self) -> "PipelineConfig":
+        from repro.core.qat import K_MAX
+        from repro.core.schedule import _SEARCH_MODES
+
+        t = self.target
+        if t.kind not in ("cnn", "lm"):
+            raise ValueError(f"target.kind must be 'cnn' or 'lm', got {t.kind!r}")
+        if t.kind == "cnn" and t.arch not in CNN_ARCHS:
+            raise ValueError(
+                f"target.arch {t.arch!r} is not a CNN arch {CNN_ARCHS}")
+        if self.schedule.search_mode not in _SEARCH_MODES:
+            raise ValueError(
+                f"schedule.search_mode must be one of "
+                f"{sorted(_SEARCH_MODES)}, got {self.schedule.search_mode!r}")
+        for p in self.schedule.prune_ratios:
+            if not 0.0 <= p < 1.0:
+                raise ValueError(f"schedule.prune_ratios entry {p} not in [0, 1)")
+        for k in self.schedule.k_targets:
+            if not 1 <= k <= K_MAX:
+                raise ValueError(f"schedule.k_targets entry {k} not in [1, {K_MAX}]")
+        if not 1 <= self.selection.k_target <= self.selection.k_init <= 256:
+            raise ValueError(
+                f"selection needs 1 <= k_target <= k_init, got "
+                f"{self.selection.k_target} / {self.selection.k_init}")
+        if self.serve.mode not in ("engine", "oneshot"):
+            raise ValueError(
+                f"serve.mode must be 'engine' or 'oneshot', got {self.serve.mode!r}")
+        if not 0 <= self.serve.compress_k <= K_MAX:
+            raise ValueError(
+                f"serve.compress_k must be in [0, {K_MAX}], got "
+                f"{self.serve.compress_k}")
+        for name in ("qat_steps", "final_finetune_steps", "eval_batches"):
+            if getattr(self.train, name) < 0:
+                raise ValueError(f"train.{name} must be >= 0")
+        return self
+
+    # ------------------------------------------------------------- overrides
+
+    def with_overrides(
+        self, overrides: Optional[Dict[str, Dict[str, Any]]]
+    ) -> "PipelineConfig":
+        """Functional per-section overrides: ``{"schedule": {"max_layers": 1}}``.
+
+        Sections are the field names of this dataclass; unknown sections or
+        fields raise (same strictness as `from_dict`)."""
+        if not overrides:
+            return self
+        sections = {f.name: f for f in dataclasses.fields(self)}
+        out = self
+        for section, fields in overrides.items():
+            if section not in sections:
+                raise ValueError(
+                    f"unknown config section {section!r}; have "
+                    f"{sorted(sections)}")
+            cur = getattr(out, section)
+            valid = {f.name for f in dataclasses.fields(cur)}
+            bad = set(fields) - valid
+            if bad:
+                raise ValueError(
+                    f"unknown field(s) {sorted(bad)} for section {section!r}")
+            out = dataclasses.replace(
+                out, **{section: dataclasses.replace(cur, **fields)})
+        out.validate()
+        return out
+
+
+# ------------------------------------------------------------------ presets
+
+
+def reduced_cnn_config(**target_kw) -> PipelineConfig:
+    """CPU-smoke preset: a LeNet-5 micro-run of the full pipeline (~1 min).
+
+    This is what ``repro compress --reduced`` executes and what the CI plan
+    gate builds its plan from — small enough for a 2-core runner, big enough
+    that a layer actually accepts a restriction.
+    """
+    target = TargetConfig(kind="cnn", arch="lenet5", data_seed=5,
+                          batch_size=64, lr=2e-3, **target_kw)
+    return PipelineConfig(
+        target=target,
+        train=TrainStageConfig(qat_steps=60, final_finetune_steps=15,
+                               eval_batches=2),
+        profile=ProfileStageConfig(batches=1, max_tiles=4),
+        schedule=ScheduleConfig(prune_ratios=(0.5,), k_targets=(16,),
+                                delta_acc=0.08, finetune_steps=10,
+                                trial_finetune_steps=8, eval_batches=1,
+                                max_layers=1),
+        selection=SelectionConfig(k_init=20, k_target=16, delta_acc=0.08,
+                                  score_batches=1, accept_batches=1,
+                                  max_score_candidates=3),
+    )
+
+
+def reduced_lm_config(arch: str = "olmo-1b", *, compress_k: int = 4,
+                      **serve_kw) -> PipelineConfig:
+    """CPU-smoke preset for an LM target: reduced config, uniform k-value
+    restriction, short mixed trace through the serving engine."""
+    serve = ServeStageConfig(compress_k=compress_k, requests=2, prompt_len=12,
+                             new_tokens=6, mixed=True, max_batch=4)
+    serve = dataclasses.replace(serve, **serve_kw)
+    return PipelineConfig(
+        target=TargetConfig(kind="lm", arch=arch, reduced=True),
+        train=TrainStageConfig(qat_steps=0, final_finetune_steps=0),
+        serve=serve,
+    )
+
+
+def from_legacy(core_cfg, *, arch: Optional[str] = None) -> PipelineConfig:
+    """Map the deprecated `repro.core.compression.PipelineConfig` onto the
+    unified namespace (the runner itself is injected by the caller).
+
+    ``arch`` records the injected runner's model name when it is a registry
+    arch, so plans saved through the legacy shim resume against the right
+    model; custom models keep the default and are only identified by the
+    plan's ``target.name``."""
+    target = (TargetConfig(kind="cnn", arch=arch) if arch in CNN_ARCHS
+              else TargetConfig())
+    return PipelineConfig(
+        target=target,
+        train=TrainStageConfig(
+            qat_steps=core_cfg.qat_steps,
+            final_finetune_steps=core_cfg.final_finetune_steps,
+            eval_batches=core_cfg.eval_batches),
+        profile=ProfileStageConfig(batches=core_cfg.profile_batches,
+                                   max_tiles=core_cfg.profile_max_tiles),
+        schedule=core_cfg.schedule,
+        selection=core_cfg.selection,
+    )
+
+
+# ----------------------------------------------------- dict <-> dataclasses
+
+
+def _asdict(obj) -> Any:
+    if dataclasses.is_dataclass(obj):
+        return {f.name: _asdict(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, (list, tuple)):
+        return [_asdict(v) for v in obj]
+    if isinstance(obj, dict):
+        return {k: _asdict(v) for k, v in obj.items()}
+    return obj
+
+
+def _build(dc_cls, d: Dict[str, Any], *, path: str):
+    if not isinstance(d, dict):
+        raise ValueError(f"{path}: expected a dict for {dc_cls.__name__}, "
+                         f"got {type(d).__name__}")
+    fields = {f.name: f for f in dataclasses.fields(dc_cls)}
+    unknown = set(d) - set(fields)
+    if unknown:
+        raise ValueError(f"{path}: unknown field(s) {sorted(unknown)} for "
+                         f"{dc_cls.__name__}")
+    kwargs = {}
+    hints = typing.get_type_hints(dc_cls)
+    for name, value in d.items():
+        hint = hints.get(name, Any)
+        kwargs[name] = _coerce(hint, value, path=f"{path}.{name}")
+    return dc_cls(**kwargs)
+
+
+def _coerce(hint, value, *, path: str):
+    origin = typing.get_origin(hint)
+    if dataclasses.is_dataclass(hint) and isinstance(hint, type):
+        return _build(hint, value, path=path)
+    if origin in (tuple, Tuple) and isinstance(value, (list, tuple)):
+        args = typing.get_args(hint)
+        inner = args[0] if args else Any
+        return tuple(_coerce(inner, v, path=path) for v in value)
+    if origin is typing.Union:  # Optional[...]
+        if value is None:
+            return None
+        for arg in typing.get_args(hint):
+            if arg is type(None):
+                continue
+            return _coerce(arg, value, path=path)
+    return value

@@ -1,0 +1,128 @@
+"""Staged compression pipeline: one API from profile to serve.
+
+`Pipeline` drives a `Target` (CNN or LM, see `repro.pipeline.targets`)
+through the stage registry
+
+    profile -> energy_model -> schedule -> export -> serve
+
+with every stage reading and writing the shared `CompressionPlan`. The
+registry is data, not control flow: ``run_until("schedule")`` executes the
+prefix, a saved plan records which stages already ran, and
+``Pipeline.from_plan(plan)`` rebuilds the target from the plan's embedded
+config and continues from the first incomplete stage — re-running nothing.
+
+Per-stage overrides compose functionally::
+
+    Pipeline(cfg).run(overrides={"schedule": {"max_layers": 1}})
+
+Typical flows::
+
+    plan = Pipeline(cfg).run()                     # everything
+    plan = Pipeline(cfg).run_until("schedule")     # stop after the sweep
+    plan.save("plan")                              # plan.json + plan.npz
+    plan2 = CompressionPlan.load("plan")
+    Pipeline.from_plan(plan2).run()                # resume: export + serve
+
+The `repro` CLI (``python -m repro``) is a thin shell over exactly this
+object; `repro.core.compression.CompressionPipeline` survives as a
+deprecated delegate.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional
+
+from repro.pipeline.config import PipelineConfig
+from repro.pipeline.plan import CompressionPlan
+from repro.pipeline.schema import STAGES, stage_index
+from repro.pipeline.targets import resolve_target
+
+
+class Pipeline:
+    """Stage driver bound to one target and one validated config."""
+
+    STAGES = STAGES
+
+    def __init__(self, cfg_or_target, cfg: Optional[PipelineConfig] = None,
+                 *, plan: Optional[CompressionPlan] = None):
+        if isinstance(cfg_or_target, PipelineConfig):
+            if cfg is not None:
+                raise TypeError("pass either Pipeline(cfg) or "
+                                "Pipeline(target, cfg), not both configs")
+            cfg = cfg_or_target
+            target = None
+        else:
+            target = cfg_or_target
+            if cfg is None:
+                cfg = PipelineConfig()
+        cfg.validate()
+        self.cfg = cfg
+        self.target = target if target is not None else resolve_target(cfg)
+        if plan is None:
+            plan = CompressionPlan(
+                config=cfg.to_dict(),
+                target={"kind": self.target.kind, "arch": cfg.target.arch,
+                        "name": getattr(self.target, "name",
+                                        cfg.target.arch)},
+            )
+        self.plan = plan
+
+    # ----------------------------------------------------------------- runs
+
+    def run(self, *, verbose: bool = False,
+            overrides: Optional[Dict[str, Dict[str, Any]]] = None
+            ) -> CompressionPlan:
+        return self.run_until(STAGES[-1], verbose=verbose,
+                              overrides=overrides)
+
+    def run_until(self, stage: str, *, verbose: bool = False,
+                  overrides: Optional[Dict[str, Dict[str, Any]]] = None
+                  ) -> CompressionPlan:
+        """Run every not-yet-completed stage up to and including ``stage``.
+
+        The plan's embedded config is kept in sync with the *effective*
+        config (base + overrides) so that a saved plan always describes the
+        settings its remaining stages will resume under."""
+        cfg = self.cfg.with_overrides(overrides)
+        self.plan.config = cfg.to_dict()
+        last = stage_index(stage)
+        for name in STAGES[: last + 1]:
+            if self.plan.is_done(name):
+                continue
+            t0 = time.time()
+            getattr(self.target, f"stage_{name}")(self.plan, cfg,
+                                                  verbose=verbose)
+            self.plan.mark_done(name)
+            self.plan.metrics[f"wall_s_{name}"] = round(time.time() - t0, 3)
+            if verbose:
+                print(f"[pipeline] stage {name} done "
+                      f"({self.plan.metrics[f'wall_s_{name}']:.1f}s)")
+        return self.plan
+
+    # --------------------------------------------------------------- resume
+
+    @classmethod
+    def from_plan(cls, plan: CompressionPlan, *, target=None,
+                  cfg: Optional[PipelineConfig] = None) -> "Pipeline":
+        """Rebuild a pipeline around a saved plan; subsequent ``run*`` calls
+        skip every stage the plan already completed."""
+        if cfg is None:
+            cfg = PipelineConfig.from_dict(plan.config)
+        if target is None:
+            return cls(cfg, plan=plan)
+        return cls(target, cfg, plan=plan)
+
+    # ------------------------------------------------------------ shortcuts
+
+    @property
+    def params(self):
+        return self.plan.params
+
+    @property
+    def state(self):
+        return self.plan.state
+
+    @property
+    def comp(self):
+        return self.plan.comp

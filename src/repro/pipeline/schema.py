@@ -1,0 +1,108 @@
+"""Plan/stage schema constants and pure-python plan-document validation.
+
+This module is deliberately **jax-free**: it is imported by the `repro` CLI
+before any stage module loads (so ``repro --help`` costs nothing) and by
+``tools/check_gates.py --plan`` inside CI (which validates a saved plan's
+JSON document without building a device runtime).
+
+The on-disk `CompressionPlan` format is a pair of files sharing a base path:
+
+  * ``<base>.json`` — everything static: schema version, the originating
+    `PipelineConfig` dict, target identity, completed stages, schedule
+    decisions, metrics, energy shares, and the encoded *structure* of every
+    array-bearing section (arrays appear as ``{"__array__": key}`` refs);
+  * ``<base>.npz``  — the array payload, keyed by the refs above.
+
+`validate_plan_doc` checks the JSON half only — enough for the CI gate
+(schema version, stage ordering, share normalization, decision sanity)
+without touching the arrays.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+PLAN_SCHEMA_VERSION = 1
+PLAN_FORMAT = "repro.pipeline.plan"
+
+# canonical stage order; `Pipeline` executes a prefix of this tuple
+STAGES = ("profile", "energy_model", "schedule", "export", "serve")
+
+# mirrors repro.core.qat.K_MAX without importing jax
+K_MAX = 32
+
+# relative slack on "shares sum to 1" and energy monotonicity checks
+_SHARE_TOL = 0.01
+
+
+def stage_index(name: str) -> int:
+    try:
+        return STAGES.index(name)
+    except ValueError:
+        raise ValueError(
+            f"unknown stage {name!r}; stages are {', '.join(STAGES)}"
+        ) from None
+
+
+def validate_plan_doc(doc: dict) -> List[Dict]:
+    """Gate table for a saved plan's JSON document.
+
+    Returns ``[{name, value, op, threshold, pass}, ...]`` in the shape
+    ``tools/check_gates.py`` reports, so the CI step can reuse its printer.
+    Purely structural — no arrays are loaded.
+    """
+    gates: List[Dict] = []
+
+    def gate(name, value, op, threshold, ok):
+        gates.append({
+            "name": name, "benchmark": "plan", "value": value, "op": op,
+            "threshold": threshold, "ci_slack": None,
+            "effective_threshold": threshold, "pass": bool(ok),
+        })
+
+    version = doc.get("schema_version")
+    gate("plan_schema_version", version, "==", PLAN_SCHEMA_VERSION,
+         version == PLAN_SCHEMA_VERSION)
+    fmt = doc.get("format")
+    gate("plan_format", fmt, "==", PLAN_FORMAT, fmt == PLAN_FORMAT)
+
+    completed = doc.get("completed") or []
+    known = all(s in STAGES for s in completed)
+    ordered = known and [s for s in STAGES if s in completed] == list(completed)
+    gate("plan_stages_ordered", ",".join(completed) or "(none)", "==",
+         "prefix-ordered subset of " + "->".join(STAGES),
+         bool(completed) and ordered)
+
+    shares = doc.get("shares") or {}
+    if "energy_model" in completed:
+        total = sum(float(v) for v in shares.values())
+        gate("plan_energy_shares_sum", round(total, 6), "~=", 1.0,
+             bool(shares) and abs(total - 1.0) <= _SHARE_TOL)
+
+    decisions = doc.get("decisions") or []
+    if "schedule" in completed:
+        sane = True
+        for d in decisions:
+            if not d.get("accepted"):
+                continue
+            k = d.get("k")
+            if k is None or not (1 <= int(k) <= K_MAX):
+                sane = False
+            eb, ea = d.get("energy_before"), d.get("energy_after")
+            if eb is None or ea is None or ea > eb * (1.0 + _SHARE_TOL):
+                sane = False
+        gate("plan_decisions_sane", len(decisions), "==",
+             f"accepted k in [1, {K_MAX}], energy non-increasing", sane)
+
+        metrics = doc.get("metrics") or {}
+        eb = metrics.get("energy_before")
+        ea = metrics.get("energy_after")
+        if any(d.get("accepted") for d in decisions):
+            gate("plan_total_energy_non_increasing", ea, "<=", eb,
+                 eb is not None and ea is not None
+                 and ea <= eb * (1.0 + _SHARE_TOL))
+
+    arrays = doc.get("arrays")
+    gate("plan_array_manifest_present", None if arrays is None else len(arrays),
+         ">=", 1, bool(arrays))
+    return gates

@@ -106,7 +106,7 @@ class ServingEngine:
 
     def __init__(self, model, params, *, mode: str = "engine",
                  config: EngineConfig = EngineConfig(), compress_k: int = 0,
-                 arch: Optional[str] = None, mesh=None):
+                 comp=None, arch: Optional[str] = None, mesh=None):
         if mode not in ("engine", "oneshot"):
             raise ValueError(f"mode must be 'engine' or 'oneshot', got {mode!r}")
         self.model = model
@@ -115,7 +115,12 @@ class ServingEngine:
         self.compress_k = int(compress_k)
         self.arch = arch if arch is not None else model.cfg.name
 
-        if self.compress_k:
+        if comp is not None:
+            # pre-built comp tree (e.g. a CompressionPlan's codebooks);
+            # compress_k stays the cache key for the restriction level
+            self.comp = comp
+            self.qcfg = QuantConfig.on()
+        elif self.compress_k:
             from repro.core import lm_compress
 
             comp = lm_compress.init_lm_comp(model)

@@ -11,9 +11,16 @@ by name instead of a dead shell.
 
     PYTHONPATH=src python tools/check_gates.py [--ci] [--skip-bench]
     PYTHONPATH=src python tools/check_gates.py --trajectory [--ci]
+    PYTHONPATH=src python tools/check_gates.py --plan BASE [--ci]
 
 ``--skip-bench`` evaluates whatever JSON is already in benchmarks/out/
 (useful to re-check without re-running the benchmarks).
+
+``--plan BASE`` validates a saved `repro.pipeline` CompressionPlan document
+(``BASE.json``; schema version, stage ordering, energy-share normalization,
+decision sanity — see `repro.pipeline.schema.validate_plan_doc`). Pure JSON
+inspection: no jax, no arrays loaded, so CI can gate a plan right after the
+fast tier. Runs no benchmarks.
 
 CI slack: shared CI runners (2 cores, noisy neighbours) time the speedup
 gates far less repeatably than the reference host, so under ``--ci`` every
@@ -153,6 +160,30 @@ def _trajectory_keys(entry: dict, declared) -> list:
             and (k.endswith("_per_s") or "speedup" in k)]
 
 
+def check_plan(base: str, ci: bool = False) -> int:
+    """Validate a saved CompressionPlan's JSON document (schema gate)."""
+    from repro.pipeline.schema import validate_plan_doc  # jax-free module
+
+    path = Path(base)
+    if path.suffix in (".json", ".npz"):
+        path = path.with_suffix("")
+    json_path = path.with_suffix(".json")
+    if not json_path.exists():
+        print(f"::error title=plan missing::{json_path} does not exist"
+              if ci else f"plan document {json_path} does not exist")
+        return 1
+    doc = json.loads(json_path.read_text())
+    summary = validate_plan_doc(doc)
+    npz_path = path.with_suffix(".npz")
+    summary.append({
+        "name": "plan_npz_present", "benchmark": "plan",
+        "value": str(npz_path), "op": "==", "threshold": "exists",
+        "ci_slack": None, "effective_threshold": "exists",
+        "pass": npz_path.exists(),
+    })
+    return report(summary, ci, "plan_summary.json")
+
+
 def check_trajectory(ci: bool = False) -> int:
     """Compare the newest vs previous point of each repo-root BENCH_*.json."""
     summary = []
@@ -196,8 +227,13 @@ def main(argv=None) -> int:
     ap.add_argument("--trajectory", action="store_true",
                     help="gate repo-root BENCH_*.json newest-vs-previous "
                          "trajectory instead of running benchmarks")
+    ap.add_argument("--plan", default=None, metavar="BASE",
+                    help="validate a saved CompressionPlan document "
+                         "(BASE.json) instead of running benchmarks")
     args = ap.parse_args(argv)
 
+    if args.plan:
+        return check_plan(args.plan, ci=args.ci)
     if args.trajectory:
         return check_trajectory(ci=args.ci)
 

@@ -49,7 +49,7 @@ if [[ "$FAST" == 1 ]]; then
   python -m pytest "${PYTEST_ARGS[@]}" tests/test_kernels.py \
     tests/test_core_energy.py tests/test_profiler.py \
     tests/test_serve_compressed.py tests/test_schedule_batched.py \
-    tests/test_serving_engine.py
+    tests/test_serving_engine.py tests/test_pipeline.py
 else
   echo "== tier-1 tests =="
   python -m pytest "${PYTEST_ARGS[@]}"
