@@ -1,0 +1,120 @@
+"""Cosim verification benchmark: kernel-vs-bit-accurate-reference gate.
+
+Two parts, both consumed by ``tools/check_gates.py --cosim``:
+
+1. **Histogram verification sweep** — QAT-train the benchmark models, then
+   replay the profiler's exact tile sampling per layer and require the
+   `transition_energy` kernel's (50, 50) MSB-group transition histogram to
+   match the cycle-accurate `repro.cosim` reference EXACTLY (integer
+   equality, >= 64 sampled tiles per model).
+
+2. **MSR schedule sweep** — run the reduced seeded candidate sweep with the
+   MSR-truncation axis enabled (``msr_bits=(2, 0)``) in both search modes
+   and require (a) serial == batched decisions including the msr component
+   and (b) at least one layer accepting an MSR candidate, i.e. the third
+   axis is actually live, priced by the cosim-validated energy model.
+
+Derived keys gated: ``cosim_hist_match``, ``cosim_min_tiles_verified``,
+``cosim_max_abs_diff``, ``msr_decisions_match``, ``msr_candidates_accepted``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, steps, trained
+from repro.core import schedule as sched
+from repro.core.schedule import ScheduleConfig
+from repro.core.weight_selection import SelectionConfig
+from repro.cosim import verify_runner_profile
+
+# >= 64 gated tiles per model: LeNet-5's four compressible layers at 24
+# tiles each give 96 when every layer has that many tiles to sample
+VERIFY_MODELS = ("lenet5", "resnet8_c100")
+VERIFY_TILES = 24
+TRAIN_STEPS = 40
+
+MSR_SWEEP = dict(
+    prune_ratios=(0.5,), k_targets=(8,), msr_bits=(2, 0),
+    delta_acc=0.2,             # generous floor: the aggressive MSR-on
+    finetune_steps=4,          # candidate passes on the seeded run
+    trial_finetune_steps=4,
+    eval_batches=2,
+    min_energy_share=0.0,
+    max_layers=2,
+)
+MSR_SEL = SelectionConfig(k_init=10, k_target=8, delta_acc=0.2,
+                          score_batches=1, accept_batches=1,
+                          max_score_candidates=3)
+
+
+def _decision_key(decisions):
+    return [(d.layer, d.prune_ratio, d.k, d.msr, d.accepted,
+             tuple(tuple(t) for t in d.tried)) for d in decisions]
+
+
+def run():
+    t0 = time.time()
+    rows = []
+
+    # ---- part 1: bit-accurate histogram verification, per model
+    verify = {}
+    for model_key in VERIFY_MODELS:
+        bundle = trained(model_key, qat_steps=steps(TRAIN_STEPS))
+        res = verify_runner_profile(
+            bundle["runner"], bundle["params"], bundle["state"],
+            bundle["comp"], n_batches=1, max_tiles=VERIFY_TILES,
+            use_kernel=True)
+        verify[model_key] = res
+        rows.append({"bench": "cosim_verify", "model": model_key,
+                     "tiles": res["n_tiles"], "match": res["match"],
+                     "max_abs_diff": res["max_abs_diff"],
+                     "toggles": res["toggles"],
+                     "exactness_ok": res["exactness_ok"]})
+        print(f"  cosim verify {model_key}: tiles={res['n_tiles']} "
+              f"match={res['match']} max_abs_diff={res['max_abs_diff']}",
+              flush=True)
+
+    # ---- part 2: seeded reduced sweep with the MSR axis enabled
+    bundle = trained("lenet5", qat_steps=steps(TRAIN_STEPS))
+    runner = bundle["runner"]
+    acc0 = runner.accuracy(bundle["params"], bundle["state"], bundle["comp"],
+                           n_batches=2)
+    decisions = {}
+    for mode in ("serial", "batched"):
+        cfg = ScheduleConfig(search_mode=mode, **MSR_SWEEP)
+        _, _, _, _, res = sched.energy_prioritized_compression(
+            runner, bundle["params"], bundle["state"], bundle["opt_state"],
+            {k: dict(v) for k, v in bundle["comp"].items()},
+            bundle["stats"], cfg, MSR_SEL)
+        decisions[mode] = res.decisions
+        rows.append({"bench": "msr_sweep", "mode": mode,
+                     "decisions": [[d.layer, d.prune_ratio, d.k, d.msr,
+                                    d.accepted] for d in res.decisions]})
+        print(f"  msr sweep [{mode}]: "
+              f"{[(d.layer, d.prune_ratio, d.k, d.msr, d.accepted) for d in res.decisions]}",
+              flush=True)
+
+    msr_match = _decision_key(decisions["serial"]) \
+        == _decision_key(decisions["batched"])
+    msr_accepted = sum(1 for d in decisions["batched"]
+                       if d.accepted and (d.msr or 0) > 0)
+
+    derived = {
+        "cosim_hist_match": all(r["match"] for r in verify.values()),
+        "cosim_min_tiles_verified": min(r["n_tiles"]
+                                        for r in verify.values()),
+        "cosim_max_abs_diff": max(r["max_abs_diff"]
+                                  for r in verify.values()),
+        "cosim_exactness_ok": all(r["exactness_ok"]
+                                  for r in verify.values()),
+        "cosim_toggles_total": sum(r["toggles"] for r in verify.values()),
+        "msr_decisions_match": msr_match,
+        "msr_candidates_accepted": msr_accepted,
+        "msr_sweep_acc0": float(acc0),
+    }
+    return emit("bench_cosim", t0, rows, derived)
+
+
+if __name__ == "__main__":
+    run()

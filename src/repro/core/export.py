@@ -147,7 +147,8 @@ def export_layer(
     w_mat, scale_n = _weight_matrix(w, scale, layout)
     mask_mat, _ = _weight_matrix(mask, scale, layout)
     packed, cb, scale_n = compress_layer_weights(
-        w_mat, values, mask=mask_mat, scale=scale_n, block_k=block_k,
+        w_mat, values, mask=mask_mat, scale=scale_n,
+        msr_bits=int(comp.get("msr_bits", 0)), block_k=block_k,
         pad_k=True)
 
     k_dim, n_dim = w_mat.shape

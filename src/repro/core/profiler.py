@@ -28,6 +28,7 @@ is masked out and contributes nothing.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -97,8 +98,12 @@ def _pair_hist(bins: jax.Array, host_hist: bool) -> jax.Array:
     counts). Non-CPU backends keep the native scatter (fast there, and the
     Pallas kernel path is the production route anyway). ``host_hist=False``
     forces the scatter — required inside `shard_map`, where concurrent
-    callbacks from per-device executors deadlock on CPU."""
-    if host_hist and jax.default_backend() == "cpu":
+    callbacks from per-device executors deadlock on CPU. The callback is
+    also skipped on single-core hosts: with a 1-thread intra-op pool the
+    executor thread that must service the callback is the one blocked on
+    the surrounding computation, and the dispatch deadlocks."""
+    if host_hist and jax.default_backend() == "cpu" \
+            and (os.cpu_count() or 1) > 1:
         def cb(b):
             import numpy as np
 

@@ -46,6 +46,7 @@ def identity_comp(w_shape: Tuple[int, ...], dtype=jnp.float32) -> CompState:
         "mask": jnp.ones(w_shape, dtype),
         "codebook": jnp.zeros((K_MAX,), jnp.int32),
         "codebook_k": jnp.zeros((), jnp.int32),
+        "msr_bits": jnp.zeros((), jnp.int32),
     }
 
 
@@ -111,14 +112,38 @@ def project_to_codebook(q: jax.Array, codebook: jax.Array, k: jax.Array) -> jax.
     return jnp.where(k > 0, projected, q)
 
 
+def msr_truncate_int(q: jax.Array, bits) -> jax.Array:
+    """Most-significant-run truncation of integer weights.
+
+    Keeps the top ``bits`` significant bits of ``|q|`` (from its MSB down)
+    and zeroes the rest, preserving sign: the weight becomes a short run of
+    significant bits followed by zeros, which shortens partial-product
+    carry chains in the MAC (the energy model prices the resulting value
+    distribution via `weight_value_counts`). ``bits == 0`` disables
+    truncation (identity) — the `identity_comp` default. ``bits`` may be a
+    traced scalar (the batched candidate sweep vmaps over it).
+    """
+    bits = jnp.asarray(bits, jnp.int32)
+    mag = jnp.abs(q)
+    msb_val = 32 - jax.lax.clz(mag)          # 1-based MSB index, 0 for 0
+    shift = jnp.maximum(msb_val - bits, 0)
+    trunc = jnp.sign(q) * ((mag >> shift) << shift)
+    return jnp.where(bits > 0, trunc, q)
+
+
 def quantize_weight_int(w: jax.Array, comp: Optional[CompState] = None) -> jax.Array:
     """Integer (int32-valued int8) view of a weight tensor after mask/quant/
-    projection — what actually sits in the MAC weight registers."""
+    MSR-truncation/projection — what actually sits in the MAC weight
+    registers. ``comp["msr_bits"]`` is optional (absent == 0 == off) so
+    pre-MSR comp dicts keep working."""
     if comp is not None:
         w = w * comp["mask"].astype(w.dtype)
     scale = weight_scale(w)
     q = jnp.clip(jnp.round(w / scale), -QMAX, QMAX).astype(jnp.int32)
     if comp is not None:
+        msr = comp.get("msr_bits")
+        if msr is not None:
+            q = msr_truncate_int(q, msr)
         q = project_to_codebook(q, comp["codebook"], comp["codebook_k"])
     return q
 
@@ -126,7 +151,8 @@ def quantize_weight_int(w: jax.Array, comp: Optional[CompState] = None) -> jax.A
 def fake_quant_weight(
     w: jax.Array, comp: Optional[CompState] = None
 ) -> jax.Array:
-    """Fake-quantized (float) weights with STE; applies mask + codebook.
+    """Fake-quantized (float) weights with STE; applies mask + optional MSR
+    truncation + codebook.
 
     Masks may be stored in a narrow dtype (int8 on the LM path to bound the
     dry-run memory footprint); they are cast to the weight dtype here.
@@ -135,7 +161,11 @@ def fake_quant_weight(
     scale = weight_scale(wm)
     q = jnp.clip(jnp.round(wm / scale), -QMAX, QMAX)
     if comp is not None:
-        qi = project_to_codebook(q.astype(jnp.int32), comp["codebook"], comp["codebook_k"])
+        qi = q.astype(jnp.int32)
+        msr = comp.get("msr_bits")
+        if msr is not None:
+            qi = msr_truncate_int(qi, msr)
+        qi = project_to_codebook(qi, comp["codebook"], comp["codebook_k"])
         q = qi.astype(wm.dtype)
     wq = q * scale
     # named for remat policies: saving 'qat_weights' across the checkpoint

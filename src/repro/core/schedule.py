@@ -2,7 +2,8 @@
 
 Layers are sorted by normalized energy share ρ_l = E_l / Σ_j E_j and
 processed in descending order. For each layer we try candidate configurations
-(prune ratio × target codebook size), most aggressive first (ranked by
+(prune ratio × target codebook size × MSR truncation depth, see
+`qat.msr_truncate_int` and docs/cosim.md), most aggressive first (ranked by
 estimated energy saving), and accept the first whose post-finetune *global*
 validation accuracy stays above ``acc0 - δ``. Low-energy layers therefore
 naturally receive milder compression — exactly the behaviour of Table 2.
@@ -55,6 +56,10 @@ class ScheduleConfig:
     # sizes {32,24,16})
     prune_ratios: Tuple[float, ...] = (0.7, 0.5, 0.3)
     k_targets: Tuple[int, ...] = (16, 24, 32)
+    # third candidate axis: MSR truncation depths (qat.msr_truncate_int);
+    # 0 = off. The default keeps the candidate set — and hence every
+    # existing decision trace — identical to the pre-MSR schedule.
+    msr_bits: Tuple[int, ...] = (0,)
     delta_acc: float = 0.03
     finetune_steps: int = 60        # after each accepted layer config
     trial_finetune_steps: int = 30  # inside a trial, before the accept check
@@ -74,7 +79,9 @@ class LayerDecision:
     energy_after: float
     accuracy: float
     accepted: bool
-    tried: List[Tuple[float, int]] = dataclasses.field(default_factory=list)
+    tried: List[Tuple[float, int, int]] = dataclasses.field(
+        default_factory=list)
+    msr: Optional[int] = None   # accepted MSR depth (0/None = off)
 
     @property
     def saving(self) -> float:
@@ -102,28 +109,32 @@ class ScheduleResult:
 _MAX_EVAL_FANOUT = 64
 
 
-def _config_order(cfg: ScheduleConfig) -> List[Tuple[float, int]]:
-    """All (prune, k) combos, most aggressive (highest expected saving) first."""
-    combos = [(p, k) for p in cfg.prune_ratios for k in cfg.k_targets]
-    # higher prune + smaller k first
-    return sorted(combos, key=lambda pk: (-pk[0], pk[1]))
+def _config_order(cfg: ScheduleConfig) -> List[Tuple[float, int, int]]:
+    """All (prune, k, msr) combos, most aggressive (highest expected saving)
+    first: higher prune, then MSR truncation on before off (fewer kept bits
+    = more aggressive), then smaller k. With the default ``msr_bits=(0,)``
+    this reduces exactly to the historical (prune, k) order."""
+    combos = [(p, k, m) for p in cfg.prune_ratios for k in cfg.k_targets
+              for m in cfg.msr_bits]
+    return sorted(combos, key=lambda c: (-c[0], c[2] == 0, c[2], c[1]))
 
 
 def _sweep_layer_serial(runner, params, state, opt_state, comp, models,
                         layer, share, acc0, cfg, sel_cfg, verbose):
     """Reference trial-and-rollback walk: one candidate config at a time."""
     e_before = models[layer].energy
-    tried: List[Tuple[float, int]] = []
-    for prune, k_target in _config_order(cfg):
-        tried.append((prune, k_target))
+    tried: List[Tuple[float, int, int]] = []
+    for prune, k_target, msr in _config_order(cfg):
+        tried.append((prune, k_target, msr))
         t0 = time.time()
         # --- trial state (rollback on reject)
         t_params, t_state, t_opt = params, state, opt_state
         t_comp = {n: dict(c) for n, c in comp.items()}
 
-        # 1. prune
+        # 1. prune + MSR truncation depth for this candidate
         w = runner.model.get_weight(t_params, layer)
         t_comp[layer]["mask"] = qat.magnitude_prune_mask(w, prune)
+        t_comp[layer]["msr_bits"] = jnp.asarray(msr, jnp.int32)
 
         # 2. fine-tune with the mask (paper: pruning first, then finetune)
         if cfg.trial_finetune_steps:
@@ -154,14 +165,14 @@ def _sweep_layer_serial(runner, params, state, opt_state, comp, models,
         acc = runner.accuracy(t_params, t_state, t_comp,
                               n_batches=cfg.eval_batches)
         if verbose:
-            print(f"  try prune={prune} k={k_target}: acc={acc:.3f} "
-                  f"(floor {acc0 - cfg.delta_acc:.3f}) "
+            print(f"  try prune={prune} k={k_target} msr={msr}: "
+                  f"acc={acc:.3f} (floor {acc0 - cfg.delta_acc:.3f}) "
                   f"[{time.time() - t0:.1f}s]")
         if acc >= acc0 - cfg.delta_acc:
             models = runner.refresh_counts(t_params, t_comp, models)
             decision = LayerDecision(
                 layer, share, prune, k_target, e_before,
-                models[layer].energy, acc, True, tried)
+                models[layer].energy, acc, True, tried, msr=msr)
             return t_params, t_state, t_opt, t_comp, models, decision, rep
 
     decision = LayerDecision(layer, share, None, None, e_before, e_before,
@@ -171,7 +182,8 @@ def _sweep_layer_serial(runner, params, state, opt_state, comp, models,
 
 def _sweep_layer_batched(runner, params, state, opt_state, comp, models,
                          layer, share, acc0, cfg, sel_cfg, verbose):
-    """Batched candidate sweep: every (prune, k) trial advances in lockstep.
+    """Batched candidate sweep: every (prune, k, msr) trial advances in
+    lockstep.
 
     The N candidates are independent given their comp states, so the serial
     walk's rollback discipline is free here — rejected candidates are simply
@@ -184,11 +196,13 @@ def _sweep_layer_batched(runner, params, state, opt_state, comp, models,
     t0 = time.time()
     w = runner.model.get_weight(params, layer)
 
-    # 1. prune: per-candidate comp trees (identical except this layer's mask)
+    # 1. prune: per-candidate comp trees (identical except this layer's
+    # mask and MSR truncation depth)
     cand_comps = []
-    for prune, _k in combos:
+    for prune, _k, msr in combos:
         c = {nm: dict(cc) for nm, cc in comp.items()}
         c[layer]["mask"] = qat.magnitude_prune_mask(w, prune)
+        c[layer]["msr_bits"] = jnp.asarray(msr, jnp.int32)
         cand_comps.append(c)
     comps_s = qat.stack_pytrees(cand_comps)
     params_s = qat.broadcast_pytree(params, n)
@@ -207,7 +221,7 @@ def _sweep_layer_batched(runner, params, state, opt_state, comp, models,
     # then the acc_ref refreshes) into one gathered vmapped dispatch, each
     # trial scored against its own candidate's fine-tuned weights. The
     # per-trial ΔE refresh touches only the layer under search.
-    lsels = [dataclasses.replace(sel_cfg, k_target=k) for _, k in combos]
+    lsels = [dataclasses.replace(sel_cfg, k_target=k) for _, k, _ in combos]
     t_models: List[object] = []
     init_sets: List[List[int]] = []
     for i in range(n):
@@ -218,6 +232,7 @@ def _sweep_layer_batched(runner, params, state, opt_state, comp, models,
         init_sets.append(initial_candidate_set(m_i.counts, m_i.lut, lsels[i]))
 
     masks_s = comps_s[layer]["mask"]
+    msrs_s = comps_s[layer]["msr_bits"]
     # requests are padded to multiples of n so `accuracy_gather` compiles a
     # handful of shapes per sweep while late rounds — when most candidates
     # have finished — don't re-evaluate a full scoring round's worth of
@@ -242,6 +257,9 @@ def _sweep_layer_batched(runner, params, state, opt_state, comp, models,
             "mask": jnp.take(masks_s, jnp.asarray(idx), axis=0),
             "codebook": cbs,
             "codebook_k": ks,
+            # each request scores against its own candidate's MSR depth —
+            # dropping this would silently diverge from the serial walk
+            "msr_bits": jnp.take(msrs_s, jnp.asarray(idx), axis=0),
         }
         return runner.accuracy_gather(params_s, state_s, comps_e, idx,
                                       n_batches=n_batches)[:n_req]
@@ -269,9 +287,9 @@ def _sweep_layer_batched(runner, params, state, opt_state, comp, models,
 
     floor = acc0 - cfg.delta_acc
     if verbose:
-        for (prune, k_target), acc in zip(combos, accs):
-            print(f"  cand prune={prune} k={k_target}: acc={acc:.3f} "
-                  f"(floor {floor:.3f})")
+        for (prune, k_target, msr), acc in zip(combos, accs):
+            print(f"  cand prune={prune} k={k_target} msr={msr}: "
+                  f"acc={acc:.3f} (floor {floor:.3f})")
         print(f"  [batched sweep of {n} candidates: {time.time() - t0:.1f}s]")
 
     # accept the most aggressive passing candidate (combos are ordered
@@ -283,7 +301,7 @@ def _sweep_layer_batched(runner, params, state, opt_state, comp, models,
         return params, state, opt_state, comp, models, decision, None
 
     i = passing[0]
-    prune, k_target = combos[i]
+    prune, k_target, msr = combos[i]
     params = qat.index_pytree(params_s, i)
     state = qat.index_pytree(state_s, i)
     opt_state = qat.index_pytree(opt_s, i)
@@ -291,7 +309,7 @@ def _sweep_layer_batched(runner, params, state, opt_state, comp, models,
     models = runner.refresh_counts(params, comp, models)
     decision = LayerDecision(layer, share, prune, k_target, e_before,
                              models[layer].energy, float(accs[i]), True,
-                             list(combos[: i + 1]))
+                             list(combos[: i + 1]), msr=msr)
     return params, state, opt_state, comp, models, decision, sel_reports[i]
 
 

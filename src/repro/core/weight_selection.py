@@ -249,3 +249,18 @@ def codebook_comp(
     out = dict(comp)
     out[layer] = new_layer
     return out
+
+
+def msr_comp(
+    comp: Dict[str, qat.CompState], layer: str, bits: int
+) -> Dict[str, qat.CompState]:
+    """Functional update: set ``layer``'s MSR truncation depth (0 = off).
+
+    The schedule's candidate axis (`ScheduleConfig.msr_bits`) writes the
+    same key in place on its trial copies; this is the composable form for
+    callers that treat comp dicts as immutable."""
+    new_layer = dict(comp[layer])
+    new_layer["msr_bits"] = jnp.asarray(int(bits), jnp.int32)
+    out = dict(comp)
+    out[layer] = new_layer
+    return out

@@ -1,0 +1,60 @@
+"""Bit-level primitives for the processing-element co-simulator.
+
+Everything here is deliberately *independent* of the `transition_energy`
+kernel and of `core.bitops`: no `jax.lax.clz`, no
+`jax.lax.population_count`, no shared helpers. Popcount and MSB position
+are computed as explicit 22-term bit sums, so a bug in the XLA intrinsic
+lowering (or in our use of it) cannot cancel out between the kernel and
+this reference. The only shared artifacts are the published constants of
+the grouping spec (22-bit accumulator, 10 MSB groups, 5 Hamming
+subgroups) from the paper's Sec. 3.1.1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PSUM_BITS = 22
+MASK22 = (1 << PSUM_BITS) - 1
+N_MSB_GROUPS = 10
+N_HD_SUBGROUPS = 5
+N_GROUPS = N_MSB_GROUPS * N_HD_SUBGROUPS
+
+
+def bits22(x):
+    """The 22-bit accumulator view of an int32 partial sum (two's complement
+    truncation, always non-negative)."""
+    return jnp.asarray(x, jnp.int32) & MASK22
+
+
+def ref_popcount22(x):
+    """Hamming weight of the 22-bit view, as a sum of 22 single-bit tests."""
+    v = bits22(x)
+    total = jnp.zeros_like(v)
+    for b in range(PSUM_BITS):
+        total = total + ((v >> b) & 1)
+    return total
+
+
+def ref_msb_val22(x):
+    """1-based index of the highest set bit of the 22-bit view; 0 when the
+    masked value is zero.  Computed as ``sum_b [v >= 2^b]`` — a monotone
+    threshold count, no count-leading-zeros anywhere."""
+    v = bits22(x)
+    total = jnp.zeros_like(v)
+    for b in range(PSUM_BITS):
+        total = total + (v >= (1 << b)).astype(jnp.int32)
+    return total
+
+
+def ref_group_id(p):
+    """Energy-group id (0..49) of one partial-sum value: coarse MSB group
+    times 5 plus Hamming-weight subgroup.  Mirrors the spec in
+    docs/energy_model.md; shares no code with the kernel's `_group_id`."""
+    msb_val = ref_msb_val22(p)                       # 0..22
+    mg = jnp.minimum(msb_val * N_MSB_GROUPS // (PSUM_BITS + 1),
+                     N_MSB_GROUPS - 1)
+    hw = ref_popcount22(p)                           # 0..22
+    hg = jnp.minimum(hw * N_HD_SUBGROUPS // (PSUM_BITS + 1),
+                     N_HD_SUBGROUPS - 1)
+    return mg * N_HD_SUBGROUPS + hg

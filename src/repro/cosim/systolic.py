@@ -1,0 +1,153 @@
+"""Cycle-accurate weight-stationary systolic-array co-simulator.
+
+This is the independent reference the `transition_energy` kernel is gated
+against (tools/check_gates.py --cosim, `repro profile --verify-cosim`).
+It models the paper's Sec. 3.1.1 array PE by PE and cycle by cycle:
+
+  * weights are stationary: PE(r, c) holds ``w[r, c]``;
+  * activations stream in skewed by ``r + c`` cycles, so at cycle ``u``
+    PE(r, c) consumes ``a[r, u - r - c]`` (zero outside the stream);
+  * each cycle a PE adds its product to the partial sum arriving from the
+    PE above and latches the result:
+    ``reg[r, c](u + 1) = reg[r - 1, c](u) + w[r, c] * a[r, u - r - c]``.
+
+By induction PE(r, c)'s register holds the exact prefix sum
+``S[r, c, t] = sum_{r' <= r} w[r', c] * a[r', t]`` at cycle
+``r + c + t + 1``, i.e. the skewed cycle trace visits exactly the T values
+of the unskewed prefix-sum trace, in t-order, per PE. The statistics are
+therefore comparable 1:1 with the kernel's (which computes the unskewed
+trace directly): per PE there are ``T - 1`` accumulator-register
+transitions, each classified into one of the 50x50 (MSB group, Hamming
+subgroup) transition pairs.
+
+Everything downstream of the trace uses the independent bit primitives of
+`repro.cosim.pe` (explicit 22-term bit sums, integer scatter-add
+histograms) — no code shared with the kernel, the oracle, or
+`core.bitops`/`core.grouping`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cosim.pe import MASK22, N_GROUPS, bits22, ref_group_id, \
+    ref_popcount22
+
+__all__ = [
+    "pe_array_trace",
+    "tile_cosim_stats",
+    "cosim_batched_stats",
+]
+
+
+def pe_array_trace(w_tile: jax.Array, a_block: jax.Array) -> jax.Array:
+    """Run the array cycle by cycle; return per-PE partial-sum sequences.
+
+    Args:
+      w_tile: (K, M) int weights, stationary (row r feeds activation r).
+      a_block: (K, T) int activation stream, T output elements.
+
+    Returns:
+      (K, M, T) int32 — the exact accumulator value PE(r, c) latches for
+      output element t (extracted from the cycle-indexed register history
+      at cycle ``r + c + t + 1``). Apply ``pe.bits22`` for the 22-bit
+      hardware register view.
+    """
+    w = jnp.asarray(w_tile, jnp.int32)
+    a = jnp.asarray(a_block, jnp.int32)
+    k_dim, m_dim = w.shape
+    k2, t_len = a.shape
+    assert k_dim == k2, (w.shape, a.shape)
+
+    rows = jnp.arange(k_dim)[:, None]                      # (K, 1)
+    cols = jnp.arange(m_dim)[None, :]                      # (1, M)
+    n_cycles = k_dim + m_dim + t_len - 2
+
+    def step(reg, u):
+        # activation entering PE(r, c) this cycle (skew r + c)
+        t_idx = u - rows - cols                            # (K, M)
+        valid = (t_idx >= 0) & (t_idx < t_len)
+        a_in = jnp.where(
+            valid,
+            a[jnp.broadcast_to(rows, (k_dim, m_dim)),
+              jnp.clip(t_idx, 0, t_len - 1)],
+            0)
+        # partial sum handed down from the PE above (row 0 receives 0)
+        from_above = jnp.concatenate(
+            [jnp.zeros((1, m_dim), jnp.int32), reg[:-1]], axis=0)
+        new = from_above + w * a_in
+        return new, new
+
+    _, reg_hist = jax.lax.scan(step, jnp.zeros((k_dim, m_dim), jnp.int32),
+                               jnp.arange(n_cycles))
+    # reg_hist[u] = register state after cycle u; PE(r, c) holds S[r, c, t]
+    # at cycle r + c + t + 1, i.e. reg_hist[r + c + t].
+    r_i = jnp.arange(k_dim)[:, None, None]
+    c_i = jnp.arange(m_dim)[None, :, None]
+    t_i = jnp.arange(t_len)[None, None, :]
+    return reg_hist[r_i + c_i + t_i, r_i, c_i]             # (K, M, T)
+
+
+def tile_cosim_stats(
+    w_tile: jax.Array, a_block: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Bit-accurate per-tile statistics from the cycle trace.
+
+    Returns:
+      group_hist: (50, 50) int32 — count of accumulator transitions from
+        group ``g_prev`` to ``g_cur`` (integer scatter-add, exact).
+      toggles: () int32 — total bit flips of the 22-bit accumulator
+        registers across all transitions (sum of XOR popcounts).
+    """
+    psums = pe_array_trace(w_tile, a_block)
+    g = ref_group_id(psums)                                # (K, M, T)
+    codes = (g[..., :-1] * N_GROUPS + g[..., 1:]).reshape(-1)
+    group_hist = jnp.zeros((N_GROUPS * N_GROUPS,), jnp.int32
+                           ).at[codes].add(1).reshape(N_GROUPS, N_GROUPS)
+    flipped = bits22(psums[..., :-1]) ^ bits22(psums[..., 1:])
+    toggles = jnp.sum(ref_popcount22(flipped))
+    return group_hist, toggles
+
+
+@jax.jit
+def _chunk_stats(w_tiles, a_blocks, mask):
+    hists, toggles = jax.vmap(tile_cosim_stats)(w_tiles, a_blocks)
+    m = jnp.asarray(mask != 0, jnp.int32)
+    return (jnp.sum(hists * m[:, None, None], axis=0),
+            jnp.sum(toggles * m))
+
+
+def cosim_batched_stats(
+    w_tiles: jax.Array,
+    a_blocks: jax.Array,
+    *,
+    mask: Optional[jax.Array] = None,
+    chunk: int = 8,
+) -> Tuple[np.ndarray, int]:
+    """Co-simulate a tile batch; sum masked per-tile statistics.
+
+    Mirrors `profiler.batched_layer_stats` semantics: zero-padded MACs
+    inside a tile count (the padded PE still clocks), tiles with
+    ``mask == 0`` contribute nothing. The batch is traced in chunks of
+    ``chunk`` tiles to bound the live register-history buffer
+    (one (K+M+T-2, K, M) int32 array per in-flight tile, ~3 MiB at 64^3),
+    and accumulated on the host in int64 — no float anywhere.
+
+    Returns ``(group_hist (50, 50) np.int64, toggles int)``.
+    """
+    n = w_tiles.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), jnp.int32)
+    hist = np.zeros((N_GROUPS, N_GROUPS), np.int64)
+    toggles = 0
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        h, t = _chunk_stats(w_tiles[lo:hi], a_blocks[lo:hi], mask[lo:hi])
+        hist += np.asarray(h, np.int64)
+        toggles += int(t)
+    return hist, toggles

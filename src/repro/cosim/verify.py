@@ -1,0 +1,128 @@
+"""Differential verification: transition-energy kernel vs. the cosim.
+
+`verify_tiles` gates one tile batch; `verify_runner_profile` replays the
+profiler's exact per-layer tile sampling (same crc32-derived PRNG keys,
+same `pad_to_tiles`/`gather_layer_tiles` path) on a trained runner and
+gates every layer. Both return plain-dict machine-readable summaries —
+the shape `tools/check_gates.py --cosim` and the pipeline's
+``--verify-cosim`` pass consume.
+
+Exactness: the kernel accumulates its (50, 50) group histogram in float32
+(one-hot matmuls). float32 holds integers exactly below 2**24, so the
+comparison against the cosim's integer histogram is exact as long as no
+single bin exceeds 16.7M counts. A per-layer batch at the profiler's
+defaults (<= 48 tiles x 64*64 MACs x 63 transitions ~= 12.4M transitions
+TOTAL) stays under that bound even if every transition landed in one bin;
+`verify_tiles` checks the bound and reports ``exactness_ok`` rather than
+silently comparing rounded floats.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mac_model import DEFAULT_COEFFS, MacEnergyCoeffs
+from repro.core.stats import TILE, pad_to_tiles
+from repro.cosim.systolic import cosim_batched_stats
+
+_F32_EXACT = 2 ** 24
+
+__all__ = ["verify_tiles", "verify_runner_profile"]
+
+
+def verify_tiles(
+    w_tiles: jax.Array,
+    a_blocks: jax.Array,
+    coeffs: MacEnergyCoeffs = DEFAULT_COEFFS,
+    *,
+    mask: Optional[jax.Array] = None,
+    use_kernel: bool = True,
+    interpret: Optional[bool] = None,
+    chunk: int = 8,
+) -> dict:
+    """Compare the kernel's transition histogram with the cosim's, exactly.
+
+    ``use_kernel=True`` gates the Pallas kernel (interpret mode off-TPU);
+    ``use_kernel=False`` gates the vectorized jnp oracle instead — both
+    must reproduce the cosim's integer counts bin for bin.
+    """
+    from repro.core.profiler import batched_layer_stats
+
+    n_tiles = int(w_tiles.shape[0])
+    t_len = int(a_blocks.shape[2])
+    _, _, kernel_hist, _ = batched_layer_stats(
+        w_tiles, a_blocks, coeffs, mask=mask, use_kernel=use_kernel,
+        interpret=interpret)
+    cosim_hist, toggles = cosim_batched_stats(
+        w_tiles, a_blocks, mask=mask, chunk=chunk)
+
+    kh = np.asarray(kernel_hist, np.float64)
+    diff = np.abs(kh - cosim_hist.astype(np.float64))
+    n_masked = n_tiles if mask is None else int(np.sum(np.asarray(mask) != 0))
+    total = n_masked * int(w_tiles.shape[1]) * int(w_tiles.shape[2]) \
+        * (t_len - 1)
+    return {
+        "n_tiles": n_masked,
+        "n_transitions": total,
+        "match": bool(diff.max() == 0.0) if diff.size else True,
+        "max_abs_diff": float(diff.max()),
+        "kernel_total": float(kh.sum()),
+        "cosim_total": int(cosim_hist.sum()),
+        "toggles": toggles,
+        "exactness_ok": bool(total < _F32_EXACT),
+    }
+
+
+def verify_runner_profile(
+    runner,
+    params,
+    state,
+    comp,
+    *,
+    n_batches: int = 1,
+    max_tiles: int = 16,
+    coeffs: MacEnergyCoeffs = DEFAULT_COEFFS,
+    use_kernel: bool = True,
+    interpret: Optional[bool] = None,
+    chunk: int = 8,
+) -> dict:
+    """Replay `CnnRunner.profile`'s sampling and cosim-gate every layer.
+
+    Uses the identical per-layer PRNG key (`crc32(name)`), padding, and
+    tile gather as the profiler, so the gated tiles are exactly the tiles
+    the production statistics came from.
+    """
+    from repro.core.profiler import gather_layer_tiles
+
+    taps = runner.capture_taps(params, state, comp, n_batches)
+    layers = {}
+    for cl in runner.model.comp_layers:
+        w_mat, x_col = runner.layer_trace_inputs(cl, taps[cl.name])
+        w_pad, x_pad = pad_to_tiles(jnp.asarray(w_mat, jnp.int32),
+                                    jnp.asarray(x_col, jnp.int32))
+        total_tiles = (w_pad.shape[0] // TILE) * (w_pad.shape[1] // TILE) \
+            * (x_pad.shape[1] // TILE)
+        n_sample = min(max_tiles, total_tiles)
+        key = jax.random.PRNGKey(zlib.crc32(cl.name.encode()) % (2 ** 31))
+        choice = jax.random.choice(key, total_tiles, (n_sample,),
+                                   replace=False)
+        w_tiles, a_blocks = gather_layer_tiles(w_pad, x_pad, choice)
+        layers[cl.name] = verify_tiles(
+            w_tiles, a_blocks, coeffs, use_kernel=use_kernel,
+            interpret=interpret, chunk=chunk)
+
+    return {
+        "layers": layers,
+        "n_layers": len(layers),
+        "n_tiles": sum(r["n_tiles"] for r in layers.values()),
+        "match": all(r["match"] for r in layers.values()),
+        "max_abs_diff": max((r["max_abs_diff"] for r in layers.values()),
+                            default=0.0),
+        "toggles": sum(r["toggles"] for r in layers.values()),
+        "exactness_ok": all(r["exactness_ok"] for r in layers.values()),
+    }

@@ -99,6 +99,7 @@ def lut_matmul(
 def compress_layer_weights(w: jax.Array, codebook_values, *,
                            mask: Optional[jax.Array] = None,
                            scale: Optional[jax.Array] = None,
+                           msr_bits: int = 0,
                            block_k: int = 128,
                            pad_k: bool = False):
     """End-to-end encode of a float (K, N) weight matrix for serving.
@@ -133,10 +134,13 @@ def compress_layer_weights(w: jax.Array, codebook_values, *,
     if scale is None:
         scale = qat.weight_scale(wm)[0]                 # (N,)
     q = jnp.clip(jnp.round(wm / scale[None, :]), -qat.QMAX, qat.QMAX)
-    # project onto the *training* set first (identical to fake_quant_weight),
-    # then force pruned positions to the 0 entry of the serving set
+    # MSR-truncate then project onto the *training* set (identical order to
+    # fake_quant_weight), then force pruned positions to the serving 0 entry
+    qi = q.astype(jnp.int32)
+    if msr_bits:
+        qi = qat.msr_truncate_int(qi, msr_bits)
     cb_train, k_train = qat.make_codebook(vals)
-    qp = qat.project_to_codebook(q.astype(jnp.int32), cb_train, k_train)
+    qp = qat.project_to_codebook(qi, cb_train, k_train)
     if mask is not None:
         qp = jnp.where(mask == 0, 0, qp)
 

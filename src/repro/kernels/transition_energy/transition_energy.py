@@ -48,12 +48,21 @@ def _popcount(x):
 
 
 def _msb22(x):
+    # Pinned semantics (tests/test_cosim_differential.py, gated against the
+    # bit-accurate cosim): the 22-bit mask applies BEFORE the zero test, so
+    # any value that is zero modulo 2^22 (including 1 << 22) returns -1 and
+    # lands in msb_val = 0; negatives see their two's-complement 22-bit
+    # view (e.g. -1 -> MASK22 -> 21).
     masked = x & MASK22
     msb = 31 - jax.lax.clz(masked)
     return jnp.where(masked == 0, jnp.int32(-1), msb)
 
 
 def _group_id(p):
+    # mg = msb_val * 10 // 23 over msb_val 0..22 never exceeds 9, and
+    # hg = hw * 5 // 23 over hw 0..22 never exceeds 4 — the minimums are
+    # defensive clamps, exercised exhaustively by the boundary tables in
+    # tests/test_cosim_differential.py.
     msb_val = _msb22(p) + 1
     mg = jnp.minimum((msb_val * N_MSB_GROUPS) // 23, N_MSB_GROUPS - 1)
     hw = _popcount(p & MASK22)

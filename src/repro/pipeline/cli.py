@@ -67,6 +67,10 @@ def build_parser() -> argparse.ArgumentParser:
                        help="resume from a saved plan (BASE.json + BASE.npz)")
         p.add_argument("--plan-out", default=None, metavar="BASE",
                        help="save the resulting plan to BASE.json + BASE.npz")
+        p.add_argument("--verify-cosim", action="store_true",
+                       help="gate the profiler's transition histograms "
+                            "against the bit-accurate systolic cosim "
+                            "(repro.cosim) on the sampled tiles")
         p.add_argument("--quiet", action="store_true",
                        help="suppress per-stage progress output")
         if command == "serve":
@@ -140,6 +144,8 @@ def _build_config(args):
         overrides["train"] = {"qat_steps": args.steps}
     if args.search_mode is not None:
         overrides["schedule"] = {"search_mode": args.search_mode}
+    if getattr(args, "verify_cosim", False):
+        overrides["profile"] = {"verify_cosim": True}
     serve_over = _serve_overrides(args)
     if serve_over:
         overrides["serve"] = serve_over
@@ -162,6 +168,8 @@ def _execute(args) -> int:
             over["train"] = {"qat_steps": args.steps}
         if args.search_mode is not None:
             over["schedule"] = {"search_mode": args.search_mode}
+        if getattr(args, "verify_cosim", False):
+            over["profile"] = {"verify_cosim": True}
         serve_over = _serve_overrides(args)
         if serve_over:
             over["serve"] = serve_over

@@ -53,10 +53,16 @@ class TrainStageConfig:
 
 @dataclasses.dataclass
 class ProfileStageConfig:
-    """Systolic-trace profiling budget (see repro.core.profiler)."""
+    """Systolic-trace profiling budget (see repro.core.profiler).
+
+    ``verify_cosim`` runs the bit-accurate co-simulation gate
+    (`repro.cosim.verify_runner_profile`) on the profiled tiles right
+    after the stage: the kernel's transition histograms must match the
+    independent PE-level reference exactly, or the stage fails."""
 
     batches: int = 1
     max_tiles: int = 16
+    verify_cosim: bool = False
 
 
 @dataclasses.dataclass
@@ -153,6 +159,12 @@ class PipelineConfig:
         for k in self.schedule.k_targets:
             if not 1 <= k <= K_MAX:
                 raise ValueError(f"schedule.k_targets entry {k} not in [1, {K_MAX}]")
+        for m in getattr(self.schedule, "msr_bits", (0,)):
+            if not 0 <= m <= 8:
+                raise ValueError(
+                    f"schedule.msr_bits entry {m} not in [0, 8] "
+                    f"(0 disables MSR truncation; int8 weights have at "
+                    f"most 8 magnitude bits)")
         if not 1 <= self.selection.k_target <= self.selection.k_init <= 256:
             raise ValueError(
                 f"selection needs 1 <= k_target <= k_init, got "

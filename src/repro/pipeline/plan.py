@@ -92,7 +92,7 @@ class CompressionPlan:
             out["layers"] = [
                 {"layer": d["layer"], "share": round(d["share"], 4),
                  "prune": d["prune_ratio"], "k": d["k"],
-                 "accepted": d["accepted"]}
+                 "msr": d.get("msr"), "accepted": d["accepted"]}
                 for d in self.decisions
             ]
         if self.artifacts:
@@ -310,5 +310,10 @@ def decision_dict(d) -> Dict[str, Any]:
         "energy_after": float(d.energy_after),
         "accuracy": float(d.accuracy),
         "accepted": bool(d.accepted),
-        "tried": [[float(p), int(k)] for p, k in d.tried],
+        "msr": None if getattr(d, "msr", None) is None else int(d.msr),
+        # (prune, k) pairs from pre-MSR plans and (prune, k, msr) triples
+        # both round-trip — old documents stay loadable
+        "tried": [[float(t[0]), int(t[1])] +
+                  ([int(t[2])] if len(t) > 2 else [])
+                  for t in d.tried],
     }

@@ -100,6 +100,27 @@ class CnnTarget:
         plan.stats = stats
         plan.metrics["acc_base"] = float(acc_base)
         plan.metrics["qat_loss"] = float(loss)
+        if cfg.profile.verify_cosim:
+            from repro.cosim import verify_runner_profile
+
+            res = verify_runner_profile(
+                runner, params, state, comp,
+                n_batches=cfg.profile.batches,
+                max_tiles=cfg.profile.max_tiles)
+            plan.metrics["cosim_match"] = bool(res["match"])
+            plan.metrics["cosim_tiles"] = int(res["n_tiles"])
+            plan.metrics["cosim_max_abs_diff"] = float(res["max_abs_diff"])
+            plan.metrics["cosim_toggles"] = int(res["toggles"])
+            if verbose:
+                print(f"[pipeline] cosim verify: match={res['match']} "
+                      f"tiles={res['n_tiles']} "
+                      f"max_abs_diff={res['max_abs_diff']}")
+            if not res["match"]:
+                bad = {n: r["max_abs_diff"] for n, r in res["layers"].items()
+                       if not r["match"]}
+                raise RuntimeError(
+                    "transition-energy kernel disagrees with the "
+                    f"bit-accurate cosim on layers {bad} — see docs/cosim.md")
 
     def stage_energy_model(self, plan: CompressionPlan, cfg: PipelineConfig,
                            verbose: bool = False) -> None:

@@ -1,0 +1,235 @@
+"""Differential tests: transition-energy kernel vs. the bit-accurate cosim.
+
+The cosim (`repro.cosim`) recomputes the 22-bit partial-sum transition
+histogram from a cycle-accurate PE-array model with independent bit
+primitives (no clz / population_count, integer scatter histograms). These
+tests assert the Pallas kernel (interpret mode) and the vectorized jnp
+oracle reproduce it EXACTLY — bin for bin — across random tiles, sign
+patterns, and adversarial corner cases, and pin the `_msb22`/`_group_id`
+edge-case semantics of the kernel with exact-value checks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.stats import TILE, tile_psum_trace
+from repro.cosim import (
+    MASK22,
+    bits22,
+    pe_array_trace,
+    ref_group_id,
+    ref_msb_val22,
+    ref_popcount22,
+    tile_cosim_stats,
+    verify_tiles,
+)
+from repro.kernels.transition_energy.transition_energy import (
+    N_HD_SUBGROUPS,
+    N_MSB_GROUPS,
+    _group_id,
+    _msb22,
+)
+
+
+# ------------------------------------------------- cycle-accurate PE model
+
+
+@pytest.mark.parametrize("k,m,t", [(64, 64, 33), (64, 64, 8), (16, 8, 5)])
+def test_cycle_trace_equals_prefix_sum_trace(k, m, t):
+    """The skewed cycle-by-cycle register trace must visit exactly the
+    unskewed prefix sums S[r, c, t], in t-order, per PE."""
+    key = jax.random.PRNGKey(k + m + t)
+    w = jax.random.randint(key, (k, m), -128, 128, dtype=jnp.int32)
+    a = jax.random.randint(jax.random.fold_in(key, 1), (k, t), -128, 128,
+                           dtype=jnp.int32)
+    got = pe_array_trace(w, a)
+    want = tile_psum_trace(w, a)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_cycle_trace_hand_computed():
+    """2x2 array, 2-element stream, checked by hand."""
+    w = jnp.asarray([[1, -2], [3, 4]], jnp.int32)
+    a = jnp.asarray([[5, -6], [7, 8]], jnp.int32)
+    got = np.asarray(pe_array_trace(w, a))
+    # S[0, c, t] = w[0, c] * a[0, t]; S[1, c, t] = S[0, c, t] + w[1, c]*a[1, t]
+    want = np.asarray([[[5, -6], [-10, 12]],
+                       [[5 + 21, -6 + 24], [-10 + 28, 12 + 32]]])
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------- independent bit primitives
+
+
+def test_ref_popcount22_exact():
+    vals = np.asarray([0, 1, 3, MASK22, 1 << 21, (1 << 22) | 1, -1],
+                      np.int32)
+    # -1 masks to MASK22 (22 ones); bit 22 is cleared before counting
+    want = [0, 1, 2, 22, 1, 1, 22]
+    np.testing.assert_array_equal(
+        np.asarray(ref_popcount22(jnp.asarray(vals))), want)
+
+
+def test_ref_msb_val22_exact():
+    vals = np.asarray([0, 1, 2, 3, 1 << 21, MASK22, 1 << 22, -1], np.int32)
+    want = [0, 1, 2, 2, 22, 22, 0, 22]   # 1<<22 masks to 0
+    np.testing.assert_array_equal(
+        np.asarray(ref_msb_val22(jnp.asarray(vals))), want)
+
+
+def test_ref_primitives_match_kernel_on_all_boundaries():
+    """ref (threshold sums) vs kernel (clz / popcount intrinsics) on every
+    power of two, every all-ones run, and random values."""
+    probe = [0] + [1 << b for b in range(23)] + \
+        [(1 << b) - 1 for b in range(1, 23)] + [-1, -2, MASK22, 1 << 22]
+    probe += list(np.random.RandomState(0).randint(-(2 ** 31), 2 ** 31 - 1,
+                                                   512).astype(np.int64))
+    x = jnp.asarray(np.asarray(probe, np.int64).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(ref_msb_val22(x)),
+                                  np.asarray(_msb22(x) + 1))
+    np.testing.assert_array_equal(np.asarray(ref_group_id(x)),
+                                  np.asarray(_group_id(x)))
+
+
+# -------------------------------------- pinned kernel edge-case semantics
+
+
+def test_msb22_pinned_values():
+    """_msb22 semantics the energy model depends on, as exact values:
+    clz on the masked-zero value returns -1 (so msb_val = 0), the mask
+    clears bit 22 and above, and negatives see their 22-bit view."""
+    cases = {0: -1, 1: 0, 2: 1, 3: 1, MASK22: 21, 1 << 21: 21,
+             1 << 22: -1, (1 << 22) | 5: 2, -1: 21}
+    for v, want in cases.items():
+        assert int(_msb22(jnp.asarray(v, jnp.int32))) == want, v
+
+
+def test_msb_group_boundary_table():
+    """mg = min(msb_val * N_MSB_GROUPS // 23, 9) pinned over every possible
+    msb_val 0..22 — including the group-9 ceiling at msb_val 21 and 22."""
+    want_mg = [min(mv * N_MSB_GROUPS // 23, N_MSB_GROUPS - 1)
+               for mv in range(23)]
+    assert want_mg == [0, 0, 0, 1, 1, 2, 2, 3, 3, 3, 4, 4, 5, 5, 6, 6, 6,
+                      7, 7, 8, 8, 9, 9]
+    # psum with msb_val = mv (0 -> value 0); hw of these probes is 1 (or 0)
+    for mv in range(23):
+        p = jnp.asarray(0 if mv == 0 else 1 << (mv - 1), jnp.int32)
+        gid = int(_group_id(p))
+        assert gid // N_HD_SUBGROUPS == want_mg[mv], mv
+        assert gid == int(ref_group_id(p)), mv
+
+
+def test_hd_subgroup_boundary_table():
+    """hg = min(hw * N_HD_SUBGROUPS // 23, 4) pinned over every possible
+    Hamming weight 0..22 via all-ones runs (hw = run length)."""
+    for hw in range(23):
+        p = jnp.asarray((1 << hw) - 1, jnp.int32)   # hw ones
+        want_hg = min(hw * N_HD_SUBGROUPS // 23, N_HD_SUBGROUPS - 1)
+        gid = int(_group_id(p))
+        assert gid % N_HD_SUBGROUPS == want_hg, hw
+        assert gid == int(ref_group_id(p)), hw
+
+
+# --------------------------------------------- randomized differential sweep
+
+
+def _rand_tiles(key, n, t_len, lo, hi, dtype=jnp.int32):
+    kw, ka = jax.random.split(key)
+    w = jax.random.randint(kw, (n, TILE, TILE), lo, hi, dtype=jnp.int32)
+    a = jax.random.randint(ka, (n, TILE, t_len), lo, hi, dtype=jnp.int32)
+    return w.astype(dtype), a.astype(dtype)
+
+
+@pytest.mark.parametrize("t_len,lo,hi,dtype", [
+    (33, -128, 128, jnp.int32),     # full signed int8 range
+    (8, 0, 128, jnp.int32),         # non-negative: no sign wraps
+    (16, -128, 1, jnp.int32),       # non-positive: every psum wraps
+    (8, -4, 5, jnp.int8),           # narrow dtype in, small magnitudes
+])
+def test_kernel_and_oracle_match_cosim(t_len, lo, hi, dtype):
+    key = jax.random.PRNGKey(t_len * 31 + hi)
+    w, a = _rand_tiles(key, 3, t_len, lo, hi, dtype)
+    for use_kernel in (False, True):
+        res = verify_tiles(w, a, use_kernel=use_kernel, interpret=True)
+        assert res["exactness_ok"]
+        assert res["match"], (use_kernel, res)
+        assert res["kernel_total"] == res["cosim_total"] \
+            == 3 * TILE * TILE * (t_len - 1)
+
+
+def test_masked_padding_tiles_contribute_nothing():
+    key = jax.random.PRNGKey(7)
+    w, a = _rand_tiles(key, 4, 9, -128, 128)
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    full = verify_tiles(w[:2], a[:2], use_kernel=False)
+    masked = verify_tiles(w, a, mask=mask, use_kernel=False)
+    assert masked["match"] and full["match"]
+    assert masked["n_tiles"] == 2
+    assert masked["cosim_total"] == full["cosim_total"]
+    assert masked["toggles"] == full["toggles"]
+
+
+# ------------------------------------------------------- adversarial cases
+
+
+def test_all_zero_partial_sums():
+    """w = 0 everywhere: every transition is (0 -> 0), group (0, 0)."""
+    w = jnp.zeros((1, TILE, TILE), jnp.int32)
+    a = jax.random.randint(jax.random.PRNGKey(1), (1, TILE, 12), -128, 128,
+                           dtype=jnp.int32)
+    hist, toggles = tile_cosim_stats(w[0], a[0])
+    assert int(hist[0, 0]) == TILE * TILE * 11
+    assert int(hist.sum()) == TILE * TILE * 11
+    assert int(toggles) == 0
+    for use_kernel in (False, True):
+        res = verify_tiles(w, a, use_kernel=use_kernel, interpret=True)
+        assert res["match"], res
+
+
+def test_sign_flip_transitions():
+    """Alternating +v / -v activations: every transition flips the sign of
+    every partial sum, crossing the two's-complement wrap each time (the
+    negative view has msb_val 22 -> MSB group 9)."""
+    w = jnp.ones((1, TILE, TILE), jnp.int32)
+    a = jnp.tile(jnp.asarray([3, -3], jnp.int32), (8,))[None, None, :]
+    a = jnp.broadcast_to(a, (1, TILE, 16))
+    hist, toggles = tile_cosim_stats(w[0], a[0])
+    # every psum alternates between +3r and -3r (r = row+1 > 0): each of the
+    # 15 transitions connects a positive-view group and a wrap-view group
+    assert int(hist.sum()) == TILE * TILE * 15
+    assert int(hist[0, 0]) == 0
+    for use_kernel in (False, True):
+        res = verify_tiles(w, a, use_kernel=use_kernel, interpret=True)
+        assert res["match"], res
+
+
+def test_boundary_magnitude_psums():
+    """Drive partial sums through the 22-bit corner values: 0, +-1, the
+    2^21 MSB-group-9 floor, and the MASK22 ceiling."""
+    # row of 127s with 127 activations climbs to 64*127*127 = 1032256 > 2^19;
+    # alternating extremes slam between large positive and wrapped negative
+    w = jnp.full((1, TILE, TILE), 127, jnp.int32)
+    a_cases = [
+        jnp.full((1, TILE, 10), 127, jnp.int32),
+        jnp.full((1, TILE, 10), -128, jnp.int32),
+        jnp.tile(jnp.asarray([127, -128], jnp.int32), (5,))[None, None, :]
+        * jnp.ones((1, TILE, 1), jnp.int32),
+    ]
+    for a in a_cases:
+        for use_kernel in (False, True):
+            res = verify_tiles(w, a, use_kernel=use_kernel, interpret=True)
+            assert res["match"], res
+
+
+def test_cosim_group_histogram_totals_and_dtype():
+    key = jax.random.PRNGKey(5)
+    w, a = _rand_tiles(key, 2, 17, -128, 128)
+    hist, toggles = tile_cosim_stats(w[0], a[0])
+    assert hist.dtype == jnp.int32
+    assert int(hist.sum()) == TILE * TILE * 16
+    # toggles bounded by 22 bits per transition
+    assert 0 <= int(toggles) <= TILE * TILE * 16 * 22
+    # bits22 view is what the toggle count runs on
+    assert int(bits22(jnp.asarray(-1)).max()) == MASK22

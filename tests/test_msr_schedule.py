@@ -1,0 +1,268 @@
+"""MSR truncation as a third schedule axis: exact truncation semantics,
+serial-vs-batched decision parity with MSR candidates enabled, rollback,
+plan round-trip of MSR decisions, and LUT-GEMM serve parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qat
+from repro.core.export import export_layer, serve_dense
+from repro.core.runner import CnnRunner
+from repro.core.schedule import (
+    LayerDecision,
+    ScheduleConfig,
+    _config_order,
+    energy_prioritized_compression,
+)
+from repro.core.weight_selection import SelectionConfig, msr_comp
+from repro.data.synthetic import SyntheticImages
+from repro.nn import cnn
+from repro.pipeline.plan import CompressionPlan, decision_dict
+from repro.pipeline.schema import validate_plan_doc
+
+
+# ------------------------------------------------------ truncation semantics
+
+
+def test_msr_truncate_exact_values():
+    cases = [
+        (127, 3, 112),   # 1111111 -> 1110000
+        (127, 1, 64),
+        (5, 1, 4),       # 101 -> 100
+        (5, 2, 4),       # 101 -> 100 (third significant bit dropped)
+        (5, 3, 5),       # 101 -> 101 (all three significant bits kept)
+        (-6, 2, -6),     # 110 keeps both bits
+        (-7, 2, -6),     # 111 -> 110, sign preserved
+        (7, 2, 6),
+        (1, 1, 1),
+        (0, 3, 0),
+    ]
+    for v, bits, want in cases:
+        got = int(qat.msr_truncate_int(jnp.asarray(v, jnp.int32), bits))
+        assert got == want, (v, bits, got, want)
+
+
+def test_msr_truncate_zero_bits_is_identity():
+    q = jnp.arange(-128, 128, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(qat.msr_truncate_int(q, 0)),
+                                  np.asarray(q))
+
+
+def test_msr_truncate_under_vmap():
+    """The batched sweep vmaps over a stacked (n,) msr_bits axis."""
+    q = jnp.asarray([[127, -33, 5, 0]], jnp.int32)
+    qs = jnp.broadcast_to(q, (3, 1, 4))
+    bits = jnp.asarray([0, 1, 3], jnp.int32)
+    out = jax.vmap(qat.msr_truncate_int)(qs, bits)
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        [[[127, -33, 5, 0]], [[64, -32, 4, 0]], [[112, -32, 5, 0]]])
+
+
+# ----------------------------------------------------------- comp plumbing
+
+
+def test_identity_comp_has_msr_off_and_legacy_comps_work():
+    comp = qat.identity_comp((6, 3))
+    assert int(comp["msr_bits"]) == 0
+    w = jax.random.normal(jax.random.PRNGKey(0), (6, 3)) * 0.1
+    q0 = qat.quantize_weight_int(w, comp)
+    legacy = {k: v for k, v in comp.items() if k != "msr_bits"}
+    np.testing.assert_array_equal(np.asarray(qat.quantize_weight_int(w, legacy)),
+                                  np.asarray(q0))
+    np.testing.assert_array_equal(np.asarray(qat.fake_quant_weight(w, legacy)),
+                                  np.asarray(qat.fake_quant_weight(w, comp)))
+
+
+def test_msr_comp_updates_only_target_layer():
+    comp = {"a": qat.identity_comp((4, 2)), "b": qat.identity_comp((4, 2))}
+    out = msr_comp(comp, "a", 3)
+    assert int(out["a"]["msr_bits"]) == 3
+    assert int(out["b"]["msr_bits"]) == 0
+    assert int(comp["a"]["msr_bits"]) == 0          # functional update
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 2)) * 0.2
+    q_plain = qat.quantize_weight_int(w, comp["a"])
+    q_msr = qat.quantize_weight_int(w, out["a"])
+    np.testing.assert_array_equal(
+        np.asarray(q_msr), np.asarray(qat.msr_truncate_int(q_plain, 3)))
+
+
+def test_config_order_default_unchanged_and_msr_ranking():
+    # default msr_bits=(0,) must reproduce the historical (prune, k) order
+    assert _config_order(ScheduleConfig()) == [
+        (0.7, 16, 0), (0.7, 24, 0), (0.7, 32, 0),
+        (0.5, 16, 0), (0.5, 24, 0), (0.5, 32, 0),
+        (0.3, 16, 0), (0.3, 24, 0), (0.3, 32, 0)]
+    # MSR-on candidates rank more aggressive than MSR-off; fewer bits first
+    cfg = ScheduleConfig(prune_ratios=(0.5,), k_targets=(8, 16),
+                         msr_bits=(0, 2, 3))
+    assert _config_order(cfg) == [
+        (0.5, 8, 2), (0.5, 16, 2), (0.5, 8, 3), (0.5, 16, 3),
+        (0.5, 8, 0), (0.5, 16, 0)]
+
+
+def test_pipeline_config_validates_msr_range():
+    from repro.pipeline.config import PipelineConfig
+
+    cfg = PipelineConfig()
+    cfg.schedule.msr_bits = (0, 3)
+    cfg.validate()
+    cfg.schedule.msr_bits = (9,)
+    with pytest.raises(ValueError, match="msr_bits"):
+        cfg.validate()
+
+
+# ------------------------------------------------------------- seeded parity
+
+
+def _runner():
+    return CnnRunner(cnn.lenet5(), SyntheticImages(seed=3, noise=1.4),
+                     batch_size=64, lr=2e-3, seed=0)
+
+
+@pytest.fixture(scope="module")
+def trained_lenet():
+    runner = _runner()
+    params, state, opt_state, comp = runner.init()
+    params, state, opt_state, _ = runner.train(params, state, opt_state,
+                                               comp, 120)
+    stats = runner.profile(params, state, comp, n_batches=1, max_tiles=4)
+    return runner, params, state, opt_state, comp, stats
+
+
+def _msr_cfg(mode, delta=0.06):
+    return ScheduleConfig(
+        search_mode=mode,
+        prune_ratios=(0.5,), k_targets=(8,), msr_bits=(2, 0),
+        delta_acc=delta, finetune_steps=6, trial_finetune_steps=4,
+        eval_batches=1, max_layers=1, min_energy_share=0.0)
+
+
+_SEL = SelectionConfig(k_init=10, k_target=8, delta_acc=0.06,
+                       score_batches=1, accept_batches=1,
+                       max_score_candidates=3)
+
+
+def test_batched_matches_serial_with_msr_candidates(trained_lenet):
+    """Decision parity including the msr component of each decision: the
+    batched sweep must pick exactly the candidate the serial walk accepts."""
+    runner, params, state, opt_state, comp, stats = trained_lenet
+    results = {}
+    for mode in ("serial", "batched"):
+        _, _, _, c2, res = energy_prioritized_compression(
+            runner, params, state, opt_state, comp, stats,
+            _msr_cfg(mode), _SEL)
+        results[mode] = (c2, res)
+
+    (_, ser), (_, bat) = results["serial"], results["batched"]
+    key = lambda d: (d.layer, d.prune_ratio, d.k, d.msr, d.accepted,
+                     tuple(tuple(t) for t in d.tried))
+    assert [key(d) for d in ser.decisions] == [key(d) for d in bat.decisions]
+    assert ser.acc0 == bat.acc0
+    # an accepted candidate carries its msr depth into the comp tree
+    for mode, (c2, res) in results.items():
+        for d in res.decisions:
+            if d.accepted:
+                assert int(c2[d.layer]["msr_bits"]) == (d.msr or 0), mode
+
+
+def test_rejected_msr_candidates_leave_state_untouched(trained_lenet):
+    runner, params, state, opt_state, comp, stats = trained_lenet
+    cfg = _msr_cfg("batched", delta=-1.0)   # floor acc0 + 1: all reject
+    p2, s2, o2, c2, res = energy_prioritized_compression(
+        runner, params, state, opt_state, comp, stats, cfg, _SEL)
+    assert all(not d.accepted for d in res.decisions)
+    assert all(d.msr is None for d in res.decisions)
+    assert res.energy_saving == 0.0
+    for got, want in ((p2, params), (o2, opt_state)):
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in comp:
+        for leaf in ("mask", "codebook", "codebook_k", "msr_bits"):
+            np.testing.assert_array_equal(np.asarray(c2[name][leaf]),
+                                          np.asarray(comp[name][leaf]))
+
+
+# ------------------------------------------------------- plan round-trip
+
+
+def test_plan_roundtrip_with_msr_decisions(tmp_path):
+    dec = LayerDecision(
+        layer="conv2", share=0.6, prune_ratio=0.5, k=8,
+        energy_before=10.0, energy_after=7.0, accuracy=0.9, accepted=True,
+        tried=[(0.5, 8, 2)], msr=2)
+    dec_off = LayerDecision(
+        layer="fc1", share=0.4, prune_ratio=None, k=None,
+        energy_before=5.0, energy_after=5.0, accuracy=0.9, accepted=False,
+        tried=[(0.5, 8, 2), (0.5, 8, 0)])
+    comp = {"conv2": qat.identity_comp((4, 3))}
+    comp["conv2"]["codebook"], comp["conv2"]["codebook_k"] = \
+        qat.make_codebook([-8, 0, 8])
+    comp["conv2"]["msr_bits"] = jnp.asarray(2, jnp.int32)
+    plan = CompressionPlan(
+        target={"kind": "cnn", "arch": "lenet5"},
+        decisions=[decision_dict(dec), decision_dict(dec_off)],
+        metrics={"energy_before": 15.0, "energy_after": 12.0},
+        shares={"conv2": 0.6, "fc1": 0.4},
+        comp=comp)
+    for s in ("profile", "energy_model", "schedule"):
+        plan.mark_done(s)
+    base = tmp_path / "plan_msr"
+    plan.save(base)
+    back = CompressionPlan.load(base)
+    assert back.decisions[0]["msr"] == 2
+    assert back.decisions[0]["tried"] == [[0.5, 8, 2]]
+    assert back.decisions[1]["msr"] is None
+    assert back.decisions[1]["tried"] == [[0.5, 8, 2], [0.5, 8, 0]]
+    assert int(back.comp["conv2"]["msr_bits"]) == 2
+    # schema gate accepts MSR decisions (and old 2-element tried lists)
+    import json
+    doc = json.loads((tmp_path / "plan_msr.json").read_text())
+    assert all(g["pass"] for g in validate_plan_doc(doc)
+               if g["name"] == "plan_decisions_sane")
+    # summary surfaces the msr column
+    assert plan.summary()["layers"][0]["msr"] == 2
+
+
+def test_schema_rejects_out_of_range_msr(tmp_path):
+    dec = decision_dict(LayerDecision(
+        layer="l", share=1.0, prune_ratio=0.5, k=8, energy_before=2.0,
+        energy_after=1.0, accuracy=0.9, accepted=True,
+        tried=[(0.5, 8, 9)], msr=9))
+    doc = {"schema_version": 1, "completed": ["profile", "energy_model",
+                                             "schedule"],
+           "decisions": [dec], "shares": {"l": 1.0},
+           "metrics": {"energy_before": 2.0, "energy_after": 1.0},
+           "arrays": {"x": {}}}
+    gates = {g["name"]: g["pass"] for g in validate_plan_doc(doc)}
+    assert gates["plan_decisions_sane"] is False
+
+
+# ------------------------------------------------------------ serve parity
+
+
+def test_lut_serve_parity_for_msr_truncated_weights():
+    """export_layer + serve_dense must match x @ fake_quant_weight when the
+    comp carries an MSR depth — the serving encode truncates before the
+    codebook projection exactly like the QAT forward."""
+    key = jax.random.PRNGKey(11)
+    w = jax.random.normal(key, (128, 64)) * 0.05
+    comp = qat.identity_comp(w.shape)
+    comp["codebook"], comp["codebook_k"] = qat.make_codebook(
+        [-96, -64, -48, -32, -16, -8, 0, 8, 16, 32, 48, 64, 96, 127])
+    comp["msr_bits"] = jnp.asarray(2, jnp.int32)
+
+    art = export_layer(w, comp, kind="dense", layout="out_last", block_k=128)
+    assert art is not None
+    x = jax.random.normal(jax.random.fold_in(key, 1), (16, 128))
+    y_serve = serve_dense(x, art, interpret=True)
+    y_fake = x @ qat.fake_quant_weight(w, comp)
+    np.testing.assert_allclose(np.asarray(y_serve), np.asarray(y_fake),
+                               rtol=1e-4, atol=1e-4)
+    # and the truncation actually changed the served weights
+    comp_off = dict(comp)
+    comp_off["msr_bits"] = jnp.asarray(0, jnp.int32)
+    y_off = x @ qat.fake_quant_weight(w, comp_off)
+    assert not np.allclose(np.asarray(y_fake), np.asarray(y_off))

@@ -12,6 +12,13 @@ by name instead of a dead shell.
     PYTHONPATH=src python tools/check_gates.py [--ci] [--skip-bench]
     PYTHONPATH=src python tools/check_gates.py --trajectory [--ci]
     PYTHONPATH=src python tools/check_gates.py --plan BASE [--ci]
+    PYTHONPATH=src python tools/check_gates.py --cosim [--ci] [--skip-bench]
+
+``--cosim`` runs `benchmarks/bench_cosim.py` and gates bit-exact agreement
+between the transition-energy kernel's histograms and the independent
+cycle-accurate cosim (``repro.cosim``) on >= 64 sampled tiles per model,
+plus MSR-axis sweep parity (serial == batched with >= 1 accepted MSR
+candidate). Summary: ``benchmarks/out/cosim_summary.json``.
 
 ``--skip-bench`` evaluates whatever JSON is already in benchmarks/out/
 (useful to re-check without re-running the benchmarks).
@@ -80,6 +87,25 @@ GATES = [
      "parity_engine_vs_oneshot", "==", True, False),
 ]
 
+# bit-accuracy gates for `--cosim`: the transition-energy kernel's MSB-group
+# histograms must match the independent cycle-accurate cosim EXACTLY on the
+# sampled tiles, and the MSR candidate axis must be live (serial == batched
+# decisions, >= 1 accepted MSR candidate in the seeded reduced sweep).
+COSIM_GATES = [
+    ("cosim_hist_match", "bench_cosim", "cosim_hist_match", "==", True,
+     False),
+    ("cosim_min_tiles_verified", "bench_cosim", "cosim_min_tiles_verified",
+     ">=", 64, False),
+    ("cosim_max_abs_diff", "bench_cosim", "cosim_max_abs_diff", "==", 0.0,
+     False),
+    ("cosim_f32_exactness_bound", "bench_cosim", "cosim_exactness_ok", "==",
+     True, False),
+    ("cosim_msr_decisions_match", "bench_cosim", "msr_decisions_match", "==",
+     True, False),
+    ("cosim_msr_candidate_accepted", "bench_cosim",
+     "msr_candidates_accepted", ">=", 1, False),
+]
+
 OPS = {
     ">=": lambda v, t: v >= t,
     "<": lambda v, t: v < t,
@@ -98,10 +124,10 @@ def run_benchmarks() -> None:
     bench_serving.run()
 
 
-def evaluate(ci: bool = False) -> list:
+def evaluate(ci: bool = False, gates=None) -> list:
     derived = {}
     summary = []
-    for name, bench, key, op, threshold, timing in GATES:
+    for name, bench, key, op, threshold, timing in (gates or GATES):
         if bench not in derived:
             path = OUT_DIR / f"{bench}.json"
             derived[bench] = (json.loads(path.read_text())["derived"]
@@ -184,6 +210,17 @@ def check_plan(base: str, ci: bool = False) -> int:
     return report(summary, ci, "plan_summary.json")
 
 
+def check_cosim(ci: bool = False, skip_bench: bool = False) -> int:
+    """Run the cosim verification benchmark and gate bit-exactness + MSR."""
+    if not skip_bench:
+        from benchmarks import bench_cosim
+
+        print("== bench_cosim ==", flush=True)
+        bench_cosim.run()
+    return report(evaluate(ci=ci, gates=COSIM_GATES), ci,
+                  "cosim_summary.json")
+
+
 def check_trajectory(ci: bool = False) -> int:
     """Compare the newest vs previous point of each repo-root BENCH_*.json."""
     summary = []
@@ -230,10 +267,16 @@ def main(argv=None) -> int:
     ap.add_argument("--plan", default=None, metavar="BASE",
                     help="validate a saved CompressionPlan document "
                          "(BASE.json) instead of running benchmarks")
+    ap.add_argument("--cosim", action="store_true",
+                    help="run the bit-accurate cosim verification benchmark "
+                         "and gate kernel-vs-cosim histogram exactness plus "
+                         "MSR sweep parity (writes cosim_summary.json)")
     args = ap.parse_args(argv)
 
     if args.plan:
         return check_plan(args.plan, ci=args.ci)
+    if args.cosim:
+        return check_cosim(ci=args.ci, skip_bench=args.skip_bench)
     if args.trajectory:
         return check_trajectory(ci=args.ci)
 
