@@ -1,24 +1,38 @@
-"""Serving benchmark: continuous-batching engine vs single-shot fallback.
+"""Serving benchmark: slot-level continuous batching vs wave-lockstep vs
+single-shot.
 
-Drains a fixed mixed-length request trace (two prompt buckets, per-request
-``new_tokens``) through `repro.serving.ServingEngine` in both modes on a
-reduced olmo-1b and reports tokens/sec. Both modes implement the same
-pad-to-bucket contract and the same AOT compile-cache discipline (each mode
-warms its own cache — their bucket widths differ — and both are timed only
-after warmup), so the ratio isolates exactly what the engine adds — wave
-batching plus admission/decode interleaving — not compile-time accounting
-tricks.
+Two fixed request traces through `repro.serving.ServingEngine` on a reduced
+olmo-1b:
 
-Gated in tools/check_gates.py:
+* ``TRACE`` (16 requests, two prompt buckets, per-request ``new_tokens``)
+  drains through ``mode="engine"`` (slot-level) and ``mode="oneshot"`` —
+  the historical engine-vs-fallback comparison whose throughput trajectory
+  `BENCH_serving.json` tracks across PRs.
+* ``BURSTY`` (24 requests, queue depth > slot count, new-token budgets
+  varying 4..16 under a single 16-token decode bucket) drains through
+  ``mode="engine"`` and the legacy ``mode="wave"`` lockstep baseline. The
+  trace is built to stall a lockstep scheduler: early finishers idle until
+  their wave drains, and deep-queue requests wait for a whole wave to form.
+  Slot-level refill + chunked prefill is gated to beat the wave baseline on
+  both tokens/sec and p99 time-to-first-token by >= 30%.
+
+All modes implement the same pad-to-bucket contract and the same AOT
+compile-cache discipline (each mode warms its own executables and is timed
+only after warmup), so the ratios isolate scheduling, not compile-time
+accounting tricks. Gated in tools/check_gates.py:
 
 * ``serving_speedup_engine_vs_oneshot`` >= 2.0 — the batching win;
-* ``recompiles_after_warmup`` == 0 — after bucket warmup, serving the whole
-  trace must not build a single new executable (the AOT cache would raise
-  on a shape miss, so this both measures and enforces);
-* ``parity_engine_vs_oneshot`` — greedy outputs identical per request.
-
-`BENCH_serving.json` at the repo root tracks the throughput trajectory
-across PRs (tools/check_gates.py --trajectory gates on it).
+* ``serving_speedup_slot_vs_wave`` >= 1.05 — slot refill + chunked prefill
+  must beat wave lockstep outright on the bursty trace (measured ~1.2-1.3x;
+  the modest floor absorbs scheduler-noise variance on shared hosts);
+* ``serving_ttft_p99_improvement_vs_wave`` >= 1.3 — tail TTFT must improve
+  >= 30% on the same trace (measured ~3x: freed slots refill immediately
+  instead of queueing behind a draining wave);
+* ``recompiles_after_warmup`` == 0 — serving both traces in all modes must
+  not build a single new executable (the AOT cache raises on a shape miss,
+  so this both measures and enforces);
+* ``parity_engine_vs_oneshot`` / ``parity_slot_vs_wave`` — greedy outputs
+  identical per request across modes.
 """
 
 from __future__ import annotations
@@ -44,8 +58,22 @@ TRACE = [
     (31, 16), (16, 16), (10, 12), (28, 16),
     (16, 10), (24, 16), (13, 16), (32, 12),
 ]
+# Bursty trace: 24 requests against 16 slots, long and short prompts
+# interleaved, decode budgets spread over 4..32 under one 32-token bucket —
+# a lockstep wave pads every request's decode to 32 steps and idles the
+# early finishers until the wave drains, and the queue depth makes admission
+# latency visible in the TTFT tail.
+BURSTY = [
+    (32, 32), (30, 4), (16, 16), (12, 6), (32, 28), (9, 8), (28, 12), (16, 20),
+    (31, 32), (14, 4), (25, 24), (16, 10), (10, 6), (32, 32), (13, 16), (24, 8),
+    (29, 28), (16, 4), (27, 12), (11, 32), (32, 6), (15, 20), (26, 24), (16, 10),
+]
 ENGINE_CFG = EngineConfig(max_batch=8, prompt_buckets=(16, 32),
-                          new_token_buckets=(16,), max_waves=2)
+                          new_token_buckets=(16,), max_waves=2,
+                          chunk_buckets=(16,), chunk_rows=8)
+BURSTY_CFG = EngineConfig(max_batch=8, prompt_buckets=(16, 32),
+                          new_token_buckets=(32,), max_waves=2,
+                          chunk_buckets=(16,), chunk_rows=8)
 
 
 def _build():
@@ -53,10 +81,12 @@ def _build():
     model = build_lm(cfg)
     params = init_params(jax.random.PRNGKey(0), model.spec)
     rng = np.random.default_rng(7)
-    prompts = [rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
-               for plen, _ in TRACE]
-    news = [n for _, n in TRACE]
-    return model, params, prompts, news
+    traces = {}
+    for name, trace in (("trace", TRACE), ("bursty", BURSTY)):
+        prompts = [rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+                   for plen, _ in trace]
+        traces[name] = (prompts, [n for _, n in trace])
+    return model, params, traces
 
 
 def _drain(engine, prompts, news):
@@ -65,54 +95,87 @@ def _drain(engine, prompts, news):
     engine.run()
 
 
+def _measure(model, params, mode, trace_name, prompts, news):
+    cfg = ENGINE_CFG if trace_name == "trace" else BURSTY_CFG
+    eng = ServingEngine(model, params, mode=mode, config=cfg)
+    eng.warmup(list(zip((len(p) for p in prompts), news)))
+    _drain(eng, prompts, news)          # warm run: process-level jax caches
+    warm_compiles = eng.cache.compile_count
+    wall = best_of(lambda: _drain(eng, prompts, news))
+    recompiles = eng.cache.compile_count - warm_compiles
+    # untimed verification pass: per-request tokens in trace order
+    res = eng.serve(prompts, news)
+    tokens = [res[r].tokens for r in sorted(res)]
+    rep = eng.report()
+    new_tokens = sum(news)
+    row = {
+        "mode": mode,
+        "trace": trace_name,
+        "requests": len(prompts),
+        "new_tokens": new_tokens,
+        "wall_s": wall,
+        "tokens_per_s": new_tokens / wall,
+        "buckets_compiled": rep["cache_buckets_compiled"],
+        "compile_count": rep["cache_compile_count"],
+        "recompiles_after_warmup": recompiles,
+        "energy_eu_per_token": rep["energy_eu_per_token"],
+        "energy_eu_overhead": rep["energy_eu_overhead"],
+        "slot_utilization": rep["slot_utilization"],
+        "latency_p50_s": rep["latency_p50_s"],
+        "ttft_p50_s": rep["ttft_p50_s"],
+        "ttft_p99_s": rep["ttft_p99_s"],
+    }
+    return row, tokens, recompiles
+
+
 def run():
     t0 = time.time()
-    model, params, prompts, news = _build()
-    new_tokens = sum(news)
+    model, params, traces = _build()
 
-    rows = []
-    walls = {}
-    compiles = {}
-    tokens = {}
-    for mode in ("engine", "oneshot"):
-        eng = ServingEngine(model, params, mode=mode, config=ENGINE_CFG)
-        eng.warmup(TRACE)
-        _drain(eng, prompts, news)      # warm run: process-level jax caches
-        warm_compiles = eng.cache.compile_count
-        walls[mode] = best_of(lambda e=eng: _drain(e, prompts, news))
-        compiles[mode] = eng.cache.compile_count - warm_compiles
-        # untimed verification pass: per-request tokens in trace order
-        res = eng.serve(prompts, news)
-        tokens[mode] = [res[r].tokens for r in sorted(res)]
-        rep = eng.report()
-        rows.append({
-            "mode": mode,
-            "requests": len(TRACE),
-            "new_tokens": new_tokens,
-            "wall_s": walls[mode],
-            "tokens_per_s": new_tokens / walls[mode],
-            "buckets_compiled": rep["cache_buckets_compiled"],
-            "compile_count": rep["cache_compile_count"],
-            "recompiles_after_warmup": compiles[mode],
-            "energy_eu_per_token": rep["energy_eu_per_token"],
-            "latency_p50_s": rep["latency_p50_s"],
-            "ttft_p50_s": rep["ttft_p50_s"],
-        })
+    rows, tokens, recompiles = {}, {}, 0
+    for mode, trace_name in (("engine", "trace"), ("oneshot", "trace"),
+                             ("engine", "bursty"), ("wave", "bursty")):
+        prompts, news = traces[trace_name]
+        row, toks, rc = _measure(model, params, mode, trace_name, prompts,
+                                 news)
+        rows[(mode, trace_name)] = row
+        tokens[(mode, trace_name)] = toks
+        recompiles += rc
 
-    parity = tokens["engine"] == tokens["oneshot"]
-    lengths_ok = all(len(t) == n for t, n in zip(tokens["engine"], news))
+    parity = tokens[("engine", "trace")] == tokens[("oneshot", "trace")]
+    lengths_ok = all(
+        len(t) == n
+        for t, n in zip(tokens[("engine", "trace")], traces["trace"][1]))
+    parity_burst = tokens[("engine", "bursty")] == tokens[("wave", "bursty")]
+
+    eng_t, one_t = rows[("engine", "trace")], rows[("oneshot", "trace")]
+    slot_b, wave_b = rows[("engine", "bursty")], rows[("wave", "bursty")]
     derived = {
         "requests": len(TRACE),
-        "new_tokens": new_tokens,
-        "engine_wall_s": walls["engine"],
-        "oneshot_wall_s": walls["oneshot"],
-        "engine_tokens_per_s": new_tokens / walls["engine"],
-        "oneshot_tokens_per_s": new_tokens / walls["oneshot"],
-        "serving_speedup_engine_vs_oneshot": walls["oneshot"] / walls["engine"],
-        "recompiles_after_warmup": compiles["engine"] + compiles["oneshot"],
+        "new_tokens": sum(traces["trace"][1]),
+        "engine_wall_s": eng_t["wall_s"],
+        "oneshot_wall_s": one_t["wall_s"],
+        "engine_tokens_per_s": eng_t["tokens_per_s"],
+        "oneshot_tokens_per_s": one_t["tokens_per_s"],
+        "serving_speedup_engine_vs_oneshot":
+            one_t["wall_s"] / eng_t["wall_s"],
+        "recompiles_after_warmup": recompiles,
         "parity_engine_vs_oneshot": bool(parity and lengths_ok),
+        # bursty trace: slot-level engine vs the wave-lockstep baseline
+        "bursty_requests": len(BURSTY),
+        "slot_tokens_per_s": slot_b["tokens_per_s"],
+        "wave_tokens_per_s": wave_b["tokens_per_s"],
+        "serving_speedup_slot_vs_wave":
+            wave_b["wall_s"] / slot_b["wall_s"],
+        "ttft_p99_s": slot_b["ttft_p99_s"],
+        "wave_ttft_p99_s": wave_b["ttft_p99_s"],
+        "serving_ttft_p99_improvement_vs_wave":
+            wave_b["ttft_p99_s"] / slot_b["ttft_p99_s"],
+        "slot_utilization": slot_b["slot_utilization"],
+        "wave_slot_utilization": wave_b["slot_utilization"],
+        "parity_slot_vs_wave": bool(parity_burst),
     }
-    return emit("bench_serving", t0, rows, derived)
+    return emit("bench_serving", t0, list(rows.values()), derived)
 
 
 if __name__ == "__main__":

@@ -13,10 +13,11 @@ on a pod the identical code runs the engine's optional sharded decode over
 Equivalent pipeline CLI: ``repro serve --target lm --arch gemma3-4b
 --reduced`` (same stages, same plan; see docs/pipeline.md).
 
-``--mode oneshot`` swaps the engine for its single-shot fallback (batch-1
-waves, one request at a time, same buckets and compile cache) — the two
+``--mode wave`` swaps the slot-level engine for the legacy wave-lockstep
+scheduler and ``--mode oneshot`` for the single-shot fallback (batch-1
+waves, one request at a time, same buckets and compile cache) — all three
 modes are output-identical, and `benchmarks/bench_serving.py` gates the
-engine's throughput edge over this fallback.
+engine's throughput edge over both baselines.
 
 ``--compress-k N`` restricts every eligible matmul to an N-value codebook,
 serves the compressed fake-quant forward, exports the packed 4-bit artifacts
@@ -109,7 +110,8 @@ def main(argv=None):
                     help="CPU-sized config of the same family")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from a CheckpointManager directory")
-    ap.add_argument("--mode", choices=("engine", "oneshot"), default="engine",
+    ap.add_argument("--mode", choices=("engine", "wave", "oneshot"),
+                    default="engine",
                     help="continuous-batching engine or single-shot fallback")
     ap.add_argument("--batch", type=int, default=4,
                     help="number of requests in the trace")

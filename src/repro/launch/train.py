@@ -293,7 +293,7 @@ _CACHE_AXES_BY_NAME = {
     "state": ("batch", "inner", None, None),
     "conv": ("batch", None, "inner"),
     "h": ("batch", "inner"),
-    "pos": (),
+    "pos": ("batch",),
 }
 
 

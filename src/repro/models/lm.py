@@ -27,6 +27,7 @@ from repro.nn.layers import QuantConfig
 from repro.nn.spec import ParamSpec, normal_init, stack_specs
 from repro.nn.transformer import (
     apply_block,
+    apply_block_chunk,
     apply_block_decode,
     block_cache_spec,
     make_block_spec,
@@ -261,7 +262,9 @@ class LMModel:
             bt = cfg.pattern[j]
             spec["tail"][f"t{j}"] = block_cache_spec(
                 cfg, bt, batch, max_len, dtype, cross_len=cross_len)
-        spec["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        # per-sequence positions: rows of one batch may sit at different
+        # depths (slot-level continuous batching refills rows mid-flight)
+        spec["pos"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
         return spec
 
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
@@ -281,15 +284,23 @@ class LMModel:
         comp=None,
         shard: Optional[Callable] = None,
         shard_logits: Optional[Callable] = None,
+        active: Optional[jax.Array] = None,   # (B,) bool; None = all rows
     ) -> Tuple[jax.Array, dict]:
-        """One token for every sequence in the batch. Returns (logits, cache)."""
+        """One token for every sequence in the batch. Returns (logits, cache).
+
+        ``cache["pos"]`` is per-sequence (B,). With ``active`` given, rows
+        where it is False keep their cache and position untouched (their
+        logits are garbage and must be ignored) — this is what lets a slot
+        group decode while some slots are empty or mid-prefill.
+        """
         cfg = self.cfg
         pos = cache["pos"]
         x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.cdtype)
         if cfg.embed_scale:
             x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
         if cfg.encoder_decoder:
-            pos_ids = jnp.broadcast_to(pos.astype(jnp.int32), x.shape[:2])
+            pos_ids = (pos.astype(jnp.int32)[:, None] if jnp.ndim(pos)
+                       else jnp.broadcast_to(pos.astype(jnp.int32), x.shape[:2]))
             x = x + _sinusoid(pos_ids, cfg.d_model).astype(x.dtype)
         if shard is not None:
             x = shard(x)
@@ -327,9 +338,36 @@ class LMModel:
                 bt, qcfg=qcfg, comp=cj)
             new_cache["tail"][f"t{j}"] = c_new
 
+        if active is not None:
+            new_cache = self._merge_active(cache, new_cache, active)
+
         x = T.apply_norm(params["final_norm"], x, cfg)
         logits = self._unembed(params, x, shard_logits)
         return logits, new_cache
+
+    @staticmethod
+    def _merge_active(old_cache: dict, new_cache: dict, active) -> dict:
+        """Keep inactive rows' cache untouched. Requires per-row pos (B,).
+
+        `groups` leaves carry a leading layer-stack axis (batch is axis 1);
+        `tail` and `pos` leaves have batch leading.
+        """
+        act = active.astype(bool)
+
+        def merge(axis):
+            def f(new, old):
+                shape = [1] * new.ndim
+                shape[axis] = act.shape[0]
+                return jnp.where(act.reshape(shape), new, old)
+            return f
+
+        return {
+            "groups": jax.tree.map(merge(1), new_cache["groups"],
+                                   old_cache["groups"]),
+            "tail": jax.tree.map(merge(0), new_cache["tail"],
+                                 old_cache["tail"]),
+            "pos": jnp.where(act, new_cache["pos"], old_cache["pos"]),
+        }
 
     # --------------------------------------------------------------- prefill
 
@@ -375,7 +413,8 @@ class LMModel:
         # happens once per request and serve-time models ship a fixed cfg, so
         # the larger HLO is acceptable. (The dry-run decode path uses the
         # scanned decode_step.)
-        cache = {"groups": {}, "tail": {}, "pos": jnp.asarray(s, jnp.int32)}
+        cache = {"groups": {}, "tail": {},
+                 "pos": jnp.full((b,), s, jnp.int32)}
         group_states: Dict[str, list] = {f"g{i}": [] for i in range(self.n_pattern)}
         blocks_comp = None if comp is None else comp.get("blocks")
         tail_comp = None if comp is None else comp.get("tail")
@@ -411,6 +450,127 @@ class LMModel:
         x = T.apply_norm(params["final_norm"], x, cfg)
         logits = self._unembed(params, x)
         return logits, cache
+
+    # ------------------------------------------------------- chunked prefill
+
+    def prefill_chunk(
+        self,
+        params,
+        cache: dict,
+        tokens: jax.Array,          # (B, C) int32 — one prompt chunk per row
+        *,
+        start: jax.Array,           # (B,) int32 — first absolute position
+        qcfg: QuantConfig = QuantConfig.off(),
+        comp=None,
+        q_block: int = 8,
+        kv_block: int = 8,
+        shard: Optional[Callable] = None,
+        shard_logits: Optional[Callable] = None,
+    ) -> Tuple[jax.Array, dict]:
+        """Run one prefill chunk per row against an existing decode cache.
+
+        Row r processes positions ``start[r] .. start[r]+C-1``; the cache
+        comes back with ``pos = start + C``. Logits are (B, C, V) — the last
+        chunk's final real position seeds the first sampled token. Recurrent
+        mixers only support a single chunk from position 0 (their state
+        restarts from zero each call); encoder-decoder models have no chunk
+        path at all.
+        """
+        cfg = self.cfg
+        if cfg.encoder_decoder:
+            raise ValueError("chunked prefill does not support "
+                             "encoder-decoder models; use the oneshot path")
+        b, c = tokens.shape
+        start = jnp.asarray(start, jnp.int32)
+        positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(cfg.cdtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+        if shard is not None:
+            x = shard(x)
+
+        blocks_comp = None if comp is None else comp.get("blocks")
+        tail_comp = None if comp is None else comp.get("tail")
+
+        def macro_body(carry, xs):
+            h = carry
+            if blocks_comp is not None:
+                layer_params, layer_cache, layer_comp = xs
+            else:
+                (layer_params, layer_cache), layer_comp = xs, None
+            new_caches = {}
+            for i, bt in enumerate(cfg.pattern):
+                ci = None if layer_comp is None else layer_comp.get(f"g{i}")
+                h, c_new = apply_block_chunk(
+                    layer_params[f"g{i}"], h, layer_cache[f"g{i}"], positions,
+                    cfg, bt, qcfg=qcfg, comp=ci, q_block=q_block,
+                    kv_block=kv_block)
+                new_caches[f"g{i}"] = c_new
+            return h, new_caches
+
+        new_cache = {"groups": cache["groups"], "tail": {}, "pos": start + c}
+        if self.n_rep > 0:
+            xs = (params["blocks"], cache["groups"])
+            if blocks_comp is not None:
+                xs = (params["blocks"], cache["groups"], blocks_comp)
+            x, group_caches = jax.lax.scan(macro_body, x, xs)
+            new_cache["groups"] = group_caches
+        for j in range(self.n_tail):
+            bt = cfg.pattern[j]
+            cj = None if tail_comp is None else tail_comp.get(f"t{j}")
+            x, c_new = apply_block_chunk(
+                params["tail"][f"t{j}"], x, cache["tail"][f"t{j}"], positions,
+                cfg, bt, qcfg=qcfg, comp=cj, q_block=q_block,
+                kv_block=kv_block)
+            new_cache["tail"][f"t{j}"] = c_new
+
+        x = T.apply_norm(params["final_norm"], x, cfg)
+        logits = self._unembed(params, x, shard_logits)
+        return logits, new_cache
+
+    # ---------------------------------------------------- cache row shuffles
+
+    def gather_cache_rows(self, cache: dict, rows: jax.Array) -> dict:
+        """Extract rows (int32 (Bc,)) of a decode cache as a smaller cache.
+
+        `groups` leaves carry a leading layer-stack axis (batch is axis 1);
+        `tail` and `pos` leaves have batch leading.
+        """
+        return {
+            "groups": jax.tree.map(lambda a: jnp.take(a, rows, axis=1),
+                                   cache["groups"]),
+            "tail": jax.tree.map(lambda a: jnp.take(a, rows, axis=0),
+                                 cache["tail"]),
+            "pos": jnp.take(cache["pos"], rows, axis=0),
+        }
+
+    def scatter_cache_rows(self, cache: dict, rows: jax.Array,
+                           row_cache: dict, active: jax.Array) -> dict:
+        """Write `row_cache` (batch Bc) back into `cache` at `rows`.
+
+        `active` (Bc,) bool masks padding rows; active entries of `rows`
+        must be distinct. Inactive/unlisted rows keep their old state.
+        """
+        b = cache["pos"].shape[0]
+        sel = (jnp.arange(b, dtype=jnp.int32)[:, None] == rows[None, :]) \
+            & active.astype(bool)[None, :]
+        hit = jnp.any(sel, axis=1)                       # (B,)
+        src = jnp.argmax(sel, axis=1).astype(jnp.int32)  # (B,) source column
+
+        def put(axis):
+            def f(old, new):
+                gathered = jnp.take(new, src, axis=axis)
+                shape = [1] * old.ndim
+                shape[axis] = b
+                return jnp.where(hit.reshape(shape), gathered, old)
+            return f
+
+        return {
+            "groups": jax.tree.map(put(1), cache["groups"],
+                                   row_cache["groups"]),
+            "tail": jax.tree.map(put(0), cache["tail"], row_cache["tail"]),
+            "pos": put(0)(cache["pos"], row_cache["pos"]),
+        }
 
     def _state_to_cache(self, st, bt, max_len, dtype, enc_out, block_params,
                         qcfg, comp):

@@ -97,18 +97,26 @@ def _project(params, x, qcfg: QuantConfig, comp, name: str, key: str,
 
 
 def _block_mask(q_pos, k_pos, dims: AttnDims):
-    """(Sq, Sk) boolean mask for one (q-block, k-block) pair."""
-    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    """Boolean mask for one (q-block, k-block) pair.
+
+    Positions are ``(Sq,)``/``(Sk,)`` (shared across the batch) or
+    ``(B, Sq)``/``(B, Sk)`` (per-sequence, e.g. chunked prefill rows at
+    different offsets); the mask is ``(Sq, Sk)`` or ``(B, Sq, Sk)``.
+    """
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
     if dims.causal:
-        m &= k_pos[None, :] <= q_pos[:, None]
+        m &= kp <= qp
     if dims.window > 0:
-        m &= k_pos[None, :] > q_pos[:, None] - dims.window
+        m &= kp > qp - dims.window
     return m
 
 
 def blocked_attention(
     q: jax.Array, k: jax.Array, v: jax.Array, dims: AttnDims, *,
     q_offset: int = 0, q_block: int = 512, kv_block: int = 512,
+    q_positions: Optional[jax.Array] = None,
     kv_positions: Optional[jax.Array] = None,
     use_flash: bool = False,
 ) -> jax.Array:
@@ -117,6 +125,11 @@ def blocked_attention(
     GQA handled by reshaping queries to (B, S, Hkv, G, D). Memory per step is
     one (B, q_block, Hkv, G, kv_block) score tile. Works for any Sq/Sk that
     are multiples of the block sizes (callers pad).
+
+    ``q_positions``/``kv_positions`` may be per-sequence (``(B, S)``), which
+    is what lets chunked-prefill rows sit at independent offsets in one
+    fixed-shape call; fully masked key blocks contribute exactly zero to the
+    online softmax, so adding padded/invalid keys never changes the result.
     """
     b, sq, hq, hd = q.shape
     sk, hkv = k.shape[1], k.shape[2]
@@ -126,9 +139,14 @@ def blocked_attention(
 
     qg = q.reshape(b, sq, hkv, g, hd)
     nq, nk = sq // q_block, sk // kv_block
-    q_positions = q_offset + jnp.arange(sq, dtype=jnp.int32)
+    if q_positions is None:
+        q_positions = q_offset + jnp.arange(sq, dtype=jnp.int32)
     if kv_positions is None:
         kv_positions = jnp.arange(sk, dtype=jnp.int32)
+    batched_pos = q_positions.ndim > 1 or kv_positions.ndim > 1
+    if use_flash and batched_pos:
+        raise ValueError("flash attention does not support per-sequence "
+                         "positions; use the blocked path")
 
     if use_flash and dims.softcap == 0:
         # FlashAttention-style custom VJP: O(S) residuals instead of the
@@ -141,19 +159,25 @@ def blocked_attention(
 
     def q_step(_, qi):
         q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * q_block, q_block, axis=1)
-        qp = jax.lax.dynamic_slice_in_dim(q_positions, qi * q_block, q_block)
+        qp = jax.lax.dynamic_slice_in_dim(q_positions, qi * q_block, q_block,
+                                          axis=-1)
 
         def kv_step(carry, ki):
             m_run, l_run, acc = carry
             k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kv_block, kv_block, axis=1)
             v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kv_block, kv_block, axis=1)
-            kp = jax.lax.dynamic_slice_in_dim(kv_positions, ki * kv_block, kv_block)
+            kp = jax.lax.dynamic_slice_in_dim(kv_positions, ki * kv_block,
+                                              kv_block, axis=-1)
             s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk).astype(jnp.float32)
             s = s * scale
             if dims.softcap > 0:
                 s = dims.softcap * jnp.tanh(s / dims.softcap)
-            mask = _block_mask(qp, kp, dims)  # (qblk, kblk)
-            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mask = _block_mask(qp, kp, dims)  # (qblk, kblk) or (b, qblk, kblk)
+            if mask.ndim == 2:
+                mask = mask[None, None, None]
+            else:
+                mask = mask[:, None, None]
+            s = jnp.where(mask, s, NEG_INF)
             m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
             alpha = jnp.exp(m_run - m_new)
             p = jnp.exp(s - m_new[..., None])
@@ -186,7 +210,9 @@ def decode_attention(
 
     q: (B, 1, Hq, D); k_cache/v_cache: (B, Smax, Hkv, D); cur_pos: () or (B,)
     is the position of the new token. Cache entries at slot i hold position
-    ``cache_positions[i]`` (default: identity, i.e. contiguous cache).
+    ``cache_positions[..., i]`` (default: identity, i.e. contiguous cache);
+    ``cache_positions`` may be per-sequence (B, Smax) when rows sit at
+    independent offsets (slot-level continuous batching).
     """
     b, _, hq, hd = q.shape
     smax, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -197,12 +223,14 @@ def decode_attention(
     if dims.softcap > 0:
         s = dims.softcap * jnp.tanh(s / dims.softcap)
     pos = cache_positions if cache_positions is not None else jnp.arange(smax)
+    if pos.ndim == 1:
+        pos = pos[None, :]                    # (1, Smax) -> broadcast over B
     cur = jnp.asarray(cur_pos)
     cur = cur[..., None] if cur.ndim else cur
     # slots that were never written carry negative positions -> invalid
-    valid = (pos[None, :] <= cur) & (pos[None, :] >= 0)  # (B or 1, Smax)
+    valid = (pos <= cur) & (pos >= 0)         # (B or 1, Smax)
     if dims.window > 0:
-        valid &= pos[None, :] > cur - dims.window
+        valid &= pos > cur - dims.window
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
@@ -289,7 +317,7 @@ def apply_attention_decode(
     params,
     x: jax.Array,              # (B, 1, d_model)
     cache: dict,               # {"k": (B, Smax, Hkv, D), "v": ...}
-    pos: jax.Array,            # () int32 current position
+    pos: jax.Array,            # () or (B,) int32 current position(s)
     dims: AttnDims,
     *,
     qcfg: QuantConfig = QuantConfig.off(),
@@ -297,9 +325,15 @@ def apply_attention_decode(
     name: str = "attn",
     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
 ) -> Tuple[jax.Array, dict]:
-    """One decode step; returns (output (B, 1, d), updated cache)."""
+    """One decode step; returns (output (B, 1, d), updated cache).
+
+    ``pos`` may be per-sequence (B,): each row writes its own ring slot and
+    masks against its own position, which is what slot-level continuous
+    batching needs when rows of one batch sit at different depths.
+    """
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos_b[:, None]  # (B, 1)
     q = _project(params, x, qcfg, comp, name, "wq", "bq")
 
     if cross_kv is not None:
@@ -316,18 +350,99 @@ def apply_attention_decode(
         k_new = apply_rope(k_new, positions, dims.rope_theta)
 
     smax = cache["k"].shape[1]
-    # ring-buffer write for windowed layers, linear write otherwise
-    slot = jnp.mod(pos, smax)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    idx = jnp.arange(smax, dtype=jnp.int32)
+    # ring-buffer write for windowed layers, linear write otherwise; a pure
+    # select (not dynamic_update_slice) so each row can hit its own slot.
+    write = idx[None, :] == jnp.mod(pos_b, smax)[:, None]  # (B, Smax)
+    k_cache = jnp.where(write[..., None, None],
+                        k_new.astype(cache["k"].dtype), cache["k"])
+    v_cache = jnp.where(write[..., None, None],
+                        v_new.astype(cache["v"].dtype), cache["v"])
     # slot i holds the largest position congruent to i (mod smax) that is
     # <= pos; slots never written yet resolve to negative positions, which
     # the validity mask in decode_attention rejects.
-    idx = jnp.arange(smax, dtype=jnp.int32)
-    cache_positions = idx + ((pos - idx) // smax) * smax
-    out = decode_attention(q, k_cache, v_cache, dims, cur_pos=pos,
+    cache_positions = idx[None, :] + (
+        (pos_b[:, None] - idx[None, :]) // smax) * smax  # (B, Smax)
+    out = decode_attention(q, k_cache, v_cache, dims, cur_pos=pos_b,
                            cache_positions=cache_positions)
+    out = _project(params, out, qcfg, comp, name, "wo")
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def apply_attention_chunk(
+    params,
+    x: jax.Array,              # (B, C, d_model) one prefill chunk per row
+    cache: dict,               # {"k": (B, Smax, Hkv, D), "v": ...}
+    positions: jax.Array,      # (B, C) int32 absolute positions of the chunk
+    dims: AttnDims,
+    *,
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp=None,
+    name: str = "attn",
+    q_block: int = 8,
+    kv_block: int = 8,
+) -> Tuple[jax.Array, dict]:
+    """Chunked-prefill attention step; returns (output (B, C, d), new cache).
+
+    Writes the chunk's post-RoPE K/V into each row's cache, then runs blocked
+    online-softmax attention over the *whole* cache with per-row positions.
+    Slots the row has not reached yet are masked via the same
+    largest-position-congruent-to-slot formula as decode, so stale entries
+    from a previous occupant of the slot are invisible. Masked key blocks
+    contribute exactly zero, so with a float32 cache the chunked pass is
+    bit-identical to one full prefill over the same tokens.
+
+    Ring caches (windowed layers with Smax < total length) are not supported:
+    a chunk write could evict keys still inside an earlier query's window.
+    Callers gate on ``Smax >= max positions`` before using the chunk path.
+    """
+    b, c, _ = x.shape
+    smax = cache["k"].shape[1]
+    positions = positions.astype(jnp.int32)
+    q = _project(params, x, qcfg, comp, name, "wq", "bq")
+    k_new = _project(params, x, qcfg, comp, name, "wk", "bk")
+    v_new = _project(params, x, qcfg, comp, name, "wv", "bv")
+    if dims.rope_theta > 0:
+        q = apply_rope(q, positions, dims.rope_theta)
+        k_new = apply_rope(k_new, positions, dims.rope_theta)
+
+    # Scatter the chunk into the cache, last-write-wins per slot (a chunk
+    # never wraps — see the ring note above — so "last" is just in-order).
+    idx = jnp.arange(smax, dtype=jnp.int32)
+    hits = jnp.mod(positions, smax)[:, :, None] == idx[None, None, :]  # (B,C,S)
+    order = jnp.where(hits, jnp.arange(c, dtype=jnp.int32)[None, :, None], -1)
+    src = jnp.max(order, axis=1)          # (B, Smax); -1 = slot untouched
+    written = (src >= 0)[..., None, None]
+
+    def scatter(old, new):
+        gathered = jnp.take_along_axis(
+            new, jnp.maximum(src, 0)[..., None, None], axis=1)
+        return jnp.where(written, gathered.astype(old.dtype), old)
+
+    k_cache = scatter(cache["k"], k_new)
+    v_cache = scatter(cache["v"], v_new)
+
+    cur = positions[:, -1]                # (B,) last position in the chunk
+    cache_positions = idx[None, :] + ((cur[:, None] - idx[None, :]) // smax) * smax
+    kv_positions = jnp.where(cache_positions >= 0, cache_positions,
+                             jnp.int32(1 << 30))  # unwritten -> fails causal
+
+    pad_q = (-c) % q_block
+    pad_k = (-smax) % kv_block
+    q_pos = positions
+    kf, vf = k_cache.astype(q.dtype), v_cache.astype(q.dtype)
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), mode="edge")
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad_k)),
+                               constant_values=jnp.int32(1 << 30))
+    out = blocked_attention(q, kf, vf, dims, q_block=q_block,
+                            kv_block=kv_block, q_positions=q_pos,
+                            kv_positions=kv_positions)
+    if pad_q:
+        out = out[:, :c]
     out = _project(params, out, qcfg, comp, name, "wo")
     return out, {"k": k_cache, "v": v_cache}

@@ -228,7 +228,7 @@ def apply_block_decode(
     params,
     x: jax.Array,            # (B, 1, d)
     cache: dict,
-    pos: jax.Array,          # () int32
+    pos: jax.Array,          # () or (B,) int32
     cfg: ArchConfig,
     block_type: str,
     *,
@@ -264,6 +264,68 @@ def apply_block_decode(
             params["xattn"], h, {}, pos, cfg.enc_attn_dims(), qcfg=qcfg,
             comp=comp, name="xattn", cross_kv=(cache["xk"], cache["xv"]))
         x = x + xa
+
+    if block_type == "ssm":
+        return x, new_cache
+
+    h = apply_norm(params["ln2"], x, cfg)
+    if cfg.is_moe and block_type in ("attn", "local"):
+        y, _ = MOE.apply_moe(params["moe"], h, cfg.moe_dims(), qcfg=qcfg,
+                             comp=comp, name="moe")
+    else:
+        y = apply_ffn(params["mlp"], h, cfg, qcfg=qcfg, comp=comp, name="mlp")
+    return x + y, new_cache
+
+
+def apply_block_chunk(
+    params,
+    x: jax.Array,            # (B, C, d) one prefill chunk per row
+    cache: dict,
+    positions: jax.Array,    # (B, C) int32 absolute positions
+    cfg: ArchConfig,
+    block_type: str,
+    *,
+    qcfg: QuantConfig = QuantConfig.off(),
+    comp=None,
+    q_block: int = 8,
+    kv_block: int = 8,
+) -> Tuple[jax.Array, dict]:
+    """One chunked-prefill step through a block; returns (x, updated cache).
+
+    Attention blocks scatter the chunk's K/V into the row's cache and attend
+    over the whole cache with per-row positions (see
+    `attention.apply_attention_chunk`). Recurrent mixers (rglru/ssm) have no
+    mid-sequence state injection, so they only support a single chunk that
+    covers the whole prompt from position 0 — the engine enforces this
+    statically by giving recurrent archs chunk buckets equal to the prompt
+    buckets. Cross-attention (encoder/decoder) has no chunk path.
+    """
+    if "xattn" in params:
+        raise ValueError("chunked prefill does not support cross-attention "
+                         "blocks; use the oneshot/wave path")
+    h = apply_norm(params["ln1"], x, cfg)
+    new_cache = dict(cache)
+    if block_type in ("attn", "local"):
+        dims = cfg.attn_dims(block_type == "local")
+        kv_cache = {"k": cache["k"], "v": cache["v"]}
+        mix, kv_new = A.apply_attention_chunk(
+            params["attn"], h, kv_cache, positions, dims, qcfg=qcfg,
+            comp=comp, name="attn", q_block=q_block, kv_block=kv_block)
+        new_cache.update(kv_new)
+    elif block_type == "rglru":
+        # chunk == whole prompt: the recurrence runs from its zero state
+        mix, state = RG.apply_rglru(params["rglru"], h, cfg.rglru_dims(),
+                                    qcfg=qcfg, comp=comp, name="rglru",
+                                    return_state=True)
+        new_cache = state
+    elif block_type == "ssm":
+        mix, state = SSM.apply_ssm(params["ssm"], h, cfg.ssm_dims(),
+                                   qcfg=qcfg, comp=comp, name="ssm",
+                                   return_state=True)
+        new_cache = state
+    else:
+        raise ValueError(block_type)
+    x = x + mix
 
     if block_type == "ssm":
         return x, new_cache

@@ -81,7 +81,7 @@ class ServeStageConfig:
     over a deterministic mixed-length trace.
     """
 
-    mode: str = "engine"         # "engine" | "oneshot" (lm)
+    mode: str = "engine"         # "engine" | "wave" | "oneshot" (lm)
     compress_k: int = 0          # lm: uniform k-value codebook restriction
     requests: int = 4
     prompt_len: int = 32

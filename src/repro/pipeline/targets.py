@@ -403,8 +403,11 @@ class LMTarget:
                                  s.mixed, stride=s.mixed_stride)
         p_bucket = max(sh[0] for sh in shapes)
         n_bucket = max(sh[1] for sh in shapes)
+        # dedupe and sort: EngineConfig rejects duplicate buckets, and a
+        # tiny p_bucket makes the half-size bucket collide with it
+        p_buckets = tuple(sorted({max(p_bucket // 2, 2), p_bucket}))
         ecfg = EngineConfig(max_batch=s.max_batch,
-                            prompt_buckets=(max(p_bucket // 2, 2), p_bucket),
+                            prompt_buckets=p_buckets,
                             new_token_buckets=(n_bucket,))
         prompts = [
             jax.random.randint(jax.random.PRNGKey(s.prompt_seed + i),

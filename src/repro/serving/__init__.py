@@ -5,9 +5,15 @@ from repro.serving.bucketing import (  # noqa: F401
     EngineConfig,
     bucket_for,
     bucket_up,
+    chunk_plan,
     pad_prompts,
 )
-from repro.serving.cache import CompiledStep, ServeCompileCache  # noqa: F401
+from repro.serving.cache import (  # noqa: F401
+    ChunkStep,
+    CompiledStep,
+    GroupStep,
+    ServeCompileCache,
+)
 from repro.serving.engine import (  # noqa: F401
     Request,
     RequestResult,

@@ -16,7 +16,9 @@ the unpadded `repro.launch.serve.generate` path exactly (tested).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+import functools
+import math
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,16 +41,102 @@ class BucketSpec:
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Static engine knobs (hashable; part of no compile key — buckets are)."""
+    """Static engine knobs (hashable; part of no compile key — buckets are).
 
-    max_batch: int = 8                 # wave width in engine mode
+    Validated in ``__post_init__``: bucket tuples must be non-empty tuples of
+    distinct positive ints and the scalar knobs must be >= 1, so a bad config
+    fails at construction instead of as a confusing `bucket_up`/compile error
+    mid-serve.
+    """
+
+    max_batch: int = 8                 # slot-group width (wave width in wave mode)
     prompt_buckets: Tuple[int, ...] = (16, 32, 64)
     new_token_buckets: Tuple[int, ...] = (16, 32)
-    max_waves: int = 2                 # in-flight decode waves
+    max_waves: int = 2                 # in-flight slot groups / decode waves
     pad_token: int = 0
     q_block: int = 8                   # prefill attention tiling (CPU-sized)
     kv_block: int = 8
     cache_dtype: str = "float32"
+    # chunked prefill: sizes a padded prompt bucket is split into (None ->
+    # one size, the gcd of the prompt buckets) and how many rows one chunk
+    # executable carries (0 -> max(1, max_batch // 2))
+    chunk_buckets: Optional[Tuple[int, ...]] = None
+    chunk_rows: int = 0
+
+    def __post_init__(self):
+        for name in ("max_batch", "max_waves", "q_block", "kv_block"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                raise ValueError(f"EngineConfig.{name} must be an int >= 1, "
+                                 f"got {v!r}")
+        if not isinstance(self.chunk_rows, int) \
+                or isinstance(self.chunk_rows, bool) or self.chunk_rows < 0:
+            raise ValueError(f"EngineConfig.chunk_rows must be an int >= 0 "
+                             f"(0 = auto), got {self.chunk_rows!r}")
+        _check_bucket_tuple("prompt_buckets", self.prompt_buckets)
+        _check_bucket_tuple("new_token_buckets", self.new_token_buckets)
+        if self.chunk_buckets is not None:
+            _check_bucket_tuple("chunk_buckets", self.chunk_buckets)
+            for p in self.prompt_buckets:
+                chunk_plan(p, self.chunk_buckets)   # raises if no exact cover
+
+    @property
+    def resolved_chunk_buckets(self) -> Tuple[int, ...]:
+        if self.chunk_buckets is not None:
+            return tuple(sorted(self.chunk_buckets))
+        return (functools.reduce(math.gcd, self.prompt_buckets),)
+
+    @property
+    def resolved_chunk_rows(self) -> int:
+        rows = self.chunk_rows or max(1, self.max_batch // 2)
+        return min(rows, self.max_batch)
+
+    @property
+    def chunk_row_buckets(self) -> Tuple[int, ...]:
+        """Row widths the chunk executables are compiled at: powers of two
+        up to ``resolved_chunk_rows`` (plus the cap itself). Refilling a
+        single freed slot then costs a 1-row chunk, not a full-width one."""
+        cap = self.resolved_chunk_rows
+        out = []
+        r = 1
+        while r < cap:
+            out.append(r)
+            r *= 2
+        out.append(cap)
+        return tuple(out)
+
+    @property
+    def group_total_len(self) -> int:
+        """Cache length of one slot group: any admissible request fits."""
+        return max(self.prompt_buckets) + max(self.new_token_buckets)
+
+
+def _check_bucket_tuple(name: str, t) -> None:
+    if not isinstance(t, tuple) or not t:
+        raise ValueError(f"EngineConfig.{name} must be a non-empty tuple, "
+                         f"got {t!r}")
+    for b in t:
+        if not isinstance(b, int) or isinstance(b, bool) or b < 1:
+            raise ValueError(f"EngineConfig.{name} entries must be ints >= 1, "
+                             f"got {t!r}")
+    if len(set(t)) != len(t):
+        raise ValueError(f"EngineConfig.{name} has duplicate buckets: {t!r}")
+
+
+def chunk_plan(prompt_len: int, chunks: Sequence[int]) -> Tuple[int, ...]:
+    """Greedy largest-first exact decomposition of a padded prompt bucket
+    into chunk sizes; raises when the sizes cannot cover it exactly."""
+    out = []
+    rem = int(prompt_len)
+    for c in sorted(chunks, reverse=True):
+        while rem >= c:
+            out.append(int(c))
+            rem -= c
+    if rem:
+        raise ValueError(f"chunk buckets {tuple(sorted(chunks))} cannot "
+                         f"exactly cover prompt bucket {prompt_len} "
+                         f"(greedy remainder {rem})")
+    return tuple(out)
 
 
 def bucket_up(n: int, buckets: Sequence[int]) -> int:

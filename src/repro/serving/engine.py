@@ -1,25 +1,38 @@
 """Continuous-batching serving engine over the compressed LM serving path.
 
-Requests enter a FIFO queue and are packed into *waves*: fixed-shape
-micro-batches padded to a `BucketSpec` (see `repro.serving.bucketing`), so
-jit compiles once per bucket and never per request. The scheduling loop
-interleaves admission (prefill of a new wave from the queue) with decode
-steps across all in-flight waves; a wave retires as soon as every request in
-it has its tokens, freeing capacity for the next admission. Requests with
-different ``new_tokens`` can share a wave — finished slots idle (their
-sampled tokens are discarded) until the longest request completes.
+``mode="engine"`` is slot-level continuous batching: requests enter a FIFO
+queue and are admitted one *slot* at a time into persistent fixed-shape slot
+groups (``max_batch`` rows x ``group_total_len`` cache positions, up to
+``max_waves`` groups). The moment a slot's request finishes mid-decode it is
+refilled from the queue head — no lockstep wave drain — and prompts are
+prefilled in fixed-size *chunks* (``EngineConfig.chunk_buckets``) that
+interleave with ongoing decode steps, so a long prompt never stalls the
+group. Per-sequence positions in the decode cache (`repro.models.lm`) let
+every row sit at its own depth; an ``active`` mask keeps empty/prefilling
+rows' state untouched during decode. Admission is strictly FIFO over free
+slots, so a deep-queue request can never starve the queue head.
 
-``mode="oneshot"`` is the single-shot fallback: the same code path restricted
-to batch-1 waves, one request at a time, sharing the bucket padding contract
-and the compile cache — so engine-vs-oneshot output parity is exact (greedy
-*and* seeded-temperature sampling happen host-side per request in both
-modes), and the benchmarked speedup isolates the batching/scheduling win.
+The AOT zero-recompile contract survives: the slot engine compiles one
+active-masked group decode plus one chunked-prefill executable per chunk
+size — a small set fixed by the config, independent of request shapes — and
+every executable rejects differently-shaped calls with a ``TypeError``
+(`repro.serving.cache`).
 
-Position bookkeeping: the decode cache keeps one scalar position for the
-whole wave, so all requests in a wave advance in lockstep from the padded
-prompt length. Slot-level refill of a retired request inside a live wave
-would need per-sequence positions in `repro.models.lm` — wave-level
-admission is the contract until then (see docs/serving.md).
+``mode="wave"`` is the previous wave-lockstep scheduler, kept as the
+measured baseline: fixed-shape waves padded to a `BucketSpec` that prefill
+once and decode in lockstep, early-finishing slots idling until the wave
+drains. ``mode="oneshot"`` is the single-shot fallback: the wave path
+restricted to batch-1, one request at a time. All three modes share the
+bucket padding contract and host-side sampling (greedy *and*
+seeded-temperature draws are a pure function of the request's seed), so
+cross-mode output parity holds token for token.
+
+Accounting prices the compute actually performed, not the compute requested:
+``executed_positions`` counts every padded/idle position pushed through the
+array (prefill rows x padded length, chunk rows x chunk, decode batch per
+step); `metrics.summarize` reports the gap to the per-request charge as
+``energy_eu_overhead`` and a ``slot_utilization`` ratio. Slot-level refill
+is the mechanism that drives that overhead toward zero.
 
 With ``compress_k > 0`` every eligible matmul is restricted to a symmetric
 k-value codebook (`repro.core.lm_compress.restrict_all_codebooks`) and both
@@ -46,6 +59,8 @@ from repro.serving.bucketing import (
     BucketSpec,
     EngineConfig,
     bucket_for,
+    bucket_up,
+    chunk_plan,
     pad_prompts,
 )
 from repro.serving.cache import ServeCompileCache
@@ -69,24 +84,32 @@ class RequestResult:
 
 
 class _Slot:
-    """One request's in-wave state."""
+    """One request's in-flight state (wave slot or slot-group row)."""
 
     def __init__(self, req: Request, stats: RequestStats):
         self.req = req
         self.stats = stats
         self.tokens: List[int] = []
         # the sampling stream is a pure function of the request's own seed
-        # (not of engine-local ids), so engine and oneshot draws agree;
-        # submit distinct seeds for independent streams across requests
+        # (not of engine-local ids), so all modes' draws agree; submit
+        # distinct seeds for independent streams across requests
         self.rng = np.random.default_rng(req.seed)
+        # chunked-prefill state (slot mode only)
+        self.chunks: List[np.ndarray] = []
+        self.next_chunk = 0
+        self.start = 0                # padded positions already prefilled
 
     @property
     def done(self) -> bool:
         return len(self.tokens) >= self.req.new_tokens
 
+    @property
+    def prefilling(self) -> bool:
+        return self.next_chunk < len(self.chunks)
+
 
 class _Wave:
-    """A fixed-shape micro-batch mid-decode."""
+    """A fixed-shape micro-batch mid-decode (wave/oneshot modes)."""
 
     def __init__(self, bucket: BucketSpec, slots: List[_Slot], fns, cache,
                  tok):
@@ -101,14 +124,29 @@ class _Wave:
         return all(s.done for s in self.slots)
 
 
+class _SlotGroup:
+    """A persistent fixed-shape row group for slot-level batching."""
+
+    def __init__(self, step, cache):
+        self.step = step          # cache.GroupStep
+        self.cache = cache
+        self.slots: List[Optional[_Slot]] = [None] * step.batch
+        self.tok = np.zeros((step.batch, 1), np.int32)
+
+    @property
+    def busy(self) -> bool:
+        return any(s is not None for s in self.slots)
+
+
 class ServingEngine:
     """Queue + micro-batcher + compile cache over one LM and its params."""
 
     def __init__(self, model, params, *, mode: str = "engine",
                  config: EngineConfig = EngineConfig(), compress_k: int = 0,
                  comp=None, arch: Optional[str] = None, mesh=None):
-        if mode not in ("engine", "oneshot"):
-            raise ValueError(f"mode must be 'engine' or 'oneshot', got {mode!r}")
+        if mode not in ("engine", "wave", "oneshot"):
+            raise ValueError(
+                f"mode must be 'engine', 'wave' or 'oneshot', got {mode!r}")
         self.model = model
         self.config = config
         self.mode = mode
@@ -139,18 +177,65 @@ class ServingEngine:
             params = jax.device_put(params, self._replicated)
         self.params = params
 
+        if mode == "engine":
+            self._check_chunkable()
+
         self.cache = ServeCompileCache(
             model, arch=self.arch, compress_k=self.compress_k, qcfg=self.qcfg,
-            comp=self.comp, config=config, place_prompts=self._place)
+            comp=self.comp, config=config, place_prompts=self._place,
+            place_replicated=self._place_rep)
 
         self._queue: collections.deque[Request] = collections.deque()
         self._waves: List[_Wave] = []
+        self._groups: List[_SlotGroup] = []
         self._next_rid = 0
         self._stats_pending: Dict[int, RequestStats] = {}
         self._completed: Dict[int, RequestResult] = {}
         self._e_per_token: Optional[float] = None
+        self.executed_positions = 0
         self.last_wall_s = 0.0
         self.total_wall_s = 0.0
+
+    # --------------------------------------------------------- chunk gating
+
+    def _check_chunkable(self) -> None:
+        """Slot mode needs the chunk path; reject models it cannot serve."""
+        cfg, ecfg = self.model.cfg, self.config
+        if cfg.encoder_decoder:
+            raise ValueError("slot-level batching has no chunk path for "
+                             "encoder-decoder models; use mode='wave' or "
+                             "'oneshot'")
+        for bt in set(cfg.pattern):
+            if bt in ("attn", "local"):
+                window = cfg.attn_dims(bt == "local").window
+                if 0 < window < ecfg.group_total_len:
+                    raise ValueError(
+                        f"slot-level batching needs the attention window "
+                        f"({window}) to cover the group cache "
+                        f"({ecfg.group_total_len}): chunked prefill cannot "
+                        f"write through a ring buffer; use mode='wave'")
+        recurrent = any(bt in ("rglru", "ssm") for bt in cfg.pattern)
+        if recurrent and ecfg.chunk_buckets is not None:
+            for p in ecfg.prompt_buckets:
+                if chunk_plan(p, ecfg.chunk_buckets) != (p,):
+                    raise ValueError(
+                        "recurrent mixers (rglru/ssm) have no mid-sequence "
+                        "state injection: chunk buckets must give every "
+                        "prompt bucket a single-chunk plan")
+        self._single_chunk_only = recurrent and self.config.chunk_buckets is None
+
+    def _chunk_plan(self, padded_prompt: int) -> tuple:
+        if getattr(self, "_single_chunk_only", False):
+            return (padded_prompt,)
+        return chunk_plan(padded_prompt, self.config.resolved_chunk_buckets)
+
+    def _chunk_sizes(self) -> set:
+        """The fixed executable set: every chunk size any prompt bucket
+        plan uses."""
+        sizes = set()
+        for p in self.config.prompt_buckets:
+            sizes.update(self._chunk_plan(p))
+        return sizes
 
     # ------------------------------------------------------------ placement
 
@@ -166,6 +251,16 @@ class ServingEngine:
         if x.ndim >= 1 and x.shape[0] % n == 0:
             spec = PartitionSpec("requests", *([None] * (x.ndim - 1)))
             return jax.device_put(x, NamedSharding(self.mesh, spec))
+        return jax.device_put(x, self._replicated)
+
+    def _place_rep(self, x):
+        """Replicated placement for slot-group state: gather/scatter row
+        shuffles make 'requests'-sharding the group cache unprofitable, so
+        under a mesh the slot path runs replicated (wave/oneshot keep the
+        sharded speedup)."""
+        x = jnp.asarray(x)
+        if self.mesh is None:
+            return x
         return jax.device_put(x, self._replicated)
 
     # ------------------------------------------------------------ admission
@@ -198,17 +293,26 @@ class ServingEngine:
         return rid
 
     def warmup(self, shapes: Sequence[tuple]) -> dict:
-        """Precompile the buckets for (prompt_len, new_tokens) shapes and the
-        per-token energy model; returns cache stats. After warmup, serving
-        those shapes adds zero compiles and no lazy one-time costs."""
+        """Precompile every executable serving the (prompt_len, new_tokens)
+        shapes needs, plus the per-token energy model; returns cache stats.
+        After warmup, serving those shapes adds zero compiles and no lazy
+        one-time costs. In slot mode the executable set (group decode + one
+        step per chunk size) is fixed by the config, so warmup compiles it
+        all regardless of the particular shapes."""
         for plen, ntok in shapes:
             bucket = bucket_for(plen, ntok, self.config, self.wave_width)
-            self.cache.fns(bucket, self.params)
+            if self.mode != "engine":
+                self.cache.fns(bucket, self.params)
+        if self.mode == "engine":
+            self.cache.group_fns(self.params)
+            for size in sorted(self._chunk_sizes()):
+                for rows in self.config.chunk_row_buckets:
+                    self.cache.chunk_fns(size, rows, self.params)
         _ = self.per_token_energy_eu
         return self.cache.stats()
 
     def _sample_row(self, row: np.ndarray, slot: Optional[_Slot]) -> int:
-        """Host-side sampling — shared by both modes, so parity is exact."""
+        """Host-side sampling — shared by all modes, so parity is exact."""
         if slot is None or slot.req.temperature <= 0.0:
             return int(np.argmax(row))
         z = row / slot.req.temperature
@@ -218,7 +322,11 @@ class ServingEngine:
         return int(slot.rng.choice(row.shape[0], p=p))
 
     def _admit(self) -> bool:
-        """Form one wave from the queue head's bucket; False if queue empty."""
+        """Form one wave from the queue head's bucket; False if queue empty.
+
+        Wave/oneshot only: scans the whole queue for bucket-mates of the
+        head request (the head itself is always admitted, so the scan cannot
+        starve it)."""
         if not self._queue:
             return False
         width = self.wave_width
@@ -242,6 +350,7 @@ class ServingEngine:
                               self.config.pad_token)
         t_admit = time.perf_counter()
         logits, kv = fns.prefill(self.params, self._place(prompts))
+        self.executed_positions += bucket.batch * bucket.prompt_len
         vocab = self.model.cfg.vocab
         last = np.asarray(logits[:, -1, :vocab])
 
@@ -266,10 +375,11 @@ class ServingEngine:
             self._waves.append(wave)
         return True
 
-    # --------------------------------------------------------------- decode
+    # ------------------------------------------------- decode (wave modes)
 
     def _step(self, wave: _Wave) -> None:
         logits, wave.cache = wave.fns.decode(self.params, wave.cache, wave.tok)
+        self.executed_positions += wave.bucket.batch
         vocab = self.model.cfg.vocab
         rows = np.asarray(logits[:, 0, :vocab])
         tok = np.zeros((wave.bucket.batch, 1), np.int32)
@@ -289,27 +399,160 @@ class ServingEngine:
         t = time.perf_counter()
         for slot in wave.slots:
             if slot.done and slot.req.rid not in self._completed:
-                if slot.stats.t_finish == 0.0:
+                if slot.stats.t_finish is None:
                     slot.stats.t_finish = t
-                slot.stats.energy_eu = (
-                    self.per_token_energy_eu
-                    * (slot.stats.prompt_len + slot.stats.new_tokens))
-                self._completed[slot.req.rid] = RequestResult(
-                    rid=slot.req.rid, tokens=slot.tokens, stats=slot.stats)
+                self._complete(slot)
         if wave.done and wave in self._waves:
             self._waves.remove(wave)
+
+    def _complete(self, slot: _Slot) -> None:
+        slot.stats.energy_eu = (
+            self.per_token_energy_eu
+            * (slot.stats.prompt_len + slot.stats.new_tokens))
+        self._completed[slot.req.rid] = RequestResult(
+            rid=slot.req.rid, tokens=slot.tokens, stats=slot.stats)
+
+    # ------------------------------------------------- scheduler (slot mode)
+
+    def _make_slot(self, req: Request) -> _Slot:
+        stats = self._stats_pending.pop(req.rid)
+        cfg = self.config
+        p = bucket_up(req.prompt.shape[0], cfg.prompt_buckets)
+        n = bucket_up(req.new_tokens, cfg.new_token_buckets)
+        stats.bucket = (1, p, p + n)    # slot-level: one row, own depths
+        stats.t_admitted = time.perf_counter()
+        slot = _Slot(req, stats)
+        padded = np.full((p,), cfg.pad_token, np.int32)
+        padded[:req.prompt.shape[0]] = req.prompt
+        off = 0
+        for size in self._chunk_plan(p):
+            slot.chunks.append(padded[off:off + size])
+            off += size
+        return slot
+
+    def _refill_slots(self) -> None:
+        """Strict-FIFO admission into free slots; grows the group list up to
+        ``max_waves`` groups when the queue still has depth."""
+        for g in self._groups:
+            for i in range(g.step.batch):
+                if not self._queue:
+                    return
+                if g.slots[i] is None:
+                    g.slots[i] = self._make_slot(self._queue.popleft())
+        while self._queue and len(self._groups) < self.max_inflight:
+            step = self.cache.group_fns(self.params)
+            g = _SlotGroup(step, step.make_cache())
+            self._groups.append(g)
+            for i in range(g.step.batch):
+                if not self._queue:
+                    break
+                g.slots[i] = self._make_slot(self._queue.popleft())
+
+    def _chunk_steps(self, g: _SlotGroup) -> bool:
+        """Advance every prefilling slot of the group by one chunk."""
+        pending = [i for i, s in enumerate(g.slots)
+                   if s is not None and s.prefilling]
+        if not pending:
+            return False
+        by_size: Dict[int, List[int]] = {}
+        for i in pending:
+            s = g.slots[i]
+            by_size.setdefault(len(s.chunks[s.next_chunk]), []).append(i)
+        cap = self.config.resolved_chunk_rows
+        for size, rows in sorted(by_size.items()):
+            for j0 in range(0, len(rows), cap):
+                batch = rows[j0:j0 + cap]
+                # narrowest compiled row width that fits this refill batch,
+                # so a single freed slot costs a 1-row chunk dispatch
+                width = bucket_up(len(batch), self.config.chunk_row_buckets)
+                self._chunk_call(g, self.cache.chunk_fns(size, width,
+                                                         self.params), batch)
+        return True
+
+    def _chunk_call(self, g: _SlotGroup, step, rows: List[int]) -> None:
+        size, n_rows = step.chunk, step.rows
+        toks = np.full((n_rows, size), self.config.pad_token, np.int32)
+        row_ids = np.zeros((n_rows,), np.int32)
+        start = np.zeros((n_rows,), np.int32)
+        active = np.zeros((n_rows,), bool)
+        for j, r in enumerate(rows):
+            s = g.slots[r]
+            toks[j] = s.chunks[s.next_chunk]
+            row_ids[j], start[j], active[j] = r, s.start, True
+        logits, g.cache = step.fn(
+            self.params, g.cache, self._place_rep(toks),
+            self._place_rep(row_ids), self._place_rep(start),
+            self._place_rep(active))
+        self.executed_positions += n_rows * size
+        finishing = [j for j, r in enumerate(rows)
+                     if g.slots[r].next_chunk + 1 == len(g.slots[r].chunks)]
+        last = None
+        if finishing:
+            vocab = self.model.cfg.vocab
+            last = np.asarray(logits[:, :vocab])
+        t = time.perf_counter()
+        for j, r in enumerate(rows):
+            s = g.slots[r]
+            s.next_chunk += 1
+            s.start += size
+            if not s.prefilling:
+                tok = self._sample_row(last[j], s)
+                s.tokens.append(tok)
+                s.stats.t_first_token = t
+                g.tok[r, 0] = tok
+                if s.done:
+                    s.stats.t_finish = t
+                    self._complete(s)
+                    g.slots[r] = None
+
+    def _decode_group(self, g: _SlotGroup) -> bool:
+        """One decode step over the group's rows that hold decoding slots."""
+        rows = [i for i, s in enumerate(g.slots)
+                if s is not None and not s.prefilling]
+        if not rows:
+            return False
+        act = np.zeros((g.step.batch,), bool)
+        act[rows] = True
+        logits, g.cache = g.step.decode(
+            self.params, g.cache, self._place_rep(g.tok),
+            self._place_rep(act))
+        self.executed_positions += g.step.batch
+        vocab = self.model.cfg.vocab
+        out = np.asarray(logits[:, 0, :vocab])
+        t = time.perf_counter()
+        for r in rows:
+            s = g.slots[r]
+            tok = self._sample_row(out[r], s)
+            s.tokens.append(tok)
+            g.tok[r, 0] = tok
+            if s.done:
+                s.stats.t_finish = t
+                self._complete(s)
+                g.slots[r] = None
+        return True
+
+    def _run_slots(self) -> None:
+        while self._queue or any(g.busy for g in self._groups):
+            self._refill_slots()
+            for g in self._groups:
+                self._chunk_steps(g)
+            for g in self._groups:
+                self._decode_group(g)
 
     # ----------------------------------------------------------------- run
 
     def run(self) -> Dict[int, RequestResult]:
         """Drain the queue: admit + decode until every request completes."""
         t0 = time.perf_counter()
-        while self._queue or self._waves:
-            while self._queue and len(self._waves) < self.max_inflight:
-                if not self._admit():
-                    break
-            for wave in list(self._waves):
-                self._step(wave)
+        if self.mode == "engine":
+            self._run_slots()
+        else:
+            while self._queue or self._waves:
+                while self._queue and len(self._waves) < self.max_inflight:
+                    if not self._admit():
+                        break
+                for wave in list(self._waves):
+                    self._step(wave)
         self.last_wall_s = time.perf_counter() - t0
         self.total_wall_s += self.last_wall_s
         return dict(self._completed)
@@ -320,6 +563,10 @@ class ServingEngine:
         run it to completion."""
         if isinstance(new_tokens, int):
             new_tokens = [new_tokens] * len(prompts)
+        if len(new_tokens) != len(prompts):
+            raise ValueError(
+                f"got {len(prompts)} prompts but {len(new_tokens)} "
+                f"new_tokens entries; zip would silently drop requests")
         rids = [self.submit(p, n) for p, n in zip(prompts, new_tokens)]
         out = self.run()
         return {rid: out[rid] for rid in rids}
@@ -341,4 +588,6 @@ class ServingEngine:
         """Aggregate over every request completed so far (throughput uses the
         cumulative wall time of all `run()` calls)."""
         stats = [r.stats for r in self._completed.values()]
-        return summarize(stats, self.total_wall_s, self.cache.stats())
+        return summarize(stats, self.total_wall_s, self.cache.stats(),
+                         executed_positions=self.executed_positions,
+                         per_token_energy_eu=self.per_token_energy_eu)

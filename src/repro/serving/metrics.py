@@ -14,6 +14,14 @@ activation statistics exist at serve time). A request is charged
 ``per_token_energy * (prompt_len + new_tokens)`` — the token positions it
 actually pushed through the array. Energies are tile-granular (n is rounded
 up to one 64-column tile), consistent with the training-side model.
+
+The per-request charge deliberately excludes padded/idle work. The engine
+tracks the positions it *actually executed* (padding rows, idle lockstep
+slots, chunk padding) separately; `summarize` exposes the gap as
+``energy_eu_overhead`` — the energy spent on positions no request was
+charged for — plus a ``slot_utilization`` ratio (charged / executed
+positions). Slot-level continuous batching exists to push that ratio
+toward 1.0.
 """
 
 from __future__ import annotations
@@ -33,18 +41,26 @@ class RequestStats:
     prompt_len: int
     new_tokens: int
     bucket: tuple            # BucketSpec.key()
-    t_submit: float = 0.0
-    t_admitted: float = 0.0  # wave prefill started
-    t_first_token: float = 0.0
-    t_finish: float = 0.0
+    # lifecycle timestamps stay None until the event happens — 0.0 is a
+    # valid perf_counter reading, not a usable "unset" sentinel
+    t_submit: Optional[float] = None
+    t_admitted: Optional[float] = None   # prefill of this request started
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
     energy_eu: float = 0.0
 
     @property
     def latency_s(self) -> float:
+        if self.t_finish is None or self.t_submit is None:
+            raise ValueError(f"request {self.rid} has not finished; "
+                             f"latency_s is undefined")
         return self.t_finish - self.t_submit
 
     @property
     def ttft_s(self) -> float:
+        if self.t_first_token is None or self.t_submit is None:
+            raise ValueError(f"request {self.rid} has no first token yet; "
+                             f"ttft_s is undefined")
         return self.t_first_token - self.t_submit
 
 
@@ -63,8 +79,16 @@ def percentile(values: List[float], q: float) -> float:
 
 
 def summarize(stats: List[RequestStats], wall_s: float,
-              cache_stats: Optional[dict] = None) -> Dict:
-    """Aggregate report over a set of completed requests."""
+              cache_stats: Optional[dict] = None, *,
+              executed_positions: Optional[int] = None,
+              per_token_energy_eu: Optional[float] = None) -> Dict:
+    """Aggregate report over a set of completed requests.
+
+    ``executed_positions`` (with ``per_token_energy_eu``) adds the
+    padded-work accounting: ``slot_utilization`` = charged / executed
+    positions and ``energy_eu_overhead`` = energy of the executed positions
+    no request was charged for.
+    """
     lat = [s.latency_s for s in stats]
     ttft = [s.ttft_s for s in stats]
     new_tokens = sum(s.new_tokens for s in stats)
@@ -80,10 +104,18 @@ def summarize(stats: List[RequestStats], wall_s: float,
         "latency_p99_s": percentile(lat, 99),
         "ttft_p50_s": percentile(ttft, 50),
         "ttft_p90_s": percentile(ttft, 90),
+        "ttft_p99_s": percentile(ttft, 99),
         "energy_eu_total": sum(s.energy_eu for s in stats),
         "energy_eu_per_token": (sum(s.energy_eu for s in stats)
                                 / max(all_tokens, 1)),
     }
+    if executed_positions is not None:
+        executed = int(executed_positions)
+        out["executed_positions"] = executed
+        out["slot_utilization"] = (all_tokens / executed) if executed else 0.0
+        if per_token_energy_eu is not None:
+            idle = max(executed - all_tokens, 0)
+            out["energy_eu_overhead"] = float(per_token_energy_eu) * idle
     if cache_stats:
         out.update({f"cache_{k}": v for k, v in cache_stats.items()})
     return out

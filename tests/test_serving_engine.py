@@ -137,9 +137,10 @@ def test_compiled_steps_reject_other_shapes(engines, lm):
 
 
 def test_wave_packing_partial_and_multi_wave(lm, prompts):
-    """5 same-bucket requests at width 4 -> one full + one partial wave."""
+    """5 same-bucket requests at width 4 -> one full + one partial wave
+    (legacy lockstep baseline, kept as mode="wave")."""
     model, params = lm
-    eng = ServingEngine(model, params, mode="engine", config=CFG)
+    eng = ServingEngine(model, params, mode="wave", config=CFG)
     eng.warmup([(8, 8)])
     same = [p[:7] for p in prompts[:5]]
     res = eng.serve(same, 8)
@@ -148,6 +149,67 @@ def test_wave_packing_partial_and_multi_wave(lm, prompts):
     rep = eng.report()
     assert rep["requests"] == 5
     assert rep["cache_buckets_compiled"] == 1
+
+
+def test_engine_vs_wave_parity(lm, engines, prompts):
+    """The slot scheduler changes *when* work runs, never *what* each
+    request computes: token streams match the lockstep baseline exactly."""
+    model, params = lm
+    eng, _ = engines
+    wav = ServingEngine(model, params, mode="wave", config=CFG)
+    wav.warmup(TRACE)
+    news = [n for _, n in TRACE]
+    r_eng = eng.serve(prompts, news)
+    r_wav = wav.serve(prompts, news)
+    assert ([r_eng[r].tokens for r in sorted(r_eng)]
+            == [r_wav[r].tokens for r in sorted(r_wav)])
+
+
+def test_slot_admission_is_fifo(lm, prompts):
+    """Slot admission never lets a bucket-mate jump the queue head: with 2
+    slots and 6 alternating-bucket requests, t_admitted follows submit
+    order (the wave scheduler's whole-queue bucket scan could starve the
+    short-prompt requests here)."""
+    model, params = lm
+    cfg = EngineConfig(max_batch=2, prompt_buckets=(8, 16),
+                       new_token_buckets=(8,), max_waves=1)
+    eng = ServingEngine(model, params, mode="engine", config=cfg)
+    eng.warmup([(16, 8), (8, 8)])
+    rids = []
+    for i in range(6):
+        p = prompts[2] if i % 2 == 0 else prompts[1][:8]   # 14 / 8 tokens
+        rids.append(eng.submit(p, 8))
+    res = eng.run()
+    admitted = [res[r].stats.t_admitted for r in rids]
+    assert all(a is not None for a in admitted)
+    assert admitted == sorted(admitted), \
+        "slot refill must admit strictly in submit order"
+
+
+def test_chunked_prefill_matches_full_prefill(lm, prompts):
+    """Prefilling 16 tokens as two 8-token chunks against a live cache
+    yields the same logits/cache as one full prefill (float roundoff)."""
+    import jax
+    import jax.numpy as jnp
+
+    model, params = lm
+    toks = jnp.asarray(np.stack([np.resize(prompts[2], 16),
+                                 np.resize(prompts[6], 16)]))
+    full_logits, full_cache = model.prefill(params, toks, max_len=24)
+
+    spec = model.cache_spec(2, 24, jnp.float32)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+    z = jnp.zeros((2,), jnp.int32)
+    l1, cache = model.prefill_chunk(params, cache, toks[:, :8], start=z)
+    l2, cache = model.prefill_chunk(params, cache, toks[:, 8:], start=z + 8)
+    assert np.asarray(cache["pos"]).tolist() == [16, 16]
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(full_logits[:, :8]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(full_logits[:, 8:]),
+                               atol=1e-4, rtol=1e-4)
+    # token-level decision parity on the position that seeds generation
+    assert (np.argmax(np.asarray(l2[:, -1]), -1).tolist()
+            == np.argmax(np.asarray(full_logits[:, -1]), -1).tolist())
 
 
 def test_exact_fit_matches_reference_generate(lm, engines, prompts):
@@ -188,6 +250,66 @@ def test_submit_rejects_unbucketable(engines):
         eng.submit(np.zeros(8, np.int32), 9)    # new_tokens > largest bucket
 
 
+def test_engine_rejects_unknown_mode(lm):
+    model, params = lm
+    with pytest.raises(ValueError, match="mode"):
+        ServingEngine(model, params, mode="waves", config=CFG)
+
+
+def test_serve_raises_on_length_mismatch(engines, prompts):
+    """Regression: serve() used to zip-truncate silently when the new_tokens
+    list was shorter/longer than the prompt list, dropping requests."""
+    eng, one = engines
+    for e in (eng, one):
+        with pytest.raises(ValueError, match="new_tokens"):
+            e.serve(prompts[:3], [8, 8])
+        with pytest.raises(ValueError, match="new_tokens"):
+            e.serve(prompts[:2], [8, 8, 8])
+
+
+def test_request_stats_guard_unset_timestamps():
+    """Regression: unset timestamps defaulted to 0.0, so latency_s/ttft_s on
+    an in-flight request returned negative garbage instead of raising."""
+    from repro.serving import RequestStats
+
+    s = RequestStats(rid=0, prompt_len=4, new_tokens=4, bucket=(),
+                     t_submit=123.0)
+    assert s.t_finish is None and s.t_first_token is None
+    with pytest.raises(ValueError, match="latency"):
+        s.latency_s
+    with pytest.raises(ValueError, match="first token"):
+        s.ttft_s
+    s.t_first_token = 124.0
+    s.t_finish = 125.0
+    assert s.ttft_s == pytest.approx(1.0)
+    assert s.latency_s == pytest.approx(2.0)
+
+
+def test_engine_config_validation():
+    """Regression: EngineConfig accepted empty/duplicate/non-positive
+    buckets and zero max_batch/max_waves, failing later as confusing
+    bucket_up/compile errors."""
+    from repro.serving import chunk_plan
+
+    for bad in (dict(max_batch=0), dict(max_waves=0), dict(q_block=0),
+                dict(kv_block=-1), dict(chunk_rows=-1),
+                dict(prompt_buckets=()), dict(prompt_buckets=(8, 8)),
+                dict(prompt_buckets=(8, 0)), dict(prompt_buckets=[8, 16]),
+                dict(new_token_buckets=(True,)),
+                dict(prompt_buckets=(8,), chunk_buckets=(5,))):
+        with pytest.raises(ValueError):
+            EngineConfig(**bad)
+    cfg = EngineConfig(max_batch=4, prompt_buckets=(8, 16),
+                       new_token_buckets=(8,))
+    assert cfg.resolved_chunk_buckets == (8,)        # gcd of prompt buckets
+    assert cfg.chunk_row_buckets == (1, 2)
+    assert cfg.group_total_len == 24
+    assert chunk_plan(32, (16,)) == (16, 16)
+    assert chunk_plan(24, (16, 8)) == (16, 8)
+    with pytest.raises(ValueError):
+        chunk_plan(12, (16, 8))                      # greedy remainder 4
+
+
 # -------------------------------------------------------------- accounting
 
 
@@ -206,10 +328,29 @@ def test_report_shape(engines, prompts):
     eng.serve([prompts[0]], 8)
     rep = eng.report()
     for key in ("requests", "tokens_per_s", "latency_p50_s", "latency_p99_s",
-                "ttft_p50_s", "energy_eu_total", "cache_compile_count",
+                "ttft_p50_s", "ttft_p99_s", "energy_eu_total",
+                "executed_positions", "slot_utilization",
+                "energy_eu_overhead", "cache_compile_count",
                 "cache_buckets_compiled"):
         assert key in rep, key
     assert rep["tokens_per_s"] > 0
+
+
+def test_padded_work_accounting(lm, prompts):
+    """Regression: per-request energy ignored padded/idle array work. A
+    6-token prompt in an 8-bucket at batch 1 executes 8 prefill + 7 decode
+    positions but is charged 6 + 8 tokens; the report must expose the gap."""
+    model, params = lm
+    one = ServingEngine(model, params, mode="oneshot", config=CFG)
+    one.warmup([(6, 8)])
+    one.serve([prompts[0][:6]], 8)
+    rep = one.report()
+    assert rep["executed_positions"] == 8 + 7
+    assert rep["slot_utilization"] == pytest.approx(14 / 15)
+    assert rep["energy_eu_overhead"] == pytest.approx(
+        one.per_token_energy_eu * 1)
+    assert rep["energy_eu_total"] == pytest.approx(
+        one.per_token_energy_eu * 14)
 
 
 # -------------------------------------------------------------- compressed
@@ -263,6 +404,34 @@ def test_trajectory_gate_detects_regression(tmp_path, monkeypatch, capsys):
     hist["history"][1]["engine_tokens_per_s"] = 99.0
     (tmp_path / "BENCH_x.json").write_text(json.dumps(hist))
     assert cg.check_trajectory() == 1   # other_speedup 3.0 -> 1.0 now gates
+
+
+def test_trajectory_gate_latency_keys_lower_is_better(tmp_path, monkeypatch,
+                                                      capsys):
+    """``*_s`` keys (but not ``*_per_s`` throughputs) regress by going UP:
+    the trajectory gate must bound them from above."""
+    import tools.check_gates as cg
+
+    hist = {
+        "trajectory_keys": ["ttft_p99_s"],
+        "history": [
+            {"pr": 1, "ttft_p99_s": 0.10},
+            {"pr": 2, "ttft_p99_s": 0.11},   # +10%: within 20% tolerance
+        ],
+    }
+    (tmp_path / "BENCH_x.json").write_text(json.dumps(hist))
+    monkeypatch.setattr(cg, "ROOT", tmp_path)
+    monkeypatch.setattr(cg, "OUT_DIR", tmp_path / "out")
+    assert cg.check_trajectory() == 0
+
+    hist["history"][1]["ttft_p99_s"] = 0.13   # +30%: a latency regression
+    (tmp_path / "BENCH_x.json").write_text(json.dumps(hist))
+    assert cg.check_trajectory() == 1
+
+    hist["history"][1]["ttft_p99_s"] = 0.02   # big improvement passes
+    (tmp_path / "BENCH_x.json").write_text(json.dumps(hist))
+    assert cg.check_trajectory() == 0
+    capsys.readouterr()
 
 
 # ------------------------------------------------------------ CLI coverage

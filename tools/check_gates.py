@@ -39,8 +39,10 @@ hand-tuned numbers.
 
 ``--trajectory`` gates the *trend* instead of the absolute: each repo-root
 ``BENCH_*.json`` keeps one history entry per PR that moved its number; the
-newest point must not regress more than TRAJECTORY_TOL (20%) below the
-previous point on any throughput/speedup key. Runs no benchmarks.
+newest point must not regress more than TRAJECTORY_TOL (20%) past the
+previous point on any tracked key — below it for throughput/speedup keys,
+above it for latency-style ``*_s`` keys (``ttft_p99_s`` etc.), which are
+lower-is-better. Runs no benchmarks.
 """
 
 from __future__ import annotations
@@ -81,10 +83,16 @@ GATES = [
      "==", True, False),
     ("serving_speedup_engine_vs_oneshot", "bench_serving",
      "serving_speedup_engine_vs_oneshot", ">=", 2.0, True),
+    ("serving_speedup_slot_vs_wave", "bench_serving",
+     "serving_speedup_slot_vs_wave", ">=", 1.05, True),
+    ("serving_ttft_p99_improvement_vs_wave", "bench_serving",
+     "serving_ttft_p99_improvement_vs_wave", ">=", 1.3, True),
     ("serving_recompiles_after_warmup", "bench_serving",
      "recompiles_after_warmup", "==", 0, False),
     ("serving_parity_engine_vs_oneshot", "bench_serving",
      "parity_engine_vs_oneshot", "==", True, False),
+    ("serving_parity_slot_vs_wave", "bench_serving",
+     "parity_slot_vs_wave", "==", True, False),
 ]
 
 # bit-accuracy gates for `--cosim`: the transition-energy kernel's MSB-group
@@ -183,7 +191,14 @@ def _trajectory_keys(entry: dict, declared) -> list:
         return [k for k in declared if k in entry]
     return [k for k, v in entry.items()
             if isinstance(v, (int, float)) and not isinstance(v, bool)
-            and (k.endswith("_per_s") or "speedup" in k)]
+            and (k.endswith("_per_s") or "speedup" in k
+                 or _lower_is_better(k))]
+
+
+def _lower_is_better(key: str) -> bool:
+    """Latency-style keys (``*_s`` but not ``*_per_s`` throughputs) regress
+    by going UP, so the trajectory gate bounds them from above."""
+    return key.endswith("_s") and not key.endswith("_per_s")
 
 
 def check_plan(base: str, ci: bool = False) -> int:
@@ -236,16 +251,21 @@ def check_trajectory(ci: bool = False) -> int:
             if not isinstance(prev.get(key), (int, float)) \
                     or isinstance(prev.get(key), bool):
                 continue
-            floor = (1.0 - TRAJECTORY_TOL) * prev[key]
+            if _lower_is_better(key):
+                bound = (1.0 + TRAJECTORY_TOL) * prev[key]
+                op, ok = "<=", bool(cur[key] <= bound)
+            else:
+                bound = (1.0 - TRAJECTORY_TOL) * prev[key]
+                op, ok = ">=", bool(cur[key] >= bound)
             summary.append({
                 "name": f"{path.stem}:{key}",
                 "benchmark": path.name,
                 "value": cur[key],
-                "op": ">=",
-                "threshold": floor,
+                "op": op,
+                "threshold": bound,
                 "ci_slack": None,
-                "effective_threshold": floor,
-                "pass": bool(cur[key] >= floor),
+                "effective_threshold": bound,
+                "pass": ok,
                 "previous": prev[key],
             })
     if not summary:
