@@ -1,0 +1,239 @@
+"""Fleet serving benchmark: SLO-aware routing across compression levels.
+
+Three resident plans on a reduced olmo-1b — ``base`` (uncompressed), ``k8``
+and ``k4`` codebook restrictions — behind one `repro.serving.fleet
+.FleetRouter`, against two pinned single-plan baselines on the identical
+trace:
+
+* ``BURST`` (24 requests against 8 slots, submitted before any scheduler
+  step runs) drives queue pressure through the router's high watermark so
+  it degrades to aggressive compression, then ``TRICKLE`` (one request per
+  drain) lets pressure collapse so it recovers to high fidelity — both
+  transitions must appear in the route log.
+* **always-high-fidelity** pins every request to ``base``: the energy
+  baseline. Routed tokens-per-energy-unit must beat it by >= 1.15x — the
+  fleet's reason to exist is serving the same trace for less energy.
+* **always-aggressive** pins every request to ``k4``: the latency baseline.
+  Routed p99 time-to-first-token must stay within 1.2x of it — degrading
+  *fidelity* under load must not be bought with a latency regression.
+
+Per-request energy charges are analytic (`repro.serving.metrics
+.per_token_energy` x positions), so the tokens-per-energy ratio is
+deterministic given the route decisions; only the TTFT gate is
+timing-sensitive. Gated in tools/check_gates.py (``--fleet``):
+
+* ``fleet_tokens_per_eu_vs_highfid`` >= 1.15;
+* ``fleet_ttft_p99_headroom_vs_aggressive`` >= 1.0 (aggressive p99 x 1.2
+  over routed p99; timing gate, CI slack applies);
+* ``fleet_recompiles_after_warmup`` == 0 with >= 3 plans resident — every
+  variant's executables are AOT-warmed, routing never compiles;
+* ``fleet_degrade_observed`` / ``fleet_recover_observed`` — the route log
+  must show both transitions;
+* ``fleet_parity_routed_vs_pinned`` — every routed request's tokens match
+  a pinned engine of the plan that served it, *replaying that plan's routed
+  workload* (routing changes which variant runs, never what that variant
+  outputs). The replay matters: queue composition decides which executable
+  prefills a request (chunked vs whole-bucket), and on a reduced
+  random-weight model greedy argmax near-ties flip under the ~1e-6 float
+  differences between those paths — pre-existing engine behavior, observed
+  identically at the seed commit. Same plan + same workload pattern -> same
+  executables -> bit-identical tokens, which is the invariant the fleet
+  layer must preserve.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import CI_BEST_OF, DEFAULT_BEST_OF, bench_ci, emit
+from repro.configs import get_config
+from repro.models.lm import build_lm
+from repro.nn.spec import init_params
+from repro.serving import (
+    EngineConfig,
+    FleetRouter,
+    PlanHandle,
+    RequestBudget,
+    RouterConfig,
+    ServeRequest,
+    ServingEngine,
+)
+
+ARCH = "olmo-1b"
+# 24 requests against 8 slots (max_batch=4 x max_waves=2): queue pressure at
+# submit time ramps past the high watermark with no drain in between, so the
+# router must degrade base -> k8 -> k4 mid-burst.
+BURST = [
+    (32, 16), (30, 4), (16, 16), (12, 6), (32, 12), (9, 8),
+    (28, 12), (16, 16), (31, 16), (14, 4), (25, 12), (16, 10),
+    (10, 6), (32, 16), (13, 16), (24, 8), (29, 12), (16, 4),
+    (27, 12), (11, 16), (32, 6), (15, 16), (26, 12), (16, 10),
+]
+# One request per full drain: pressure is ~0 at every submit, so the router
+# must walk back to high fidelity. The last request carries an energy budget
+# that only the aggressive plans satisfy — routed by SLO, not pressure.
+TRICKLE = [(16, 8), (24, 8), (12, 8), (30, 8), (16, 8), (20, 8)]
+CFG = EngineConfig(max_batch=4, prompt_buckets=(16, 32),
+                   new_token_buckets=(16,), max_waves=2,
+                   chunk_buckets=(16,), chunk_rows=4)
+# Capacity is 8 slots: half-full already means a deep queue relative to one
+# wave, so the degrade watermark sits at 0.5 rather than the library default.
+ROUTER = RouterConfig(high_watermark=0.5, low_watermark=0.25, hysteresis=2)
+# Energy cap for the budgeted TRICKLE request: above k8/k4 (~5.8-6.5e8 eu per
+# token on this config), below base (~8.3e8) — satisfiable, but not at the
+# high-fidelity level the idle router would otherwise pick.
+BUDGET_EU_PER_TOKEN = 7.0e8
+
+
+def _build():
+    cfg = get_config(ARCH).scaled_down(compute_dtype="float32")
+    model = build_lm(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.spec)
+    rng = np.random.default_rng(7)
+
+    def reqs(trace, tenant_base):
+        out = []
+        for i, (plen, ntok) in enumerate(trace):
+            prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+            out.append(ServeRequest(tokens=prompt, max_new_tokens=ntok,
+                                    tenant=f"tenant{(tenant_base + i) % 2}"))
+        return out
+
+    burst = reqs(BURST, 0)
+    trickle = reqs(TRICKLE, 1)
+    trickle[-1] = ServeRequest(
+        tokens=trickle[-1].tokens, max_new_tokens=trickle[-1].max_new_tokens,
+        tenant=trickle[-1].tenant,
+        budget=RequestBudget(energy_eu_per_token=BUDGET_EU_PER_TOKEN))
+    return model, params, burst, trickle
+
+
+def _drive(submit, run, burst, trickle):
+    """Burst phase (submit all, then drain) + trickle phase (drain between
+    submits); returns per-request results in submit order."""
+    rids = [submit(r) for r in burst]
+    out = dict(run())
+    for r in trickle:
+        rids.append(submit(r))
+        out.update(run())
+    return [out[rid] for rid in rids]
+
+
+def _drive_engine(eng, burst, trickle):
+    """Same burst + trickle pattern against one pinned engine."""
+    rids = [eng.submit_request(r) for r in burst]
+    eng.run()
+    for r in trickle:
+        rids.append(eng.submit_request(r))
+        eng.run()
+    return [eng.result(rid) for rid in rids]
+
+
+def _ttft_p99(results) -> float:
+    from repro.serving.metrics import percentile
+
+    return percentile([r.stats.ttft_s for r in results], 99)
+
+
+def run():
+    t0 = time.time()
+    model, params, burst, trickle = _build()
+    shapes = [(len(r.tokens), r.max_new_tokens) for r in burst + trickle]
+    # the TTFT gate is the one timing-sensitive number: like best_of(), take
+    # the best pass so one scheduler hiccup on a loaded host cannot fail it
+    # (router state recovers to level 0 between passes, so every pass routes
+    # identically and the energy/parity numbers come from the first)
+    passes = CI_BEST_OF if bench_ci() else DEFAULT_BEST_OF
+
+    handles = [PlanHandle.uncompressed(),
+               PlanHandle.from_compress_k(model, 8),
+               PlanHandle.from_compress_k(model, 4)]
+
+    fleet = FleetRouter(model, params, handles, config=CFG, router=ROUTER)
+    fleet.warmup(shapes)
+    n_req = len(burst) + len(trickle)
+    fleet_ttft = float("inf")
+    for p in range(passes):
+        pass_routed = _drive(fleet.submit, fleet.run, burst, trickle)
+        fleet_ttft = min(fleet_ttft, _ttft_p99(pass_routed))
+        if p == 0:
+            routed = pass_routed
+    rep = fleet.report()
+    route_plan = [e["plan_id"] for e in fleet.route_log[:n_req]]
+
+    # pinned baselines on the identical full trace: base = energy reference,
+    # k4 = latency reference (same best-of-passes treatment)
+    pinned_reports = {}
+    for h, n in ((handles[0], 1), (handles[2], passes)):
+        eng = ServingEngine(model, params, config=CFG, plan=h)
+        eng.warmup(shapes)
+        warm = eng.cache.compile_count
+        ttft = min(_ttft_p99(_drive_engine(eng, burst, trickle))
+                   for _ in range(n))
+        pinned_reports[h.plan_id] = dict(eng.report(),
+                                         ttft_best_p99_s=ttft,
+                                         recompiles=eng.cache.compile_count
+                                         - warm)
+
+    # parity: replay each plan's routed workload on a pinned engine of that
+    # plan — same submit pattern, so the same executables fire
+    requests = burst + trickle
+    replayed = {}
+    for h in handles:
+        eng = ServingEngine(model, params, config=CFG, plan=h)
+        eng.warmup(shapes)
+        rids = {i: eng.submit_request(requests[i])
+                for i in range(len(burst)) if route_plan[i] == h.plan_id}
+        eng.run()
+        for i in range(len(burst), len(requests)):
+            if route_plan[i] == h.plan_id:
+                rids[i] = eng.submit_request(requests[i])
+            eng.run()  # the fleet drained after every trickle submit
+        replayed.update({i: eng.result(rid) for i, rid in rids.items()})
+    parity = all(
+        r.tokens == replayed[i].tokens for i, r in enumerate(routed))
+
+    hf, ag = pinned_reports["base"], pinned_reports["k4"]
+    # energy is analytic per request, so the pass-0 sums (one full trace on
+    # each side) give a deterministic tokens-per-energy-unit ratio
+    fleet_energy = sum(r.stats.energy_eu for r in routed)
+    fleet_tokens = sum(r.stats.new_tokens for r in routed)
+    fleet_tpe = fleet_tokens / fleet_energy
+    hf_tpe = hf["new_tokens"] / hf["energy_eu_total"]
+    rows = [dict(system="fleet", **{k: v for k, v in rep.items()
+                                    if not isinstance(v, dict)})]
+    rows += [dict(system=f"pinned_{pid}", **r)
+             for pid, r in pinned_reports.items()]
+    derived = {
+        "fleet_requests": len(routed),
+        "fleet_new_tokens": fleet_tokens,
+        "fleet_plans_resident": rep["plans_resident"],
+        "fleet_tokens_per_s": rep["tokens_per_s"],
+        "highfid_tokens_per_s": hf["tokens_per_s"],
+        "aggressive_tokens_per_s": ag["tokens_per_s"],
+        "fleet_energy_eu_total": fleet_energy,
+        "highfid_energy_eu_total": hf["energy_eu_total"],
+        "fleet_tokens_per_eu_vs_highfid": fleet_tpe / hf_tpe,
+        "fleet_ttft_p99_s": fleet_ttft,
+        "aggressive_ttft_p99_s": ag["ttft_best_p99_s"],
+        "fleet_ttft_p99_headroom_vs_aggressive":
+            ag["ttft_best_p99_s"] * 1.2 / fleet_ttft,
+        "fleet_recompiles_after_warmup": rep["recompiles_after_warmup"],
+        "fleet_level_degrades": rep["level_degrades"],
+        "fleet_level_recovers": rep["level_recovers"],
+        "fleet_degrade_observed": bool(rep["level_degrades"] > 0),
+        "fleet_recover_observed": bool(rep["level_recovers"] > 0),
+        "fleet_parity_routed_vs_pinned": bool(parity),
+        "fleet_slo_total": rep["slo_total"],
+        "fleet_slo_hits": rep["slo_hits"],
+        "fleet_requests_per_plan": {
+            pid: route_plan.count(pid) for pid in sorted(set(route_plan))},
+    }
+    return emit("bench_fleet", t0, rows, derived)
+
+
+if __name__ == "__main__":
+    run()

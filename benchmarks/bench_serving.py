@@ -46,7 +46,7 @@ from benchmarks.common import best_of, emit
 from repro.configs import get_config
 from repro.models.lm import build_lm
 from repro.nn.spec import init_params
-from repro.serving import EngineConfig, ServingEngine
+from repro.serving import EngineConfig, ServeRequest, ServingEngine
 
 ARCH = "olmo-1b"
 # (prompt_len, new_tokens) per request: 16 requests over two prompt buckets
@@ -104,8 +104,9 @@ def _measure(model, params, mode, trace_name, prompts, news):
     wall = best_of(lambda: _drain(eng, prompts, news))
     recompiles = eng.cache.compile_count - warm_compiles
     # untimed verification pass: per-request tokens in trace order
-    res = eng.serve(prompts, news)
-    tokens = [res[r].tokens for r in sorted(res)]
+    res = eng.serve([ServeRequest(tokens=p, max_new_tokens=n)
+                     for p, n in zip(prompts, news)])
+    tokens = [r.tokens for r in res]
     rep = eng.report()
     new_tokens = sum(news)
     row = {

@@ -9,6 +9,12 @@ local:global pattern with ring-buffer window caches) so both cache kinds are
 exercised. The identical flow is available from the shell as
 ``repro serve --target lm --arch gemma3-4b --reduced``.
 
+Requests travel as `repro.serving.ServeRequest` (tokens, max_new_tokens,
+tenant, budget, seed) — the pipeline builds the trace internally; `--plans`
+swaps the pinned engine for a multi-plan fleet
+(`repro.serving.fleet.FleetRouter`) routing the same trace across resident
+compression variants, e.g. ``--plans k4 base``.
+
     PYTHONPATH=src python examples/serve_lm.py [--requests 6] [--new-tokens 16]
 """
 
@@ -30,18 +36,24 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--plans", nargs="+", default=None, metavar="SPEC",
+                    help="serve a multi-plan fleet instead of one pinned "
+                         "engine ('base', 'k<N>[m<M>]', or saved plan paths)")
     args = ap.parse_args()
 
+    fleet = bool(args.plans)
     cfg = PipelineConfig(
         target=TargetConfig(kind="lm", arch=args.arch, reduced=True),
         train=TrainStageConfig(qat_steps=0, final_finetune_steps=0),
         # mixed-length trace over two prompt buckets; engine output is
         # cross-checked token for token against the oneshot fallback
+        # (pinned mode only: the fleet routes across variants instead)
         serve=ServeStageConfig(mode="engine", requests=args.requests,
                                prompt_len=max(args.prompt_len, 2),
                                new_tokens=args.new_tokens, mixed=True,
                                mixed_stride=9, max_batch=4, prompt_seed=1,
-                               verify_oneshot=True),
+                               verify_oneshot=not fleet,
+                               plans=tuple(args.plans or ())),
     )
     pipe = Pipeline(cfg)
     t0 = time.time()
@@ -49,6 +61,20 @@ def main():
     dt = time.time() - t0
 
     m = plan.metrics
+    if fleet:
+        rep = pipe.target.last_fleet_report
+        print(f"fleet [{m['serve_plans']}]: {m['serve_requests']} requests / "
+              f"{m['serve_new_tokens']} tokens in {dt*1e3:.0f} ms, "
+              f"{m['serve_recompiles_after_warmup']} recompiles after warmup")
+        for pid, p in rep["plans"].items():
+            print(f"  plan {pid}: {p['requests']} requests, "
+                  f"{p['energy_eu']:.3g} eu")
+        results = pipe.target.last_serve_results
+        for rid in sorted(results)[:2]:
+            print(f"request {rid}: {results[rid].tokens[:8]}...")
+        print("OK (fleet)")
+        return
+
     print(f"engine: {m['serve_requests']} requests / "
           f"{m['serve_new_tokens']} tokens in {dt*1e3:.0f} ms "
           f"({m['serve_tokens_per_s']:.0f} tok/s), "

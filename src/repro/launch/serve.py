@@ -23,6 +23,15 @@ engine's throughput edge over both baselines.
 serves the compressed fake-quant forward, exports the packed 4-bit artifacts
 (`repro.core.lm_compress.export_lm_matmuls`), and verifies the LUT GEMM
 against the fake-quant matmul before serving (see docs/serving.md).
+
+``--plans SPEC [SPEC ...]`` (or ``--plans-dir DIR``) serves a **fleet**
+instead of one pinned variant: every SPEC becomes a resident
+`repro.serving.fleet.PlanHandle` (``base``, ``k4``, ``k8m2``, or a saved
+CompressionPlan base path) and a `FleetRouter` picks the variant per request
+from queue pressure and per-request budgets — degrading to aggressive
+compression under load, recovering to high fidelity when idle:
+
+    python -m repro.launch.serve --arch olmo-1b --reduced --plans k4 base
 """
 
 from __future__ import annotations
@@ -126,6 +135,13 @@ def main(argv=None):
                     help="restrict eligible matmuls to a k-value codebook, "
                          "export packed 4-bit artifacts, verify LUT parity, "
                          "and serve the compressed forward")
+    ap.add_argument("--plans", nargs="+", default=None, metavar="SPEC",
+                    help="fleet serving: resident variants ('base', "
+                         "'k<N>[m<M>]', or saved CompressionPlan base "
+                         "paths) routed across by load and budget")
+    ap.add_argument("--plans-dir", default=None, metavar="DIR",
+                    help="fleet serving: load every saved CompressionPlan "
+                         "under DIR as a resident variant")
     ap.add_argument("--plan-out", default=None, metavar="BASE",
                     help="save the CompressionPlan to BASE.json + BASE.npz")
     args = ap.parse_args(argv)
@@ -143,6 +159,8 @@ def main(argv=None):
                             ckpt_dir=args.ckpt_dir),
         train=TrainStageConfig(qat_steps=0, final_finetune_steps=0),
         serve=ServeStageConfig(mode=args.mode, compress_k=args.compress_k,
+                               plans=tuple(args.plans or ()),
+                               plans_dir=args.plans_dir,
                                requests=args.batch,
                                prompt_len=args.prompt_len,
                                new_tokens=args.new_tokens, mixed=args.mixed,
@@ -160,6 +178,28 @@ def main(argv=None):
               f"({m['export_compression_vs_int8']:.2f}x vs int8), "
               f"LUT parity max rel err "
               f"{m['export_parity_max_rel_err']:.2e}")
+
+    if m.get("serve_mode") == "fleet":
+        rep = pipe.target.last_fleet_report
+        print(f"fleet [{m['serve_plans']}]: {m['serve_requests']} requests "
+              f"({m['serve_tokens_per_s']:.1f} tok/s), "
+              f"{m['serve_level_degrades']} degrades / "
+              f"{m['serve_level_recovers']} recovers, "
+              f"{m['serve_recompiles_after_warmup']} recompiles after warmup")
+        for pid, p in rep["plans"].items():
+            print(f"  plan {pid}: {p['requests']} requests, "
+                  f"{p['new_tokens']} tokens, {p['energy_eu']:.3g} eu")
+        for tid, t in sorted(rep["tenants"].items()):
+            print(f"  tenant {tid}: {t['requests']} requests, "
+                  f"{t['new_tokens']} tokens, {t['energy_eu']:.3g} eu, "
+                  f"SLO {t['slo_hits']}/{t['slo_total']}")
+        results = pipe.target.last_serve_results
+        for rid in sorted(results)[:2]:
+            print(f"  req{rid}: {results[rid].tokens[:10]}...")
+        if args.plan_out:
+            json_path, npz_path = plan.save(args.plan_out)
+            print(f"plan saved: {json_path} + {npz_path}")
+        return
 
     print(f"{args.mode}: {m['serve_requests']} requests, "
           f"{m['serve_new_tokens']} tokens in {m['serve_wall_s']:.2f}s "

@@ -89,6 +89,17 @@ def build_parser() -> argparse.ArgumentParser:
                            default=None,
                            help="cross-check engine tokens vs the oneshot "
                                 "fallback")
+            p.add_argument("--plans", nargs="+", default=None,
+                           metavar="SPEC",
+                           help="fleet serving: resident plan variants "
+                                "routed across by load/budget. Each SPEC is "
+                                "'base', 'k<N>[m<M>]' (k-value codebook + "
+                                "MSR bits), or a saved CompressionPlan "
+                                "base path")
+            p.add_argument("--plans-dir", default=None, metavar="DIR",
+                           help="fleet serving: load every saved "
+                                "CompressionPlan under DIR as a resident "
+                                "variant")
     return ap
 
 
@@ -103,6 +114,9 @@ def _serve_overrides(args) -> dict:
         "max_batch": getattr(args, "max_batch", None),
         "temperature": getattr(args, "temperature", None),
         "verify_oneshot": getattr(args, "verify_oneshot", None),
+        "plans": (tuple(args.plans)
+                  if getattr(args, "plans", None) else None),
+        "plans_dir": getattr(args, "plans_dir", None),
     }
     return {k: v for k, v in fields.items() if v is not None}
 
@@ -118,8 +132,9 @@ def _build_config(args):
     )
 
     kind = args.target
-    if kind is None and args.compress_k:
-        kind = "lm"  # uniform codebook restriction is the LM schedule
+    if kind is None and (args.compress_k or getattr(args, "plans", None)
+                         or getattr(args, "plans_dir", None)):
+        kind = "lm"  # codebook restriction / fleet serving are LM schedules
     if args.config:
         cfg = PipelineConfig.load(args.config)
     elif args.reduced:

@@ -83,6 +83,13 @@ class ServeStageConfig:
 
     mode: str = "engine"         # "engine" | "wave" | "oneshot" (lm)
     compress_k: int = 0          # lm: uniform k-value codebook restriction
+    # multi-plan fleet serving (lm): resident variant specs routed across by
+    # repro.serving.fleet.FleetRouter. Each entry is either a saved
+    # CompressionPlan base path or a shorthand spec: "base" (uncompressed),
+    # "k4", "k8m2" (k-value codebook + MSR bits). plans_dir loads every
+    # saved plan in a directory instead.
+    plans: Tuple[str, ...] = ()
+    plans_dir: Optional[str] = None
     requests: int = 4
     prompt_len: int = 32
     new_tokens: int = 16
@@ -176,6 +183,20 @@ class PipelineConfig:
             raise ValueError(
                 f"serve.compress_k must be in [0, {K_MAX}], got "
                 f"{self.serve.compress_k}")
+        if (self.serve.plans or self.serve.plans_dir) \
+                and self.target.kind != "lm":
+            raise ValueError("serve.plans / serve.plans_dir (fleet serving) "
+                             "need target.kind == 'lm'")
+        for spec in self.serve.plans:
+            k, msr = parse_plan_spec(spec)
+            if k is None:
+                continue  # a saved-plan path; existence checked at load
+            if not 0 <= k <= K_MAX:
+                raise ValueError(
+                    f"serve.plans entry {spec!r}: k must be in [0, {K_MAX}]")
+            if not 0 <= msr <= 8:
+                raise ValueError(
+                    f"serve.plans entry {spec!r}: msr bits must be in [0, 8]")
         for name in ("qat_steps", "final_finetune_steps", "eval_batches"):
             if getattr(self.train, name) < 0:
                 raise ValueError(f"train.{name} must be >= 0")
@@ -209,6 +230,20 @@ class PipelineConfig:
                 out, **{section: dataclasses.replace(cur, **fields)})
         out.validate()
         return out
+
+
+def parse_plan_spec(spec: str) -> Tuple[Optional[int], int]:
+    """Parse a fleet plan shorthand: ``"base"`` -> (0, 0), ``"k4"`` ->
+    (4, 0), ``"k8m2"`` -> (8, 2). Anything else is a saved-plan path and
+    returns (None, 0). jax-free, shared by validation and the serve stage."""
+    import re
+
+    if spec == "base":
+        return 0, 0
+    m = re.fullmatch(r"k(\d+)(?:m(\d+))?", spec)
+    if m:
+        return int(m.group(1)), int(m.group(2) or 0)
+    return None, 0
 
 
 # ------------------------------------------------------------------ presets

@@ -79,6 +79,21 @@ class CompressionPlan:
             self.completed = tuple(s for s in STAGES
                                    if s in self.completed or s == stage)
 
+    # ------------------------------------------------------------ fingerprint
+
+    def fingerprint(self) -> str:
+        """Content identity of the plan's *serving-relevant* state: the comp
+        tree (codebook values, masks, ``msr_bits``) plus the schedule's
+        decision set. This is what `repro.serving.ServeCompileCache` keys
+        executables and exported artifacts on — two plans with the same
+        ``compress_k`` but different codebooks or MSR settings get distinct
+        fingerprints and never share compiled state."""
+        from repro.serving.fleet import comp_fingerprint
+
+        extra = json.dumps(self.decisions, sort_keys=True) \
+            if self.decisions else None
+        return comp_fingerprint(self.comp, extra=extra)
+
     # --------------------------------------------------------------- summary
 
     def summary(self) -> Dict[str, Any]:

@@ -391,11 +391,43 @@ class LMTarget:
                   f"LUT parity max rel err "
                   f"{summary['parity_max_rel_err']:.2e}")
 
+    def _serve_handle(self, plan: CompressionPlan, k: int):
+        """The single-variant `PlanHandle` the pinned serve stage uses."""
+        from repro.serving import PlanHandle
+
+        if k and plan.comp is not None:
+            return PlanHandle.from_comp(plan.comp, compress_k=k,
+                                        plan_id=f"k{k}")
+        if k:
+            return PlanHandle.from_compress_k(self.model, k)
+        return PlanHandle.uncompressed()
+
+    def _fleet_handles(self, plan: CompressionPlan, cfg: PipelineConfig):
+        """Resolve `serve.plans` specs + `serve.plans_dir` into handles."""
+        from repro.pipeline.config import parse_plan_spec
+        from repro.serving import PlanHandle, PlanRegistry
+
+        registry = PlanRegistry()
+        if cfg.serve.plans_dir:
+            for h in PlanRegistry.from_dir(cfg.serve.plans_dir):
+                registry.register(h)
+        for spec in cfg.serve.plans:
+            k, msr = parse_plan_spec(spec)
+            if k is None:
+                loaded = CompressionPlan.load(spec)
+                registry.register(PlanHandle.from_compression_plan(loaded))
+            elif k == 0:
+                registry.register(PlanHandle.uncompressed())
+            else:
+                registry.register(PlanHandle.from_compress_k(
+                    self.model, k, msr_bits=msr))
+        return registry
+
     def stage_serve(self, plan: CompressionPlan, cfg: PipelineConfig,
                     verbose: bool = False) -> None:
         import jax
 
-        from repro.serving import EngineConfig, ServingEngine
+        from repro.serving import EngineConfig, ServeRequest, ServingEngine
 
         s = cfg.serve
         k = s.compress_k
@@ -414,20 +446,29 @@ class LMTarget:
                                (plen,), 0, self.acfg.vocab)
             for i, (plen, _) in enumerate(shapes)
         ]
+        requests = [
+            ServeRequest(tokens=prompt, max_new_tokens=ntok,
+                         temperature=s.temperature,
+                         tenant=f"tenant{i % 2}")
+            for i, (prompt, (_, ntok)) in enumerate(zip(prompts, shapes))
+        ]
+
+        if s.plans or s.plans_dir:
+            self._serve_fleet(plan, cfg, ecfg, shapes, requests, verbose)
+            return
+
+        handle = self._serve_handle(plan, k)
 
         def drain(mode):
             engine = ServingEngine(self.model, plan.params, mode=mode,
-                                   config=ecfg, compress_k=k,
-                                   comp=plan.comp if k else None)
+                                   config=ecfg, plan=handle)
             engine.warmup(shapes)
             warm_compiles = engine.cache.compile_count
-            for prompt, (_, ntok) in zip(prompts, shapes):
-                engine.submit(prompt, ntok, temperature=s.temperature)
-            results = engine.run()
+            results = engine.serve(requests)
             rep = engine.report()
             rep["recompiles_after_warmup"] = (engine.cache.compile_count
                                               - warm_compiles)
-            return results, rep
+            return {r.rid: r for r in results}, rep
 
         results, rep = drain(s.mode)
         plan.metrics.update({f"serve_{key}": val for key, val in rep.items()
@@ -448,3 +489,33 @@ class LMTarget:
             if parity is not None:
                 line += f", engine==oneshot: {parity}"
             print(line)
+
+    def _serve_fleet(self, plan: CompressionPlan, cfg: PipelineConfig, ecfg,
+                     shapes, requests, verbose: bool) -> None:
+        """Fleet path: route the trace across every resident plan."""
+        from repro.serving import FleetRouter
+
+        s = cfg.serve
+        registry = self._fleet_handles(plan, cfg)
+        fleet = FleetRouter(self.model, plan.params, registry,
+                            mode=s.mode if s.mode != "oneshot" else "engine",
+                            config=ecfg)
+        fleet.warmup(shapes)
+        results = fleet.serve(requests)
+        rep = fleet.report()
+        plan.metrics.update({f"serve_{key}": val for key, val in rep.items()
+                             if isinstance(val, (int, float, bool))})
+        plan.metrics["serve_mode"] = "fleet"
+        plan.metrics["serve_plans"] = ",".join(h.plan_id
+                                               for h in fleet.levels)
+        # engine-local rids repeat across the fleet; key on trace order
+        self.last_serve_results = dict(enumerate(results))
+        self.last_fleet_report = rep
+        if verbose:
+            routed = {pid: p["requests"] for pid, p in rep["plans"].items()}
+            print(f"[pipeline] fleet: {rep['requests']} requests over "
+                  f"{rep['plans_resident']} plans {routed}, "
+                  f"{rep['new_tokens']} tokens "
+                  f"({rep['tokens_per_s']:.1f} tok/s), "
+                  f"{rep['recompiles_after_warmup']} recompiles after "
+                  f"warmup")

@@ -16,8 +16,18 @@ from repro.serving.cache import (  # noqa: F401
 )
 from repro.serving.engine import (  # noqa: F401
     Request,
+    RequestBudget,
     RequestResult,
+    ServeRequest,
+    ServeResult,
     ServingEngine,
+)
+from repro.serving.fleet import (  # noqa: F401
+    FleetRouter,
+    PlanHandle,
+    PlanRegistry,
+    RouterConfig,
+    comp_fingerprint,
 )
 from repro.serving.metrics import (  # noqa: F401
     RequestStats,

@@ -110,6 +110,12 @@ class EngineConfig:
         """Cache length of one slot group: any admissible request fits."""
         return max(self.prompt_buckets) + max(self.new_token_buckets)
 
+    @property
+    def slot_capacity(self) -> int:
+        """Concurrent requests one engine can hold in flight (all groups
+        full) — the fleet router's queue-pressure denominator."""
+        return self.max_batch * self.max_waves
+
 
 def _check_bucket_tuple(name: str, t) -> None:
     if not isinstance(t, tuple) or not t:

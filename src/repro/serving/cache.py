@@ -1,12 +1,17 @@
 """Artifact/compile cache for the serving engine.
 
-Two maps, both keyed on the engine identity ``(arch, k)`` (architecture name
-and codebook size, 0 = uncompressed):
+Two maps, both keyed on the engine identity ``(arch, fingerprint)`` — the
+architecture name and the serving plan's *content fingerprint*
+(`repro.serving.fleet.comp_fingerprint`, hashing codebook values, masks and
+``msr_bits``). The fingerprint replaced the old bare ``compress_k`` integer:
+two plans with equal k but different codebooks or MSR settings used to
+collide and silently share executables and exported artifacts built from the
+*first* plan's weights.
 
-* ``(arch, k, shape-key)`` -> compiled executables. Wave/oneshot modes key on
-  a `BucketSpec` and get a `CompiledStep` (prefill + lockstep decode); the
-  slot-level engine keys on ``("group", batch, total_len)`` for its
-  active-masked group decode (`GroupStep`) and on
+* ``(arch, fingerprint, shape-key)`` -> compiled executables. Wave/oneshot
+  modes key on a `BucketSpec` and get a `CompiledStep` (prefill + lockstep
+  decode); the slot-level engine keys on ``("group", batch, total_len)`` for
+  its active-masked group decode (`GroupStep`) and on
   ``("chunk", rows, chunk, batch, total_len)`` for each chunked-prefill
   executable (`ChunkStep`) — a small *fixed* set determined by the config's
   chunk buckets, never by request shapes. Compilation happens exactly once
@@ -14,9 +19,9 @@ and codebook size, 0 = uncompressed):
   executables *reject* any differently-shaped call with a ``TypeError``
   instead of silently recompiling, so "compiles once per shape, never per
   request" is enforced structurally, not just measured.
-* ``(arch, k)`` -> exported `ServeArtifact` tree + summary for the packed
-  4-bit deployment form (`repro.core.lm_compress.export_lm_matmuls`), used
-  for footprint reporting and parity checks.
+* ``(arch, fingerprint)`` -> exported `ServeArtifact` tree + summary for the
+  packed 4-bit deployment form (`repro.core.lm_compress.export_lm_matmuls`),
+  used for footprint reporting and parity checks.
 
 ``compile_count`` increments on every executable build; the serving benchmark
 gates on it staying flat after warmup.
@@ -77,18 +82,26 @@ class ChunkStep:
 
 
 class ServeCompileCache:
-    """Per-(arch, k) compile + artifact cache. Engine and oneshot serving
-    apply the same discipline; the oneshot fallback warms batch-1 buckets
-    (its wave width), so the two modes' bucket keys are disjoint."""
+    """Per-(arch, plan-fingerprint) compile + artifact cache. Engine and
+    oneshot serving apply the same discipline; the oneshot fallback warms
+    batch-1 buckets (its wave width), so the two modes' bucket keys are
+    disjoint."""
 
-    def __init__(self, model, *, arch: str, compress_k: int = 0,
-                 qcfg: Optional[QuantConfig] = None, comp=None,
-                 config: EngineConfig = EngineConfig(),
+    def __init__(self, model, *, arch: str, fingerprint: str = "",
+                 compress_k: int = 0, qcfg: Optional[QuantConfig] = None,
+                 comp=None, config: EngineConfig = EngineConfig(),
                  place_prompts: Optional[Callable] = None,
                  place_replicated: Optional[Callable] = None):
         self.model = model
         self.arch = arch
         self.compress_k = int(compress_k)
+        if not fingerprint:
+            # direct construction without an explicit plan identity: derive
+            # it from the comp content so distinct comps never share keys
+            from repro.serving.fleet import comp_fingerprint
+
+            fingerprint = comp_fingerprint(comp)
+        self.fingerprint = fingerprint
         self.qcfg = qcfg if qcfg is not None else QuantConfig.off()
         self.comp = comp
         self.config = config
@@ -104,7 +117,7 @@ class ServeCompileCache:
     # ------------------------------------------------------------ step fns
 
     def _key(self, bucket: BucketSpec) -> Tuple:
-        return (self.arch, self.compress_k, bucket.key())
+        return (self.arch, self.fingerprint, bucket.key())
 
     def fns(self, bucket: BucketSpec, params) -> CompiledStep:
         """Compiled (prefill, decode) for the bucket; compiles on first use."""
@@ -158,7 +171,7 @@ class ServeCompileCache:
     def group_fns(self, params) -> GroupStep:
         """Compiled active-masked decode for the slot group shape."""
         batch, total_len = self._group_shape()
-        key = (self.arch, self.compress_k, ("group", batch, total_len))
+        key = (self.arch, self.fingerprint, ("group", batch, total_len))
         if key in self._steps:
             return self._steps[key]
 
@@ -185,7 +198,7 @@ class ServeCompileCache:
         cfg = self.config
         batch, total_len = self._group_shape()
         rows = int(rows)
-        key = (self.arch, self.compress_k,
+        key = (self.arch, self.fingerprint,
                ("chunk", rows, int(chunk), batch, total_len))
         if key in self._steps:
             return self._steps[key]
@@ -216,15 +229,16 @@ class ServeCompileCache:
     # ----------------------------------------------------------- artifacts
 
     def artifacts(self, params) -> Tuple[dict, dict]:
-        """Packed `ServeArtifact` tree + footprint summary for (arch, k).
+        """Packed `ServeArtifact` tree + footprint summary for
+        (arch, fingerprint).
 
-        Empty when the engine is uncompressed (k == 0) — there is nothing to
-        pack without a codebook restriction.
+        Empty when the engine is uncompressed — there is nothing to pack
+        without a codebook restriction.
         """
-        key = (self.arch, self.compress_k)
+        key = (self.arch, self.fingerprint)
         if key in self._artifacts:
             return self._artifacts[key]
-        if not self.compress_k or self.comp is None:
+        if self.comp is None:
             arts: dict = {}
             summary = {"layers": 0, "weight_bytes_packed": 0}
         else:
@@ -242,6 +256,7 @@ class ServeCompileCache:
         return {
             "arch": self.arch,
             "compress_k": self.compress_k,
+            "fingerprint": self.fingerprint,
             "buckets_compiled": len(self._steps),
             "compile_count": self.compile_count,
         }

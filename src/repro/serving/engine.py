@@ -34,12 +34,18 @@ step); `metrics.summarize` reports the gap to the per-request charge as
 ``energy_eu_overhead`` and a ``slot_utilization`` ratio. Slot-level refill
 is the mechanism that drives that overhead toward zero.
 
-With ``compress_k > 0`` every eligible matmul is restricted to a symmetric
-k-value codebook (`repro.core.lm_compress.restrict_all_codebooks`) and both
-prefill and decode run the compressed fake-quant forward; the packed 4-bit
-`ServeArtifact` tree is exported into the cache for footprint/parity
-reporting, and per-request energy is charged via the tile-level model
-(`repro.serving.metrics.per_token_energy`).
+The engine serves exactly one compression variant, identified by a
+`repro.serving.fleet.PlanHandle` (``plan=``): the handle's comp tree drives
+the compressed fake-quant forward, and its *content fingerprint* — not a
+bare ``compress_k`` integer — keys the compile/artifact cache, so two plans
+with equal k but different codebooks or ``msr_bits`` never share
+executables. The packed 4-bit `ServeArtifact` tree is exported into the
+cache for footprint/parity reporting, and per-request energy is charged via
+the tile-level model (`repro.serving.metrics.per_token_energy`).
+``ServingEngine(compress_k=...)`` survives as a deprecated shim that builds
+the uniform-restriction handle internally. Multi-variant serving — routing
+each request across several resident plans by load and budget — lives in
+`repro.serving.fleet.FleetRouter`.
 """
 
 from __future__ import annotations
@@ -47,7 +53,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -67,6 +74,31 @@ from repro.serving.cache import ServeCompileCache
 from repro.serving.metrics import RequestStats, per_token_energy, summarize
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestBudget:
+    """Per-request SLO caps. ``energy_eu_per_token`` bounds the serving
+    variant's measured per-token MAC energy (a routing input for the fleet,
+    see `repro.serving.fleet.FleetRouter`); ``latency_s`` bounds end-to-end
+    request latency (evaluated post-hoc for the SLO hit-rate)."""
+
+    energy_eu_per_token: Optional[float] = None
+    latency_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One serving request, the unit `ServingEngine.serve` and the fleet
+    router accept. ``tokens`` is the prompt; ``tenant`` and ``budget`` feed
+    the fleet's accounting and routing and are inert for a pinned engine."""
+
+    tokens: Sequence[int]
+    max_new_tokens: int
+    tenant: str = "default"
+    budget: Optional[RequestBudget] = None
+    temperature: float = 0.0
+    seed: int = 0
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -74,13 +106,19 @@ class Request:
     new_tokens: int
     temperature: float = 0.0
     seed: int = 0
+    tenant: str = "default"
+    budget: Optional[RequestBudget] = None
 
 
 @dataclasses.dataclass
-class RequestResult:
+class ServeResult:
     rid: int
     tokens: List[int]             # exactly new_tokens entries
     stats: RequestStats
+
+
+# the pre-fleet name; old call sites keep working unchanged
+RequestResult = ServeResult
 
 
 class _Slot:
@@ -142,32 +180,45 @@ class ServingEngine:
     """Queue + micro-batcher + compile cache over one LM and its params."""
 
     def __init__(self, model, params, *, mode: str = "engine",
-                 config: EngineConfig = EngineConfig(), compress_k: int = 0,
-                 comp=None, arch: Optional[str] = None, mesh=None):
+                 config: EngineConfig = EngineConfig(), plan=None,
+                 compress_k: Optional[int] = None, comp=None,
+                 arch: Optional[str] = None, mesh=None):
         if mode not in ("engine", "wave", "oneshot"):
             raise ValueError(
                 f"mode must be 'engine', 'wave' or 'oneshot', got {mode!r}")
         self.model = model
         self.config = config
         self.mode = mode
-        self.compress_k = int(compress_k)
         self.arch = arch if arch is not None else model.cfg.name
 
-        if comp is not None:
-            # pre-built comp tree (e.g. a CompressionPlan's codebooks);
-            # compress_k stays the cache key for the restriction level
-            self.comp = comp
-            self.qcfg = QuantConfig.on()
-        elif self.compress_k:
-            from repro.core import lm_compress
+        from repro.serving.fleet import PlanHandle
 
-            comp = lm_compress.init_lm_comp(model)
-            values = lm_compress.symmetric_codebook_values(self.compress_k)
-            self.comp = lm_compress.restrict_all_codebooks(model, comp, values)
-            self.qcfg = QuantConfig.on()
+        if plan is not None:
+            if compress_k is not None or comp is not None:
+                raise ValueError(
+                    "pass either plan= or the deprecated compress_k=/comp=, "
+                    "not both")
+        elif compress_k is not None or comp is not None:
+            warnings.warn(
+                "ServingEngine(compress_k=..., comp=...) is deprecated; "
+                "construct a repro.serving.fleet.PlanHandle and pass "
+                "plan=handle (see docs/serving.md)",
+                DeprecationWarning, stacklevel=2)
+            k = int(compress_k or 0)
+            if comp is not None:
+                # pre-built comp tree (e.g. a CompressionPlan's codebooks)
+                plan = PlanHandle.from_comp(
+                    comp, compress_k=k, plan_id=f"k{k}" if k else "custom")
+            else:
+                plan = PlanHandle.from_compress_k(model, k)
         else:
-            self.comp = None
-            self.qcfg = QuantConfig.off()
+            plan = PlanHandle.uncompressed()
+
+        self.plan = plan
+        self.comp = plan.comp
+        self.compress_k = int(plan.compress_k)
+        self.qcfg = QuantConfig.on() if plan.comp is not None \
+            else QuantConfig.off()
 
         self.mesh = mesh
         if mesh is not None:
@@ -181,8 +232,9 @@ class ServingEngine:
             self._check_chunkable()
 
         self.cache = ServeCompileCache(
-            model, arch=self.arch, compress_k=self.compress_k, qcfg=self.qcfg,
-            comp=self.comp, config=config, place_prompts=self._place,
+            model, arch=self.arch, fingerprint=plan.fingerprint,
+            compress_k=self.compress_k, qcfg=self.qcfg, comp=self.comp,
+            config=config, place_prompts=self._place,
             place_replicated=self._place_rep)
 
         self._queue: collections.deque[Request] = collections.deque()
@@ -275,13 +327,16 @@ class ServingEngine:
         return 1 if self.mode == "oneshot" else self.config.max_waves
 
     def submit(self, prompt: Sequence[int], new_tokens: int, *,
-               temperature: float = 0.0, seed: int = 0) -> int:
+               temperature: float = 0.0, seed: int = 0,
+               tenant: str = "default",
+               budget: Optional[RequestBudget] = None) -> int:
         """Enqueue one request; returns its request id."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, new_tokens=int(new_tokens),
-                      temperature=float(temperature), seed=int(seed))
+                      temperature=float(temperature), seed=int(seed),
+                      tenant=str(tenant), budget=budget)
         # validates the shape fits a bucket at submit time, not mid-run
         bucket_for(prompt.shape[0], req.new_tokens, self.config,
                    self.wave_width)
@@ -289,8 +344,32 @@ class ServingEngine:
         self._stats_pending[rid] = RequestStats(
             rid=rid, prompt_len=int(prompt.shape[0]),
             new_tokens=req.new_tokens, bucket=(),
-            t_submit=time.perf_counter())
+            t_submit=time.perf_counter(), tenant=req.tenant,
+            plan_id=self.plan.plan_id)
         return rid
+
+    def submit_request(self, request: ServeRequest) -> int:
+        """Enqueue one `ServeRequest`; returns its request id."""
+        return self.submit(request.tokens, request.max_new_tokens,
+                           temperature=request.temperature,
+                           seed=request.seed, tenant=request.tenant,
+                           budget=request.budget)
+
+    @property
+    def pending(self) -> int:
+        """Requests submitted but not yet finished (queued + in flight) —
+        the fleet router's queue-depth signal."""
+        n = len(self._queue)
+        if self.mode == "engine":
+            n += sum(1 for g in self._groups for s in g.slots
+                     if s is not None)
+        else:
+            n += sum(1 for w in self._waves for s in w.slots if not s.done)
+        return n
+
+    def result(self, rid: int) -> Optional[ServeResult]:
+        """The finished result for ``rid``, or None while it is in flight."""
+        return self._completed.get(rid)
 
     def warmup(self, shapes: Sequence[tuple]) -> dict:
         """Precompile every executable serving the (prompt_len, new_tokens)
@@ -531,43 +610,73 @@ class ServingEngine:
                 g.slots[r] = None
         return True
 
-    def _run_slots(self) -> None:
-        while self._queue or any(g.busy for g in self._groups):
+    # ----------------------------------------------------------------- run
+
+    def step(self) -> bool:
+        """Advance the scheduler by one iteration; False when idle.
+
+        One iteration is one refill + chunk + decode pass (slot mode) or one
+        admit + lockstep-decode pass (wave/oneshot). The fleet router drains
+        several engines by interleaving their steps so no variant
+        head-of-line blocks another."""
+        if self.mode == "engine":
+            if not (self._queue or any(g.busy for g in self._groups)):
+                return False
             self._refill_slots()
             for g in self._groups:
                 self._chunk_steps(g)
             for g in self._groups:
                 self._decode_group(g)
+            return True
+        if not (self._queue or self._waves):
+            return False
+        while self._queue and len(self._waves) < self.max_inflight:
+            if not self._admit():
+                break
+        for wave in list(self._waves):
+            self._step(wave)
+        return True
 
-    # ----------------------------------------------------------------- run
-
-    def run(self) -> Dict[int, RequestResult]:
+    def run(self) -> Dict[int, ServeResult]:
         """Drain the queue: admit + decode until every request completes."""
         t0 = time.perf_counter()
-        if self.mode == "engine":
-            self._run_slots()
-        else:
-            while self._queue or self._waves:
-                while self._queue and len(self._waves) < self.max_inflight:
-                    if not self._admit():
-                        break
-                for wave in list(self._waves):
-                    self._step(wave)
+        while self.step():
+            pass
         self.last_wall_s = time.perf_counter() - t0
         self.total_wall_s += self.last_wall_s
         return dict(self._completed)
 
-    def serve(self, prompts: Sequence[Sequence[int]],
-              new_tokens) -> Dict[int, RequestResult]:
-        """Convenience: submit a trace (per-request or shared new_tokens) and
-        run it to completion."""
-        if isinstance(new_tokens, int):
-            new_tokens = [new_tokens] * len(prompts)
-        if len(new_tokens) != len(prompts):
+    def serve(self, requests: Union[Sequence[ServeRequest],
+                                    Sequence[Sequence[int]]],
+              new_tokens=None):
+        """Submit a batch and run it to completion.
+
+        The current form takes a sequence of `ServeRequest` and returns the
+        `ServeResult`s **in submission order** (a list). The pre-fleet form
+        ``serve(prompts, new_tokens)`` still works — it constructs requests
+        internally and returns the old ``{rid: ServeResult}`` dict — but
+        emits a DeprecationWarning.
+        """
+        requests = list(requests)
+        if new_tokens is None and all(isinstance(r, ServeRequest)
+                                      for r in requests):
+            rids = [self.submit_request(r) for r in requests]
+            out = self.run()
+            return [out[rid] for rid in rids]
+        warnings.warn(
+            "ServingEngine.serve(prompts, new_tokens) is deprecated; pass a "
+            "sequence of ServeRequest (see docs/serving.md)",
+            DeprecationWarning, stacklevel=2)
+        if new_tokens is None:
             raise ValueError(
-                f"got {len(prompts)} prompts but {len(new_tokens)} "
+                "serve() needs ServeRequest entries or (prompts, new_tokens)")
+        if isinstance(new_tokens, int):
+            new_tokens = [new_tokens] * len(requests)
+        if len(new_tokens) != len(requests):
+            raise ValueError(
+                f"got {len(requests)} prompts but {len(new_tokens)} "
                 f"new_tokens entries; zip would silently drop requests")
-        rids = [self.submit(p, n) for p, n in zip(prompts, new_tokens)]
+        rids = [self.submit(p, n) for p, n in zip(requests, new_tokens)]
         out = self.run()
         return {rid: out[rid] for rid in rids}
 

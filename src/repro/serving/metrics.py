@@ -48,6 +48,9 @@ class RequestStats:
     t_first_token: Optional[float] = None
     t_finish: Optional[float] = None
     energy_eu: float = 0.0
+    # fleet accounting: who asked, and which resident plan served it
+    tenant: str = "default"
+    plan_id: str = ""
 
     @property
     def latency_s(self) -> float:

@@ -1,0 +1,300 @@
+"""Multi-plan fleet serving: content fingerprints, the plan registry, the
+SLO-aware router (degrade/recover with hysteresis, per-tenant accounting,
+budget routing), routed-vs-pinned parity, and the plan-centric serving API's
+deprecation shims."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.models.lm import build_lm
+from repro.nn.spec import init_params
+from repro.pipeline.config import parse_plan_spec
+from repro.serving import (
+    EngineConfig,
+    FleetRouter,
+    PlanHandle,
+    PlanRegistry,
+    RequestBudget,
+    RouterConfig,
+    ServeRequest,
+    ServeResult,
+    ServingEngine,
+    comp_fingerprint,
+)
+from repro.serving.cache import ServeCompileCache
+
+CFG = EngineConfig(max_batch=2, prompt_buckets=(8,), new_token_buckets=(4,),
+                   max_waves=2)
+# capacity 4 slots: small bursts cross the watermark, so the routing tests
+# stay cheap. hysteresis=2 and the 0.5 watermark mirror bench_fleet.py.
+ROUTER = RouterConfig(high_watermark=0.5, low_watermark=0.25, hysteresis=2)
+SHAPES = [(6, 4), (8, 4)]
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("olmo-1b").scaled_down(compute_dtype="float32")
+    model = build_lm(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.spec)
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def handles(lm):
+    model, _ = lm
+    return [PlanHandle.uncompressed(),
+            PlanHandle.from_compress_k(model, 8),
+            PlanHandle.from_compress_k(model, 4)]
+
+
+def _request(model, plen=6, ntok=4, *, tenant="default", budget=None, seed=3):
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, model.cfg.vocab, size=plen).astype(np.int32)
+    return ServeRequest(tokens=prompt, max_new_tokens=ntok, tenant=tenant,
+                        budget=budget)
+
+
+# --------------------------------------------------------------- fingerprints
+
+
+def test_comp_fingerprint_distinguishes_content(lm):
+    model, _ = lm
+    base = PlanHandle.uncompressed()
+    k4 = PlanHandle.from_compress_k(model, 4)
+    k4m2 = PlanHandle.from_compress_k(model, 4, msr_bits=2)
+    k8 = PlanHandle.from_compress_k(model, 8)
+    fps = [h.fingerprint for h in (base, k4, k4m2, k8)]
+    assert len(set(fps)) == 4, f"fingerprints collide: {fps}"
+    # same content -> same fingerprint (rebuild from scratch)
+    assert PlanHandle.from_compress_k(model, 4).fingerprint == k4.fingerprint
+    # the decision-set extra separates equal comps scheduled differently
+    assert comp_fingerprint(None) != comp_fingerprint(None, extra="layer:0")
+
+
+def test_registry_dedupes_by_content_and_guards_ids(lm):
+    model, _ = lm
+    k4 = PlanHandle.from_compress_k(model, 4)
+    reg = PlanRegistry([PlanHandle.uncompressed(), k4])
+    # identical content registers as the existing handle, whatever its id
+    again = reg.register(PlanHandle.from_compress_k(model, 4,
+                                                    plan_id="k4-copy"))
+    assert again is k4
+    assert len(reg) == 2 and "k4-copy" not in reg
+    # an id collision with *different* content is an error, not a silent swap
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(PlanHandle.from_compress_k(model, 8, plan_id="k4"))
+    with pytest.raises(KeyError):
+        reg.get("missing")
+
+
+def test_registry_from_dir_errors(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        PlanRegistry.from_dir(tmp_path / "nope")
+    with pytest.raises(ValueError, match="no CompressionPlan"):
+        PlanRegistry.from_dir(tmp_path)
+
+
+def test_cache_keys_on_fingerprint_not_compress_k(lm):
+    """Regression: two plans with equal k but different msr_bits used to
+    share (arch, k, bucket) executable keys and the (arch, k) artifact map —
+    serving the second plan with the first plan's compiled weights."""
+    model, _ = lm
+    k4 = PlanHandle.from_compress_k(model, 4)
+    k4m2 = PlanHandle.from_compress_k(model, 4, msr_bits=2)
+    assert k4.compress_k == k4m2.compress_k == 4
+    caches = [ServeCompileCache(model, arch="olmo-1b", comp=h.comp,
+                                compress_k=h.compress_k, config=CFG,
+                                fingerprint=h.fingerprint)
+              for h in (k4, k4m2)]
+    from repro.serving.bucketing import bucket_for
+
+    bucket = bucket_for(6, 4, CFG, batch=CFG.max_batch)
+    assert caches[0]._key(bucket) != caches[1]._key(bucket)
+    assert (caches[0].arch, caches[0].fingerprint) != \
+        (caches[1].arch, caches[1].fingerprint)
+    # equal content still shares the key (no spurious cache splits)
+    twin = ServeCompileCache(model, arch="olmo-1b", comp=k4.comp,
+                             compress_k=4, config=CFG)
+    assert twin._key(bucket) == caches[0]._key(bucket)
+
+
+def test_router_config_validation():
+    with pytest.raises(ValueError):
+        RouterConfig(high_watermark=0.2, low_watermark=0.5)
+    with pytest.raises(ValueError):
+        RouterConfig(hysteresis=0)
+    with pytest.raises(ValueError):
+        RouterConfig(low_watermark=-0.1)
+
+
+def test_parse_plan_spec():
+    assert parse_plan_spec("base") == (0, 0)
+    assert parse_plan_spec("k8") == (8, 0)
+    assert parse_plan_spec("k4m2") == (4, 2)
+    assert parse_plan_spec("plans/olmo-k4") == (None, 0)
+
+
+# -------------------------------------------------------------------- routing
+
+
+@pytest.fixture(scope="module")
+def fleet(lm, handles):
+    model, params = lm
+    fr = FleetRouter(model, params, handles, config=CFG, router=ROUTER)
+    fr.warmup(SHAPES)
+    return fr
+
+
+def test_fleet_levels_sorted_by_energy(fleet):
+    energies = [float(h.energy_per_token) for h in fleet.levels]
+    assert energies == sorted(energies, reverse=True)
+    assert fleet.levels[0].plan_id == "base"       # high fidelity first
+    assert fleet.levels[-1].plan_id == "k4"        # most aggressive last
+
+
+def test_burst_degrades_trickle_recovers_with_hysteresis(lm, fleet):
+    """One shared drive through the module fleet: burst past the watermark
+    (degrade), then drain-per-submit (recover), asserting the route log at
+    every phase. Shared because engines compile once per module."""
+    model, _ = lm
+    log0 = len(fleet.route_log)
+    burst = [_request(model, tenant=f"tenant{i % 2}", seed=i)
+             for i in range(10)]
+    rids = [fleet.submit(r) for r in burst]
+    results = fleet.run()
+    assert all(rid in results for rid in rids)
+    assert all(len(results[rid].tokens) == 4 for rid in rids)
+
+    levels = [e["level"] for e in fleet.route_log[log0:]]
+    # pressure only rises during the burst: the level may only step toward
+    # aggressive, never flap back mid-burst
+    assert levels == sorted(levels), f"level flapped during burst: {levels}"
+    assert levels[0] == 0 and levels[-1] == len(fleet.levels) - 1
+    degrades = sum(1 for a, b in zip(levels, levels[1:]) if b > a)
+    assert degrades == len(fleet.levels) - 1
+    # hysteresis: consecutive level changes are >= hysteresis submissions
+    # apart (a single pressure spike cannot move the level)
+    change_at = [i for i in range(1, len(levels))
+                 if levels[i] != levels[i - 1]]
+    assert all(b - a >= ROUTER.hysteresis
+               for a, b in zip(change_at, change_at[1:]))
+
+    # trickle: queue is empty at every submit, so the router walks back to
+    # high fidelity, again gated by hysteresis
+    log1 = len(fleet.route_log)
+    for i in range(5):
+        rid = fleet.submit(_request(model, tenant="tenant0", seed=20 + i))
+        out = fleet.run()
+        assert len(out[rid].tokens) == 4
+    trickle_levels = [e["level"] for e in fleet.route_log[log1:]]
+    assert trickle_levels == sorted(trickle_levels, reverse=True)
+    assert trickle_levels[-1] == 0
+    rep = fleet.report()
+    assert rep["level_degrades"] >= 2 and rep["level_recovers"] >= 2
+
+
+def test_budget_routed_not_rejected(lm, fleet):
+    model, _ = lm
+    lo = float(fleet.levels[-1].energy_per_token)
+    hi = float(fleet.levels[-2].energy_per_token)
+    # satisfiable cap between the two most aggressive plans: routed to the
+    # most aggressive even though the idle router sits at high fidelity
+    cap = (lo + hi) / 2
+    rid = fleet.submit(_request(
+        model, budget=RequestBudget(energy_eu_per_token=cap)))
+    assert fleet.route_log[-1]["plan_id"] == fleet.levels[-1].plan_id
+    assert fleet.route_log[-1]["budget_miss"] is False
+    # unsatisfiable cap: still served (most aggressive), miss recorded
+    rid2 = fleet.submit(_request(
+        model, budget=RequestBudget(energy_eu_per_token=lo * 0.5)))
+    assert fleet.route_log[-1]["plan_id"] == fleet.levels[-1].plan_id
+    assert fleet.route_log[-1]["budget_miss"] is True
+    out = fleet.run()
+    assert len(out[rid].tokens) == 4 and len(out[rid2].tokens) == 4
+    rep = fleet.report()
+    assert rep["slo_total"] >= 2
+    assert rep["slo_hits"] <= rep["slo_total"] - 1
+
+
+def test_tenant_and_plan_accounting_sum_to_totals(fleet):
+    rep = fleet.report()
+    assert sum(t["requests"] for t in rep["tenants"].values()) \
+        == rep["requests"]
+    assert sum(t["new_tokens"] for t in rep["tenants"].values()) \
+        == rep["new_tokens"]
+    assert sum(t["energy_eu"] for t in rep["tenants"].values()) \
+        == pytest.approx(rep["energy_eu_total"], rel=1e-6)
+    assert sum(p["requests"] for p in rep["plans"].values()) \
+        == rep["requests"]
+    assert sum(p["energy_eu"] for p in rep["plans"].values()) \
+        == pytest.approx(rep["energy_eu_total"], rel=1e-6)
+    for t in rep["tenants"].values():
+        assert 0.0 <= t["slo_hit_rate"] <= 1.0
+    assert rep["recompiles_after_warmup"] == 0
+
+
+def test_routed_matches_pinned_per_plan(lm):
+    """Routing picks *which* plan serves a request, never what that plan
+    outputs: a pinned engine of the routed plan reproduces the tokens
+    exactly. Oneshot mode serves batch-1, so the pinned engine's output is
+    independent of what else was in the fleet's queue."""
+    model, params = lm
+    handles = [PlanHandle.uncompressed(), PlanHandle.from_compress_k(model, 4)]
+    fr = FleetRouter(model, params, handles, mode="oneshot", config=CFG,
+                     router=RouterConfig(high_watermark=0.3,
+                                         low_watermark=0.1, hysteresis=1))
+    fr.warmup(SHAPES)
+    reqs = [_request(model, plen=5 + (i % 3), seed=30 + i) for i in range(6)]
+    routed = fr.serve(reqs)
+    plans = [e["plan_id"] for e in fr.route_log]
+    assert len(set(plans)) == 2, f"trace routed to one plan only: {plans}"
+    for h in handles:
+        eng = ServingEngine(model, params, mode="oneshot", config=CFG, plan=h)
+        eng.warmup(SHAPES)
+        pinned = eng.serve(list(reqs))
+        for i, pid in enumerate(plans):
+            if pid == h.plan_id:
+                assert list(routed[i].tokens) == list(pinned[i].tokens)
+
+
+# ------------------------------------------------------- plan-centric API
+
+
+def test_serve_request_api_returns_ordered_results(lm, fleet):
+    model, _ = lm
+    reqs = [_request(model, plen=6, seed=40 + i, tenant="api") for i in range(3)]
+    results = fleet.serve(reqs)
+    assert [type(r) for r in results] == [ServeResult] * 3
+    assert all(r.stats.tenant == "api" for r in results)
+    assert all(r.stats.plan_id in fleet.engines for r in results)
+
+
+def test_engine_serve_legacy_signature_warns(lm):
+    model, params = lm
+    eng = ServingEngine(model, params, mode="oneshot", config=CFG)
+    eng.warmup(SHAPES)
+    req = _request(model, plen=6, seed=50)
+    new = eng.serve([req])
+    with pytest.warns(DeprecationWarning, match="ServeRequest"):
+        old = eng.serve([req.tokens], 4)
+    assert isinstance(old, dict) and len(old) == 1
+    assert list(next(iter(old.values())).tokens) == list(new[0].tokens)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            eng.serve([req.tokens], [4, 4])  # length mismatch still raises
+
+
+def test_engine_compress_k_constructor_warns(lm):
+    model, params = lm
+    with pytest.warns(DeprecationWarning, match="PlanHandle"):
+        eng = ServingEngine(model, params, mode="oneshot", config=CFG,
+                            compress_k=4)
+    assert eng.plan.compress_k == 4
+    assert eng.plan.fingerprint \
+        == PlanHandle.from_compress_k(model, 4).fingerprint
+    with pytest.raises(ValueError, match="not both"):
+        ServingEngine(model, params, config=CFG,
+                      plan=PlanHandle.uncompressed(), compress_k=4)

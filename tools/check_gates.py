@@ -20,6 +20,14 @@ cycle-accurate cosim (``repro.cosim``) on >= 64 sampled tiles per model,
 plus MSR-axis sweep parity (serial == batched with >= 1 accepted MSR
 candidate). Summary: ``benchmarks/out/cosim_summary.json``.
 
+``--fleet`` runs `benchmarks/bench_fleet.py` and gates multi-plan fleet
+serving (`repro.serving.fleet`): routed tokens-per-energy-unit >= 1.15x the
+always-high-fidelity baseline on the bursty trace, p99 TTFT within 1.2x of
+always-aggressive, zero post-warmup recompiles with >= 3 plans resident,
+both degrade and recover transitions observed in the route log, and
+routed-vs-pinned token parity per plan. Summary:
+``benchmarks/out/fleet_summary.json``.
+
 ``--skip-bench`` evaluates whatever JSON is already in benchmarks/out/
 (useful to re-check without re-running the benchmarks).
 
@@ -112,6 +120,28 @@ COSIM_GATES = [
      True, False),
     ("cosim_msr_candidate_accepted", "bench_cosim",
      "msr_candidates_accepted", ">=", 1, False),
+]
+
+# fleet-serving gates for `--fleet` (benchmarks/bench_fleet.py): the routed
+# fleet must convert queue pressure into energy savings without buying them
+# with latency, recompiles, or output changes. The tokens-per-energy and
+# parity gates are deterministic (analytic energy charges, bit-identical
+# replay); only the TTFT headroom gate is timing-sensitive.
+FLEET_GATES = [
+    ("fleet_tokens_per_eu_vs_highfid", "bench_fleet",
+     "fleet_tokens_per_eu_vs_highfid", ">=", 1.15, False),
+    ("fleet_ttft_p99_headroom_vs_aggressive", "bench_fleet",
+     "fleet_ttft_p99_headroom_vs_aggressive", ">=", 1.0, True),
+    ("fleet_recompiles_after_warmup", "bench_fleet",
+     "fleet_recompiles_after_warmup", "==", 0, False),
+    ("fleet_plans_resident", "bench_fleet", "fleet_plans_resident", ">=", 3,
+     False),
+    ("fleet_degrade_observed", "bench_fleet", "fleet_degrade_observed", "==",
+     True, False),
+    ("fleet_recover_observed", "bench_fleet", "fleet_recover_observed", "==",
+     True, False),
+    ("fleet_parity_routed_vs_pinned", "bench_fleet",
+     "fleet_parity_routed_vs_pinned", "==", True, False),
 ]
 
 OPS = {
@@ -236,6 +266,17 @@ def check_cosim(ci: bool = False, skip_bench: bool = False) -> int:
                   "cosim_summary.json")
 
 
+def check_fleet(ci: bool = False, skip_bench: bool = False) -> int:
+    """Run the fleet-serving benchmark and gate routing quality."""
+    if not skip_bench:
+        from benchmarks import bench_fleet
+
+        print("== bench_fleet ==", flush=True)
+        bench_fleet.run()
+    return report(evaluate(ci=ci, gates=FLEET_GATES), ci,
+                  "fleet_summary.json")
+
+
 def check_trajectory(ci: bool = False) -> int:
     """Compare the newest vs previous point of each repo-root BENCH_*.json."""
     summary = []
@@ -291,12 +332,20 @@ def main(argv=None) -> int:
                     help="run the bit-accurate cosim verification benchmark "
                          "and gate kernel-vs-cosim histogram exactness plus "
                          "MSR sweep parity (writes cosim_summary.json)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the multi-plan fleet serving benchmark and "
+                         "gate routed energy efficiency, TTFT headroom, "
+                         "zero recompiles, observed degrade/recover "
+                         "transitions, and routed-vs-pinned parity (writes "
+                         "fleet_summary.json)")
     args = ap.parse_args(argv)
 
     if args.plan:
         return check_plan(args.plan, ci=args.ci)
     if args.cosim:
         return check_cosim(ci=args.ci, skip_bench=args.skip_bench)
+    if args.fleet:
+        return check_fleet(ci=args.ci, skip_bench=args.skip_bench)
     if args.trajectory:
         return check_trajectory(ci=args.ci)
 

@@ -64,7 +64,8 @@ if [[ "$FAST" == 1 ]]; then
     tests/test_kernels.py \
     tests/test_core_energy.py tests/test_profiler.py \
     tests/test_serve_compressed.py tests/test_schedule_batched.py \
-    tests/test_serving_engine.py tests/test_pipeline.py \
+    tests/test_serving_engine.py tests/test_fleet.py \
+    tests/test_pipeline.py \
     tests/test_cosim_differential.py tests/test_msr_schedule.py
 else
   echo "== tier-1 tests =="
