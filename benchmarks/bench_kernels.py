@@ -16,10 +16,26 @@ exported 4-bit LUT forward (`repro.core.export.serve_dense`, CPU jnp
 dispatch) against the dense fake-quant matmul it replaces: parity, weight
 compression vs bf16, and the dispatch-throughput ratio gated in
 tools/run_checks.sh.
+
+The fused-epilogue section (``serve_fused_*``) times the whole serve matmul
+contract — bias + activation + residual folded into the single
+`serve_dense` dispatch — against the unfused form that call replaced (serve
+matmul, then an eager epilogue op per term). One dispatch must not lose to
+four: ``serve_fused_vs_unfused`` is gated >= 1.0 by
+``tools/check_gates.py --kernels``.
+
+The autotune section exercises the roofline block autotuner
+(`repro.kernels.lut_matmul.autotune`) over decode/prefill/FFN shapes and
+round-trips its cache file: a reloaded cache must resolve every shape with
+zero retune events (``autotune_cache_roundtrip_retunes``), and the model
+must never prefer a tile that the roofline scores worse than the default
+128-cube (``autotune_model_sane``). Honors ``REPRO_LUT_AUTOTUNE_CACHE`` as
+the cache path so CI can persist winners across runs.
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -261,6 +277,84 @@ def run():
             "rel_err_vs_ref": serve_err if label.endswith("lut") else 0.0,
         })
 
+    # --- fused epilogue vs unfused serve + eager epilogue (decode shape)
+    # The fused call folds bias + relu + residual into the one serve
+    # dispatch; the unfused baseline is the pre-fusion serve contract: the
+    # bare LUT matmul dispatch followed by one eager op per epilogue term.
+    # Measured at the decode shape (M = a batch of 8 rows), where per-token
+    # latency is dispatch-dominated and the three extra epilogue dispatches
+    # are exactly the cost fusion removes.
+    md = 8
+    xd = jax.random.normal(jax.random.fold_in(key, 9), (md, ks))
+    bias_s = jax.random.normal(jax.random.fold_in(key, 10), (ns,)) * 0.1
+    res_s = jax.random.normal(jax.random.fold_in(key, 11), (md, ns))
+
+    def fused_fwd(a):
+        return serve_dense(a, art, bias=bias_s, residual=res_s,
+                           activation="relu", use_ref=True)
+
+    def unfused_fwd(a):
+        y = serve_dense(a, art, use_ref=True)
+        return jax.nn.relu(y + bias_s) + res_s
+
+    y_fused = fused_fwd(xd).block_until_ready()     # warmup + reference
+    y_unfused = unfused_fwd(xd).block_until_ready()
+    y_epi_ref = jax.nn.relu(dense_fwd(xd, w_fake) + bias_s) + res_s
+    fused_err = float(jnp.linalg.norm(y_fused - y_epi_ref)
+                      / jnp.linalg.norm(y_epi_ref))
+    fused_vs_unfused_err = float(jnp.max(jnp.abs(y_fused - y_unfused)))
+    t_fused = best_of(lambda: jax.block_until_ready(fused_fwd(xd)), n=5)
+    t_unfused = best_of(lambda: jax.block_until_ready(unfused_fwd(xd)), n=5)
+    for label, secs, err in (
+            ("serve_fused_epilogue", t_fused, fused_err),
+            ("serve_unfused_epilogue", t_unfused, 0.0)):
+        rows.append({
+            "kernel": label, "shape": f"{md}x{ks}x{ns}+bias+relu+residual",
+            "wall_s": secs, "rows_per_s": md / secs,
+            "rel_err_vs_ref": err,
+        })
+
+    # --- roofline block autotuner: tuning sweep + cache round-trip
+    from repro.kernels.lut_matmul.autotune import (
+        BlockAutotuner,
+        roofline_time,
+    )
+
+    cache_path = os.environ.get("REPRO_LUT_AUTOTUNE_CACHE",
+                                "benchmarks/out/autotune_cache.json")
+    tuner = BlockAutotuner(path=cache_path)   # loads existing winners if any
+    pre_entries = tuner.stats()["entries"]
+    # decode (skinny M), prefill (square-ish), FFN (fat N)
+    tune_shapes = [(8, 1024, 512), (256, 1024, 1024), (128, 1024, 4096)]
+    t = time.time()
+    winners = {s: tuner.best(*s, backend="bench") for s in tune_shapes}
+    t_tune = time.time() - t
+    s_tune = tuner.stats()
+    tuner.save(cache_path)
+
+    # round trip: a fresh tuner fed only the saved file must resolve every
+    # shape as a cache hit — zero retune events
+    tuner2 = BlockAutotuner(path=cache_path)
+    for s in tune_shapes:
+        tuner2.best(*s, backend="bench")
+    s_round = tuner2.stats()
+
+    # model sanity: the chosen tile must never score worse than the
+    # hand-picked 128-cube default under the same roofline model
+    model_sane = all(
+        roofline_time(*s, winners[s]) <= roofline_time(*s, (128, 128, 128))
+        for s in tune_shapes)
+    rows.append({
+        "kernel": "lut_autotune", "shape": f"{len(tune_shapes)} shapes",
+        "wall_s": t_tune, "rel_err_vs_ref": 0.0,
+        "cache_entries": s_tune["entries"],
+        "cache_hits": s_tune["hits"], "cache_misses": s_tune["misses"],
+        "roundtrip_retunes": s_round["retune_events"],
+    })
+    print(f"  autotune cache {cache_path}: {pre_entries} entries loaded, "
+          f"{s_tune['hits']} hits / {s_tune['misses']} misses this run, "
+          f"{s_tune['entries']} saved", flush=True)
+
     derived = {
         "lut_rel_err": rows[0]["rel_err_vs_ref"],
         "lut_weight_compression": rows[0]["weight_compression"],
@@ -278,6 +372,14 @@ def run():
         "serve_vs_dense_throughput": t_dense / t_serve,
         "serve_weight_compression_vs_bf16": (art.dense_bytes_int8 * 2
                                              / art.weight_bytes),
+        "serve_fused_rel_err": fused_err,
+        "serve_fused_vs_unfused_max_abs": fused_vs_unfused_err,
+        "serve_fused_rows_per_s": md / t_fused,
+        "serve_unfused_rows_per_s": md / t_unfused,
+        "serve_fused_vs_unfused": t_unfused / t_fused,
+        "autotune_entries": s_tune["entries"],
+        "autotune_cache_roundtrip_retunes": s_round["retune_events"],
+        "autotune_model_sane": model_sane,
         "all_within_tolerance": all(r["rel_err_vs_ref"] < 2e-2 for r in rows),
     }
     return emit("bench_kernels", t0, rows, derived)

@@ -25,12 +25,14 @@ from pathlib import Path
 
 from benchmarks.common import OUT_DIR, emit
 from repro.configs import ALL_ARCHS, SHAPES, cell_is_runnable, get_config
+# machine balance is single-sourced with the LUT-GEMM block autotuner
+from repro.kernels.lut_matmul.autotune import (  # noqa: F401
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+)
 from repro.launch.train import WHISPER_DECODER_LEN
 from repro.models.config import active_param_count
-
-PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
-HBM_BW = 819e9           # bytes/s / chip
-LINK_BW = 50e9           # bytes/s / link ICI
 
 _MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
          "all-to-all": 1.0, "collective-permute": 1.0}

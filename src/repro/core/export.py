@@ -40,7 +40,7 @@ from repro.core import qat
 from repro.kernels.lut_matmul.ops import (
     N_CODES,
     compress_layer_weights,
-    lut_matmul,
+    lut_matmul_fused,
 )
 
 
@@ -187,24 +187,45 @@ def _pad_k(x2d: jax.Array, art: ServeArtifact) -> jax.Array:
 
 
 def serve_dense(x: jax.Array, art: ServeArtifact, *,
-                block_m: int = 128, block_n: int = 128,
+                bias: Optional[jax.Array] = None,
+                residual: Optional[jax.Array] = None,
+                activation: str = "none",
+                block_m: Optional[int] = None,
+                block_n: Optional[int] = None,
+                block_k: Optional[int] = None,
                 interpret: Optional[bool] = None,
                 use_ref: bool = False) -> jax.Array:
-    """(..., K) @ packed -> (..., N) through the 4-bit LUT GEMM."""
+    """(..., K) -> act((..., K) @ packed + bias) + residual, one fused
+    LUT-GEMM dispatch.
+
+    Thin dispatcher: flattens leading dims, zero-pads K to the artifact's
+    pack block, and hands the epilogue (bias (N,), elementwise activation,
+    residual of the output shape) to the kernel. Block shapes left ``None``
+    resolve through the roofline autotuner.
+    """
     lead = x.shape[:-1]
     x2d = _pad_k(x.reshape(-1, x.shape[-1]), art)
-    y = lut_matmul(x2d, art.packed, art.codebook, art.scale,
-                   block_m=block_m, block_n=block_n, block_k=art.block_k,
-                   interpret=interpret, use_ref=use_ref)
+    res2d = None if residual is None else residual.reshape(-1, art.n_dim)
+    y = lut_matmul_fused(x2d, art.packed, art.codebook, art.scale,
+                         bias=bias, residual=res2d, activation=activation,
+                         block_m=block_m, block_n=block_n, block_k=block_k,
+                         pack_block=art.block_k, interpret=interpret,
+                         use_ref=use_ref)
     return y.reshape(*lead, art.n_dim)
 
 
 def serve_conv(x: jax.Array, art: ServeArtifact, *, stride: int = 1,
-               padding: str = "SAME", block_m: int = 128, block_n: int = 128,
+               padding: str = "SAME",
+               bias: Optional[jax.Array] = None,
+               residual: Optional[jax.Array] = None,
+               activation: str = "none",
+               block_m: Optional[int] = None,
+               block_n: Optional[int] = None,
                interpret: Optional[bool] = None,
                use_ref: bool = False) -> jax.Array:
-    """NHWC conv through im2col + the LUT GEMM. Matches `lax.conv` to fp32
-    round-off (same contraction, different accumulation order)."""
+    """NHWC conv through im2col feeding the fused LUT GEMM (bias/activation/
+    residual ride the kernel epilogue). Matches `lax.conv` to fp32 round-off
+    (same contraction, different accumulation order)."""
     from repro.core.stats import im2col
 
     n, h, w_in, _ = x.shape
@@ -216,7 +237,10 @@ def serve_conv(x: jax.Array, art: ServeArtifact, *, stride: int = 1,
     else:
         raise ValueError(padding)
     cols = im2col(x, (kh, kw), stride, padding)       # (K, N*Ho*Wo)
-    y = serve_dense(cols.T, art, block_m=block_m, block_n=block_n,
+    res2d = None if residual is None \
+        else residual.reshape(-1, art.n_dim)          # (N*Ho*Wo, C) row order
+    y = serve_dense(cols.T, art, bias=bias, residual=res2d,
+                    activation=activation, block_m=block_m, block_n=block_n,
                     interpret=interpret, use_ref=use_ref)
     return y.reshape(n, ho, wo, art.n_dim)
 

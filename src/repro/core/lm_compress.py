@@ -202,6 +202,83 @@ def export_lm_matmuls(model: LMModel, params: dict, comp: dict, *,
     return out
 
 
+def attach_serve_artifacts(model: LMModel, params: dict, comp: dict, *,
+                           block_k: int = 128) -> Tuple[dict, int]:
+    """Return (comp copy with packed `ServeArtifact`s attached, unit count).
+
+    Every servable eligible unit gains a ``"serve"`` key in its comp entry
+    holding the packed 4-bit form of its weight; `QuantConfig.serve` forwards
+    (attention `_project`, FFN `mm`, dense/conv layers) dispatch on that key
+    to the fused LUT GEMM. Stacked (scanned) units export per scan layer —
+    each layer keeps its own scale/codebook, exactly matching the per-slice
+    fake-quant semantics — and the slices are stacked leaf-wise, so the
+    artifact rides ``lax.scan`` xs and `jax.tree.map` layer slicing like
+    every other comp leaf. Units that are not servable (inactive or >16-value
+    codebooks, undefined layouts, MoE experts) keep their entries unchanged
+    and fall back to fake-quant per unit.
+
+    The ``"serve"`` key is derived content: `comp_fingerprint` skips it, so
+    attaching artifacts never changes a plan's identity.
+    """
+    from repro.core import export as _export
+
+    def export_stacked(w, c, key):
+        layout = _serve_layout(key, w.ndim - 1)
+        if layout is None:
+            return None
+        from repro.kernels.lut_matmul.ops import N_CODES
+
+        ks = jnp.asarray(c["codebook_k"]).reshape(-1)
+        if not bool(jnp.all((ks > 0) & (ks <= N_CODES))):
+            return None
+        slices = []
+        for li in range(w.shape[0]):
+            c_l = {"mask": c["mask"][li], "codebook": c["codebook"][li],
+                   "codebook_k": c["codebook_k"][li]}
+            if "msr_bits" in c:
+                mb = c["msr_bits"]
+                c_l["msr_bits"] = mb if jnp.ndim(mb) == 0 else mb[li]
+            art = _export.export_layer(w[li], c_l, kind="dense",
+                                       layout=layout, block_k=block_k)
+            if art is None:
+                return None
+            slices.append(art)
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+
+    def attach_entries(node_p, entries):
+        new, n = {}, 0
+        for unit, c in entries.items():
+            sub, key = unit.split("/")
+            w = node_p[sub][key]
+            entry = {k: v for k, v in c.items() if k != "serve"}
+            if c["codebook"].ndim == 2:          # stacked over scan layers
+                art = export_stacked(w, c, key)
+            else:
+                layout = _serve_layout(key, w.ndim)
+                art = None if layout is None or not _export.servable(c) else \
+                    _export.export_layer(w, c, kind="dense", layout=layout,
+                                         block_k=block_k)
+            if art is not None:
+                entry["serve"] = art
+                n += 1
+            new[unit] = entry
+        return new, n
+
+    out, total = {}, 0
+    for top, groups in comp.items():
+        if top == "enc_blocks":
+            out[top], n = attach_entries(params[top], groups)
+            total += n
+        elif top in ("blocks", "tail"):
+            out[top] = {}
+            for g, entries in groups.items():
+                out[top][g], n = attach_entries(params[top][g], entries)
+                total += n
+        else:
+            out[top] = groups
+    return out, total
+
+
 def lut_parity_report(model: LMModel, params: dict, comp: dict, arts: Dict,
                       *, check_units: int = 4, seed: int = 2) -> Dict[str, float]:
     """LUT-GEMM vs fake-quant-matmul parity on random activations.

@@ -1,5 +1,6 @@
 from repro.kernels.lut_matmul.ops import (  # noqa: F401
     encode_weights,
     lut_matmul,
+    lut_matmul_fused,
     pack_indices,
 )

@@ -1,0 +1,257 @@
+"""Roofline-driven block-shape autotuner for the fused LUT GEMM.
+
+Hand-picked ``(block_m, block_n, block_k) = (128, 128, 128)`` is a fine
+default for square compute-bound shapes, but serving runs the kernel on
+skinny decode shapes (M = batch of 8) and fat FFN shapes (N = 4d) where the
+best tiling differs. This module scores every legal block shape for a given
+``(M, K, N)`` against the machine-balance model that `benchmarks/roofline.py`
+uses for whole-model analysis (MXU peak vs HBM bandwidth, plus the VPU cost
+of the 16-way select dequant and a per-grid-step dispatch overhead), and
+caches the winner keyed by a content fingerprint of the problem shape — the
+same blake2b-hash discipline as the serve compile cache
+(`repro.serving.fleet.comp_fingerprint`).
+
+The cache persists to JSON (``save``/``load``; ``REPRO_LUT_AUTOTUNE_CACHE``
+names a default path for the process-wide tuner), so serving warmup and CI
+re-runs resolve block shapes with zero retune events. An optional
+``measure`` callback refines the model's top-k candidates with wall-clock
+timing on the live backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+import threading
+from pathlib import Path
+from typing import Callable, Dict, Iterator, Optional, Tuple
+
+from repro.kernels.lut_matmul.lut_matmul import N_CODES
+
+ENV_CACHE_PATH = "REPRO_LUT_AUTOTUNE_CACHE"
+
+BlockShape = Tuple[int, int, int]   # (block_m, block_n, block_k)
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineBalance:
+    """Per-chip machine balance (TPU v5e numbers; single source of truth —
+    `benchmarks/roofline.py` imports its constants from here)."""
+
+    peak_flops: float = 197e12     # bf16 MXU peak / chip
+    hbm_bw: float = 819e9          # HBM bytes/s / chip
+    link_bw: float = 50e9          # bytes/s / ICI link (whole-model roofline)
+    vpu_flops: float = 24.6e12     # elementwise throughput (~peak/8): dequant
+    grid_overhead_s: float = 2e-7  # fixed cost per grid step (issue/sync)
+    vmem_bytes: int = 8 * 2**20    # usable VMEM budget per core for one tile
+
+
+# module-level constants re-exported for benchmarks/roofline.py
+_BALANCE = MachineBalance()
+PEAK_FLOPS = _BALANCE.peak_flops
+HBM_BW = _BALANCE.hbm_bw
+LINK_BW = _BALANCE.link_bw
+
+_BM_CANDIDATES = (8, 16, 32, 64, 128, 256, 512)
+_BN_CANDIDATES = (128, 256, 512)
+_BK_MULTIPLES = (1, 2, 4, 8)
+
+
+def _ceil_to(v: int, q: int) -> int:
+    return ((v + q - 1) // q) * q
+
+
+def tile_vmem_bytes(bm: int, bn: int, bk: int) -> int:
+    """VMEM footprint of one grid step: x tile (f32) + packed bytes +
+    dequantized weight tile (f32) + f32 accumulator tile."""
+    return 4 * bm * bk + (bk // 2) * bn + 4 * bk * bn + 4 * bm * bn
+
+
+def candidate_blocks(m: int, k: int, n: int, *, pack_block: int = 128,
+                     balance: MachineBalance = _BALANCE,
+                     ) -> Iterator[BlockShape]:
+    """Legal sweep space: block_m up to the padded M (sublane-aligned),
+    block_n a lane-width multiple up to padded N, block_k a multiple of the
+    export pack block that divides K (packing is block-local), all within
+    the VMEM budget."""
+    if k % pack_block:
+        raise ValueError(f"K={k} is not a multiple of pack_block={pack_block}")
+    m_cap = max(_ceil_to(m, 8), 8)
+    n_cap = max(_ceil_to(n, 128), 128)
+    bms = [b for b in _BM_CANDIDATES if b <= m_cap] or [8]
+    bns = [b for b in _BN_CANDIDATES if b <= n_cap] or [128]
+    bks = [j * pack_block for j in _BK_MULTIPLES
+           if k % (j * pack_block) == 0] or [pack_block]
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                if tile_vmem_bytes(bm, bn, bk) <= balance.vmem_bytes:
+                    yield (bm, bn, bk)
+
+
+def roofline_time(m: int, k: int, n: int, blocks: BlockShape, *,
+                  balance: MachineBalance = _BALANCE) -> float:
+    """Estimated kernel time for one block shape under the roofline model.
+
+    Grid revisits drive the traffic terms: the x tile streams from HBM once
+    per N block and the packed weights once per M block, so skinny shapes
+    punish oversized tiles. Compute is MXU MACs (on padded work) plus the
+    VPU select-dequant, and every grid step pays a fixed issue overhead —
+    which is what rules out degenerate tiny tiles.
+    """
+    bm, bn, bk = blocks
+    gm = math.ceil(m / bm)
+    gn = math.ceil(n / bn)
+    gk = math.ceil(k / bk)
+    mp, np_, kp = gm * bm, gn * bn, gk * bk
+
+    mac_flops = 2.0 * mp * np_ * kp
+    dequant_ops = float(N_CODES) * kp * np_ * gm   # selects per packed visit
+    compute_s = mac_flops / balance.peak_flops + dequant_ops / balance.vpu_flops
+
+    x_bytes = 4.0 * mp * kp * gn          # x re-read per N block
+    w_bytes = (kp / 2.0) * np_ * gm       # packed re-read per M block
+    out_bytes = 4.0 * mp * np_            # written once (VMEM-resident revisits)
+    memory_s = (x_bytes + w_bytes + out_bytes) / balance.hbm_bw
+
+    return max(compute_s, memory_s) + gm * gn * gk * balance.grid_overhead_s
+
+
+def shape_fingerprint(m: int, k: int, n: int, *, pack_block: int,
+                      backend: str, n_codes: int = N_CODES) -> str:
+    """Content fingerprint of one tuning problem (same discipline as
+    `repro.serving.fleet.comp_fingerprint`: blake2b over the content)."""
+    payload = repr(("lut_matmul", int(m), int(k), int(n), int(pack_block),
+                    int(n_codes), str(backend)))
+    return hashlib.blake2b(payload.encode(), digest_size=8).hexdigest()
+
+
+class BlockAutotuner:
+    """Fingerprint-keyed cache of winning block shapes.
+
+    ``best()`` resolves a shape to its cached winner (a *hit*, zero cost) or
+    runs one tuning sweep (a *miss* -> ``retune_events`` increments): rank
+    all legal candidates by `roofline_time`, optionally wall-clock the top-k
+    through ``measure(blocks) -> seconds``, record the winner. ``save`` /
+    ``load`` round-trip the cache as JSON so a warm process never retunes.
+    """
+
+    def __init__(self, balance: MachineBalance = _BALANCE, *,
+                 path: Optional[str] = None):
+        self.balance = balance
+        self.path = Path(path) if path else None
+        self._cache: Dict[str, dict] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.retune_events = 0
+        if self.path is not None and self.path.exists():
+            self.load(self.path)
+
+    # ----------------------------------------------------------- resolution
+
+    def best(self, m: int, k: int, n: int, *, pack_block: int = 128,
+             backend: Optional[str] = None,
+             measure: Optional[Callable[[BlockShape], float]] = None,
+             top_k: int = 3) -> BlockShape:
+        if backend is None:
+            import jax
+
+            backend = jax.default_backend()
+        fp = shape_fingerprint(m, k, n, pack_block=pack_block, backend=backend)
+        with self._lock:
+            entry = self._cache.get(fp)
+            if entry is not None:
+                self.hits += 1
+                return tuple(entry["blocks"])
+            self.misses += 1
+            self.retune_events += 1
+            entry = self._tune(m, k, n, pack_block=pack_block,
+                               backend=backend, measure=measure, top_k=top_k)
+            self._cache[fp] = entry
+            return tuple(entry["blocks"])
+
+    def _tune(self, m, k, n, *, pack_block, backend, measure, top_k) -> dict:
+        cands = list(candidate_blocks(m, k, n, pack_block=pack_block,
+                                      balance=self.balance))
+        ranked = sorted(
+            cands, key=lambda b: roofline_time(m, k, n, b,
+                                               balance=self.balance))
+        winner, source = ranked[0], "model"
+        if measure is not None and len(ranked) > 1:
+            timed = [(measure(b), b) for b in ranked[:max(1, top_k)]]
+            winner, source = min(timed, key=lambda t: t[0])[1], "measured"
+        return {
+            "shape": [int(m), int(k), int(n), int(pack_block)],
+            "backend": str(backend),
+            "blocks": [int(b) for b in winner],
+            "source": source,
+            "model_s": roofline_time(m, k, n, winner, balance=self.balance),
+        }
+
+    # ---------------------------------------------------------- persistence
+
+    def save(self, path: Optional[str] = None) -> Path:
+        p = Path(path) if path else self.path
+        if p is None:
+            raise ValueError("no cache path: pass one to save() or __init__")
+        p.parent.mkdir(parents=True, exist_ok=True)
+        with self._lock:
+            payload = {"version": 1, "entries": self._cache}
+        p.write_text(json.dumps(payload, indent=2, sort_keys=True))
+        return p
+
+    def load(self, path: Optional[str] = None) -> int:
+        """Merge entries from a saved cache; returns how many were loaded."""
+        p = Path(path) if path else self.path
+        if p is None:
+            raise ValueError("no cache path: pass one to load() or __init__")
+        payload = json.loads(p.read_text())
+        if payload.get("version") != 1:
+            raise ValueError(f"unknown autotune cache version in {p}: "
+                             f"{payload.get('version')!r}")
+        entries = payload["entries"]
+        with self._lock:
+            self._cache.update(entries)
+        return len(entries)
+
+    # -------------------------------------------------------------- reports
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "entries": len(self._cache),
+                "hits": self.hits,
+                "misses": self.misses,
+                "retune_events": self.retune_events,
+                "path": str(self.path) if self.path else None,
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self.hits = self.misses = self.retune_events = 0
+
+
+# process-wide default tuner (serve_dense/serve_conv resolve through this
+# when no explicit blocks are passed); honors REPRO_LUT_AUTOTUNE_CACHE
+_default: Optional[BlockAutotuner] = None
+_default_lock = threading.Lock()
+
+
+def get_default_autotuner() -> BlockAutotuner:
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = BlockAutotuner(path=os.environ.get(ENV_CACHE_PATH))
+        return _default
+
+
+def reset_default_autotuner() -> None:
+    """Drop the process-wide tuner (tests; env-path changes)."""
+    global _default
+    with _default_lock:
+        _default = None

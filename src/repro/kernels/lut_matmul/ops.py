@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.lut_matmul.lut_matmul import N_CODES, lut_matmul_pallas
-from repro.kernels.lut_matmul.ref import lut_matmul_ref
+from repro.kernels.lut_matmul.ref import lut_matmul_fused_ref
 
 
 def default_interpret() -> bool:
@@ -57,8 +57,88 @@ def pack_indices(idx: jax.Array, block_k: int = 128) -> jax.Array:
     return packed.reshape(k // 2, n).astype(jnp.int8)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
-                                             "interpret", "use_ref"))
+@functools.partial(jax.jit, static_argnames=("activation", "block_m",
+                                             "block_n", "block_k",
+                                             "pack_block", "interpret",
+                                             "use_ref"))
+def _fused_jit(x, packed, codebook, scale, bias, residual, *, activation,
+               block_m, block_n, block_k, pack_block, interpret, use_ref):
+    """One jitted dispatch: pad M/N, run the fused kernel, slice back."""
+    if use_ref:
+        return lut_matmul_fused_ref(
+            x, packed, codebook, scale, bias=bias, residual=residual,
+            activation=activation, block_k=pack_block)
+    m, k = x.shape
+    _, n = packed.shape
+    pm, pn = (-m) % block_m, (-n) % block_n
+    xp = jnp.pad(x, ((0, pm), (0, 0))) if pm else x
+    pp = jnp.pad(packed, ((0, 0), (0, pn))) if pn else packed
+    sp = jnp.pad(scale, (0, pn)) if pn else scale
+    bp = None if bias is None else (
+        jnp.pad(bias, (0, pn)) if pn else bias)
+    rp = None if residual is None else (
+        jnp.pad(residual, ((0, pm), (0, pn))) if pm or pn else residual)
+    out = lut_matmul_pallas(xp, pp, codebook, sp, bias=bp, residual=rp,
+                            activation=activation, block_m=block_m,
+                            block_n=block_n, block_k=block_k,
+                            pack_block=pack_block, interpret=interpret)
+    return out[:m, :n]
+
+
+def lut_matmul_fused(
+    x: jax.Array,            # (M, K)
+    packed: jax.Array,       # (K//2, N) int8 packed 4-bit indices
+    codebook: jax.Array,     # (16,) int8/int32 codebook values
+    scale: jax.Array,        # (N,) per-channel dequant scale
+    *,
+    bias: Optional[jax.Array] = None,       # (N,)
+    residual: Optional[jax.Array] = None,   # (M, N)
+    activation: str = "none",               # none|relu|gelu|silu
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    pack_block: int = 128,
+    interpret: Optional[bool] = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Fused serve matmul: Y = act(X @ dequant(packed) + bias) + residual.
+
+    Pads M/N to block multiples as needed (K must already be a ``pack_block``
+    multiple — packing is block-local). Block shapes left as ``None`` resolve
+    through the roofline autotuner (`repro.kernels.lut_matmul.autotune`),
+    cached per (M, K, N, pack_block, backend) fingerprint. ``interpret=None``
+    resolves per backend (`default_interpret`): compiled Pallas on TPU,
+    interpreter elsewhere.
+    """
+    m, k = x.shape
+    _, n = packed.shape
+    if k % pack_block:
+        raise ValueError(
+            f"K={k} must already be a multiple of pack_block={pack_block} "
+            "(packing is block-local; pad K at export)")
+    if interpret is None:
+        interpret = default_interpret()
+    if use_ref:
+        # the ref oracle ignores block shapes — don't touch the autotuner
+        block_m = block_n = block_k = pack_block
+    if block_m is None or block_n is None or block_k is None:
+        from repro.kernels.lut_matmul.autotune import get_default_autotuner
+
+        tm, tn, tk = get_default_autotuner().best(m, k, n,
+                                                  pack_block=pack_block)
+        block_m = tm if block_m is None else block_m
+        block_n = tn if block_n is None else block_n
+        block_k = tk if block_k is None else block_k
+    if k % block_k:
+        raise ValueError(
+            f"K={k} must be a multiple of block_k={block_k} "
+            "(packing is block-local)")
+    return _fused_jit(x, packed, codebook, scale, bias, residual,
+                      activation=activation, block_m=block_m, block_n=block_n,
+                      block_k=block_k, pack_block=pack_block,
+                      interpret=interpret, use_ref=use_ref)
+
+
 def lut_matmul(
     x: jax.Array,
     packed: jax.Array,
@@ -71,29 +151,16 @@ def lut_matmul(
     interpret: Optional[bool] = None,
     use_ref: bool = False,
 ) -> jax.Array:
-    """Y = X @ dequant(packed) — pads M/N to block multiples as needed.
+    """Epilogue-free LUT GEMM (compatibility entry point).
 
-    ``interpret=None`` resolves per backend (`default_interpret`): compiled
-    Pallas on TPU, interpreter elsewhere.
+    Equivalent to `lut_matmul_fused` with no bias/activation/residual and
+    ``pack_block == block_k`` (the historical contract: kernel block == pack
+    block).
     """
-    if use_ref:
-        return lut_matmul_ref(x, packed, codebook, scale, block_k=block_k)
-    if interpret is None:
-        interpret = default_interpret()
-    m, k = x.shape
-    _, n = packed.shape
-    pm, pn, pk = (-m) % block_m, (-n) % block_n, (-k) % block_k
-    if pk:
-        raise ValueError(
-            f"K={k} must already be a multiple of block_k={block_k} "
-            "(packing is block-local)")
-    xp = jnp.pad(x, ((0, pm), (0, 0))) if pm else x
-    pp = jnp.pad(packed, ((0, 0), (0, pn))) if pn else packed
-    sp = jnp.pad(scale, (0, pn)) if pn else scale
-    out = lut_matmul_pallas(xp, pp, codebook, sp, block_m=block_m,
+    return lut_matmul_fused(x, packed, codebook, scale, block_m=block_m,
                             block_n=block_n, block_k=block_k,
-                            interpret=interpret)
-    return out[:m, :n]
+                            pack_block=block_k, interpret=interpret,
+                            use_ref=use_ref)
 
 
 def compress_layer_weights(w: jax.Array, codebook_values, *,

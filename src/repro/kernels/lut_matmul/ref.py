@@ -1,9 +1,11 @@
-"""Pure-jnp oracle for the 4-bit codebook-index GEMM."""
+"""Pure-jnp oracle for the 4-bit codebook-index GEMM (+ fused epilogue)."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.lut_matmul.lut_matmul import ACTIVATIONS
 
 N_CODES = 16
 
@@ -16,7 +18,8 @@ def unpack_indices(packed: jax.Array, block_k: int) -> jax.Array:
     """
     k2, n = packed.shape
     k = 2 * k2
-    assert k % block_k == 0
+    if k % block_k != 0:
+        raise ValueError(f"K={k} is not a multiple of block_k={block_k}")
     p = packed.astype(jnp.int32) & 0xFF
     p = p.reshape(k // block_k, block_k // 2, n)
     low = p & 0xF
@@ -39,3 +42,31 @@ def lut_matmul_ref(
     out = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
     out_dtype = x.dtype if x.dtype != jnp.bfloat16 else jnp.float32
     return out.astype(out_dtype)
+
+
+def lut_matmul_fused_ref(
+    x: jax.Array,
+    packed: jax.Array,
+    codebook: jax.Array,
+    scale: jax.Array,
+    *,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    activation: str = "none",
+    block_k: int = 128,
+) -> jax.Array:
+    """Y = act(X @ dequant(packed) + bias) + residual, fp32 accumulation.
+
+    Same epilogue order as the Pallas kernel: bias before activation,
+    residual after.
+    """
+    idx = unpack_indices(packed, block_k)
+    w = codebook.astype(jnp.float32)[idx] * scale.astype(jnp.float32)[None, :]
+    y = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[None, :]
+    y = ACTIVATIONS[activation](y)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    out_dtype = x.dtype if x.dtype != jnp.bfloat16 else jnp.float32
+    return y.astype(out_dtype)

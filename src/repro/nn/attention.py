@@ -80,9 +80,23 @@ def _project(params, x, qcfg: QuantConfig, comp, name: str, key: str,
              bias_key: Optional[str] = None):
     w = params[key]  # (d, H, hd) or (H, hd, d)
     c = None if comp is None else comp.get(f"{name}/{key}")
+    if qcfg.enabled and qcfg.act_quant:
+        x = qat.fake_quant_act(x)
+    art = None if c is None else c.get("serve")
+    if qcfg.enabled and qcfg.comp_mode == "serve" and art is not None:
+        # packed 4-bit LUT path (bias fused into the kernel epilogue):
+        # wq/wk/wv are exported in_first as (d, H*hd), wo out_last as (H*hd, d)
+        from repro.core.export import serve_dense
+
+        if key == "wo":
+            xin = x.reshape(*x.shape[:-2], x.shape[-2] * x.shape[-1])
+            return serve_dense(xin, art, use_ref=qcfg.use_ref_kernel)
+        bias = params[bias_key] if bias_key and bias_key in params else None
+        y = serve_dense(x, art,
+                        bias=None if bias is None else bias.reshape(-1),
+                        use_ref=qcfg.use_ref_kernel)
+        return y.reshape(*x.shape[:-1], w.shape[1], w.shape[2])
     if qcfg.enabled:
-        if qcfg.act_quant:
-            x = qat.fake_quant_act(x)
         w = qat.fake_quant_weight(w, c)
     if key == "wo":
         y = jnp.einsum("bshd,hdm->bsm", x, w.astype(x.dtype))

@@ -91,23 +91,23 @@ def lenet5(num_classes: int = 10, in_channels: int = 3) -> CNNModel:
     def apply(params, state, x, *, train=False, qcfg=QuantConfig.off(),
               comp=None, serve=None, capture_taps=False):
         tap = {} if capture_taps else None
+        # relu rides the layer epilogue: fused into the LUT-GEMM kernel on
+        # the serve path, applied eagerly on the fake-quant/dense path
         h = L.apply_conv(params["conv1"], x, padding="VALID", qcfg=qcfg,
-                         comp=_maybe(comp, "conv1"),
+                         comp=_maybe(comp, "conv1"), activation="relu",
                          serve_art=_maybe(serve, "conv1"), tap=tap, tap_name="conv1")
-        h = jax.nn.relu(h)
         h = L.max_pool(h)
         h = L.apply_conv(params["conv2"], h, padding="VALID", qcfg=qcfg,
-                         comp=_maybe(comp, "conv2"),
+                         comp=_maybe(comp, "conv2"), activation="relu",
                          serve_art=_maybe(serve, "conv2"), tap=tap, tap_name="conv2")
-        h = jax.nn.relu(h)
         h = L.max_pool(h)
         h = h.reshape(h.shape[0], -1)
-        h = jax.nn.relu(L.apply_dense(params["fc1"], h, qcfg=qcfg,
-                                      comp=_maybe(comp, "fc1"),
-                         serve_art=_maybe(serve, "fc1"), tap=tap, tap_name="fc1"))
-        h = jax.nn.relu(L.apply_dense(params["fc2"], h, qcfg=qcfg,
-                                      comp=_maybe(comp, "fc2"),
-                         serve_art=_maybe(serve, "fc2"), tap=tap, tap_name="fc2"))
+        h = L.apply_dense(params["fc1"], h, qcfg=qcfg, activation="relu",
+                          comp=_maybe(comp, "fc1"),
+                          serve_art=_maybe(serve, "fc1"), tap=tap, tap_name="fc1")
+        h = L.apply_dense(params["fc2"], h, qcfg=qcfg, activation="relu",
+                          comp=_maybe(comp, "fc2"),
+                          serve_art=_maybe(serve, "fc2"), tap=tap, tap_name="fc2")
         logits = L.apply_dense(params["fc3"], h, qcfg=qcfg,
                                comp=_maybe(comp, "fc3"),
                          serve_art=_maybe(serve, "fc3"), tap=tap, tap_name="fc3")

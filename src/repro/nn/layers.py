@@ -50,6 +50,17 @@ class QuantConfig:
                            use_ref_kernel=use_ref_kernel)
 
 
+# epilogue activations a compressible layer can carry; on the serve path
+# these fuse into the LUT-GEMM kernel epilogue (repro.kernels.lut_matmul),
+# on the fake-quant/dense path they apply eagerly — identical math
+ACTIVATIONS = {
+    "none": lambda v: v,
+    "relu": jax.nn.relu,
+    "gelu": lambda v: jax.nn.gelu(v, approximate=True),
+    "silu": jax.nn.silu,
+}
+
+
 def _record_tap(tap, tap_name, x, w, comp):
     """Profiling tap: int8 views of what sits in the MAC registers. Recorded
     on both the fake-quant and serve paths (the served weights dequantize to
@@ -88,9 +99,14 @@ def apply_dense(
     qcfg: QuantConfig = QuantConfig.off(),
     comp: Optional[qat.CompState] = None,
     serve_art=None,
+    activation: str = "none",
+    residual: Optional[jax.Array] = None,
     tap: Optional[dict] = None,
     tap_name: Optional[str] = None,
 ) -> jax.Array:
+    """Dense layer with an optional fused epilogue:
+    ``y = act(x @ w + b) + residual``. On the serve path bias, activation and
+    residual all ride the LUT-GEMM kernel epilogue (one dispatch)."""
     w = params["w"]
     if qcfg.enabled and qcfg.act_quant:
         x = qat.fake_quant_act(x)
@@ -98,12 +114,16 @@ def apply_dense(
     if qcfg.enabled and qcfg.comp_mode == "serve" and serve_art is not None:
         from repro.core.export import serve_dense
 
-        y = serve_dense(x, serve_art, use_ref=qcfg.use_ref_kernel)
-    else:
-        w_eff = qat.fake_quant_weight(w, comp) if qcfg.enabled else w
-        y = jnp.einsum("...k,kn->...n", x, w_eff.astype(x.dtype))
+        return serve_dense(x, serve_art, bias=params.get("b"),
+                           residual=residual, activation=activation,
+                           use_ref=qcfg.use_ref_kernel)
+    w_eff = qat.fake_quant_weight(w, comp) if qcfg.enabled else w
+    y = jnp.einsum("...k,kn->...n", x, w_eff.astype(x.dtype))
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
+    y = ACTIVATIONS[activation](y)
+    if residual is not None:
+        y = y + residual.astype(y.dtype)
     return y
 
 
@@ -139,10 +159,14 @@ def apply_conv(
     qcfg: QuantConfig = QuantConfig.off(),
     comp: Optional[qat.CompState] = None,
     serve_art=None,
+    activation: str = "none",
+    residual: Optional[jax.Array] = None,
     tap: Optional[dict] = None,
     tap_name: Optional[str] = None,
 ) -> jax.Array:
-    """NHWC conv with HWIO kernel."""
+    """NHWC conv with HWIO kernel and an optional fused epilogue:
+    ``y = act(conv(x, w) + b) + residual``. On the serve path the epilogue
+    rides the im2col-fed LUT-GEMM kernel (one dispatch)."""
     w = params["w"]
     if qcfg.enabled and qcfg.act_quant:
         x = qat.fake_quant_act(x)
@@ -150,19 +174,23 @@ def apply_conv(
     if qcfg.enabled and qcfg.comp_mode == "serve" and serve_art is not None:
         from repro.core.export import serve_conv
 
-        y = serve_conv(x, serve_art, stride=stride, padding=padding,
-                       use_ref=qcfg.use_ref_kernel)
-    else:
-        w_eff = qat.fake_quant_weight(w, comp) if qcfg.enabled else w
-        y = jax.lax.conv_general_dilated(
-            x,
-            w_eff.astype(x.dtype),
-            window_strides=(stride, stride),
-            padding=padding,
-            dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        )
+        return serve_conv(x, serve_art, stride=stride, padding=padding,
+                          bias=params.get("b"), residual=residual,
+                          activation=activation,
+                          use_ref=qcfg.use_ref_kernel)
+    w_eff = qat.fake_quant_weight(w, comp) if qcfg.enabled else w
+    y = jax.lax.conv_general_dilated(
+        x,
+        w_eff.astype(x.dtype),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
+    y = ACTIVATIONS[activation](y)
+    if residual is not None:
+        y = y + residual.astype(y.dtype)
     return y
 
 

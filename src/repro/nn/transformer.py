@@ -18,7 +18,7 @@ from repro.nn import attention as A
 from repro.nn import moe as MOE
 from repro.nn import rglru as RG
 from repro.nn import ssm as SSM
-from repro.nn.layers import QuantConfig, apply_layernorm, apply_rmsnorm
+from repro.nn.layers import ACTIVATIONS, QuantConfig, apply_layernorm, apply_rmsnorm
 from repro.nn.spec import ParamSpec, fan_in_init
 
 # ------------------------------------------------------------------- norms
@@ -65,23 +65,30 @@ def make_ffn_spec(cfg: ArchConfig):
 
 def apply_ffn(params, x, cfg: ArchConfig, *, qcfg=QuantConfig.off(), comp=None,
               name: str = "mlp"):
-    def w_of(key):
-        w = params[key]
+    def mm(key, xin, activation="none"):
+        """act(xin @ w[key]) — on the serve path the matmul runs on the
+        packed LUT GEMM with the activation fused into the kernel epilogue."""
         c = None if comp is None else comp.get(f"{name}/{key}")
-        return qat.fake_quant_weight(w, c) if qcfg.enabled else w
+        art = None if c is None else c.get("serve")
+        if qcfg.enabled and qcfg.comp_mode == "serve" and art is not None:
+            from repro.core.export import serve_dense
+
+            return serve_dense(xin, art, activation=activation,
+                               use_ref=qcfg.use_ref_kernel)
+        w = params[key]
+        w = qat.fake_quant_weight(w, c) if qcfg.enabled else w
+        y = jnp.einsum("...k,kn->...n", xin, w.astype(x.dtype))
+        return ACTIVATIONS[activation](y)
 
     xin = qat.fake_quant_act(x) if (qcfg.enabled and qcfg.act_quant) else x
     if cfg.ffn in ("swiglu", "geglu"):
-        g = jnp.einsum("...d,df->...f", xin, w_of("w_gate").astype(x.dtype))
-        u = jnp.einsum("...d,df->...f", xin, w_of("w_up").astype(x.dtype))
-        h = (jax.nn.silu(g) if cfg.ffn == "swiglu"
-             else jax.nn.gelu(g, approximate=True)) * u
+        act = "silu" if cfg.ffn == "swiglu" else "gelu"
+        h = mm("w_gate", xin, act) * mm("w_up", xin)
     else:
-        u = jnp.einsum("...d,df->...f", xin, w_of("w_up").astype(x.dtype))
-        h = jax.nn.gelu(u, approximate=True)
+        h = mm("w_up", xin, "gelu")
     if qcfg.enabled and qcfg.act_quant:
         h = qat.fake_quant_act(h)
-    return jnp.einsum("...f,fd->...d", h, w_of("w_down").astype(x.dtype))
+    return mm("w_down", h)
 
 
 # ------------------------------------------------------------------- blocks

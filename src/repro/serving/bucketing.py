@@ -62,8 +62,28 @@ class EngineConfig:
     # executable carries (0 -> max(1, max_batch // 2))
     chunk_buckets: Optional[Tuple[int, ...]] = None
     chunk_rows: int = 0
+    # packed-LUT serving: dispatch compressed plans to the fused 4-bit
+    # LUT GEMM (attention QKV/out, FFN, decode hot loop) instead of the
+    # fake-quant dense path. ``lut_use_ref=None`` resolves per backend
+    # (jnp oracle off-TPU, compiled Pallas on TPU); ``autotune_cache``
+    # names a JSON file of block-shape winners loaded at construction and
+    # saved after warmup so a warm restart never retunes.
+    lut_serve: bool = False
+    lut_use_ref: Optional[bool] = None
+    autotune_cache: Optional[str] = None
 
     def __post_init__(self):
+        if not isinstance(self.lut_serve, bool):
+            raise ValueError(f"EngineConfig.lut_serve must be a bool, "
+                             f"got {self.lut_serve!r}")
+        if self.lut_use_ref is not None \
+                and not isinstance(self.lut_use_ref, bool):
+            raise ValueError(f"EngineConfig.lut_use_ref must be None or a "
+                             f"bool, got {self.lut_use_ref!r}")
+        if self.autotune_cache is not None \
+                and not isinstance(self.autotune_cache, str):
+            raise ValueError(f"EngineConfig.autotune_cache must be None or a "
+                             f"path string, got {self.autotune_cache!r}")
         for name in ("max_batch", "max_waves", "q_block", "kv_block"):
             v = getattr(self, name)
             if not isinstance(v, int) or isinstance(v, bool) or v < 1:

@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
 import warnings
 from typing import Dict, List, Optional, Sequence, Union
@@ -217,8 +218,35 @@ class ServingEngine:
         self.plan = plan
         self.comp = plan.comp
         self.compress_k = int(plan.compress_k)
-        self.qcfg = QuantConfig.on() if plan.comp is not None \
-            else QuantConfig.off()
+        self.serve_units = 0
+        if plan.comp is None:
+            self.qcfg = QuantConfig.off()
+        elif config.lut_serve:
+            # Packed-LUT serving: attach real 4-bit serve artifacts to the
+            # plan's comp tree and dispatch eligible matmuls to the fused
+            # LUT GEMM. The plan fingerprint is already fixed (artifacts
+            # are derived content and excluded from comp hashing).
+            from repro.core.lm_compress import attach_serve_artifacts
+            from repro.kernels.lut_matmul.ops import default_interpret
+
+            use_ref = config.lut_use_ref
+            if use_ref is None:
+                use_ref = default_interpret()   # jnp oracle off-TPU
+            if config.autotune_cache:
+                from repro.kernels.lut_matmul.autotune import \
+                    get_default_autotuner
+                if os.path.exists(config.autotune_cache):
+                    get_default_autotuner().load(config.autotune_cache)
+            self.comp, self.serve_units = attach_serve_artifacts(
+                model, params, plan.comp)
+            if self.serve_units == 0:
+                raise ValueError(
+                    "lut_serve=True but no eligible unit in the plan's comp "
+                    "tree is 4-bit servable (every codebook needs "
+                    "0 < k <= 16)")
+            self.qcfg = QuantConfig.serve(use_ref_kernel=use_ref)
+        else:
+            self.qcfg = QuantConfig.on()
 
         self.mesh = mesh
         if mesh is not None:
@@ -388,6 +416,11 @@ class ServingEngine:
                 for rows in self.config.chunk_row_buckets:
                     self.cache.chunk_fns(size, rows, self.params)
         _ = self.per_token_energy_eu
+        if self.config.lut_serve and self.config.autotune_cache:
+            # persist block winners discovered while compiling, so a warm
+            # restart (or the CI cache) serves these shapes with zero retunes
+            from repro.kernels.lut_matmul.autotune import get_default_autotuner
+            get_default_autotuner().save(self.config.autotune_cache)
         return self.cache.stats()
 
     def _sample_row(self, row: np.ndarray, slot: Optional[_Slot]) -> int:

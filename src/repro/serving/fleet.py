@@ -69,6 +69,12 @@ def _hash_node(h, node) -> None:
         h.update(repr(node).encode())
     elif isinstance(node, dict):
         for k in sorted(node, key=str):
+            if k == "serve":
+                # packed ServeArtifacts (lm_compress.attach_serve_artifacts)
+                # are *derived* from the other leaves — hashing them would
+                # make a plan's identity depend on whether artifacts were
+                # attached yet
+                continue
             h.update(str(k).encode())
             _hash_node(h, node[k])
     elif isinstance(node, (list, tuple)):

@@ -1,0 +1,280 @@
+"""Fused LUT-GEMM serve kernels + roofline block autotuner.
+
+Covers the fused epilogue contract (Y = act(X @ dequant(packed) + bias) +
+residual as ONE kernel dispatch): parity vs the unfused oracle across
+activations, bias/residual combinations, non-divisible shapes (the M/N
+padding path) and pack-block-multiple ``block_k``; the ValueError shape
+diagnostics (formerly bare asserts that vanished under ``python -O``); the
+roofline autotuner's sweep space, model sanity and cache round-trip; and the
+serving integration — fused serve artifacts attached to an LM comp tree and
+the engine's ``lut_serve`` mode reproducing fake-quant tokens exactly.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.export import export_layer, serve_dense
+from repro.core import qat
+from repro.kernels.lut_matmul import autotune as at
+from repro.kernels.lut_matmul.lut_matmul import ACTIVATIONS, lut_matmul_pallas
+from repro.kernels.lut_matmul.ops import (
+    compress_layer_weights,
+    lut_matmul,
+    lut_matmul_fused,
+)
+from repro.kernels.lut_matmul.ref import lut_matmul_fused_ref, lut_matmul_ref
+
+VALUES = [-112, -80, -56, -40, -28, -16, -8, 0, 8, 16, 28, 40, 56, 80, 112,
+          127]
+
+
+def _problem(m, k, n, seed=0, pad_k=False):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (k, n)) * 0.05
+    packed, cb, scale = compress_layer_weights(w, VALUES, block_k=128,
+                                               pad_k=pad_k)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (m, 2 * packed.shape[0]))
+    bias = jax.random.normal(jax.random.fold_in(key, 2), (n,)) * 0.1
+    res = jax.random.normal(jax.random.fold_in(key, 3), (m, n))
+    return x, packed, cb, scale, bias, res
+
+
+def rel_err(got, want):
+    return float(jnp.linalg.norm(got - want)
+                 / jnp.maximum(jnp.linalg.norm(want), 1e-9))
+
+
+# ------------------------------------------------------------- fused epilogue
+
+
+@pytest.mark.parametrize("activation", sorted(ACTIVATIONS))
+@pytest.mark.parametrize("with_bias,with_res",
+                         [(False, False), (True, False), (True, True)])
+def test_fused_kernel_matches_fused_ref(activation, with_bias, with_res):
+    x, packed, cb, scale, bias, res = _problem(16, 256, 128)
+    kwargs = dict(bias=bias if with_bias else None,
+                  residual=res if with_res else None, activation=activation)
+    got = lut_matmul_pallas(x, packed, cb, scale, block_m=16, interpret=True,
+                            **kwargs)
+    want = lut_matmul_fused_ref(x, packed, cb, scale, **kwargs)
+    assert rel_err(got, want) < 1e-5
+
+
+def test_fused_epilogue_order_bias_act_then_residual():
+    """Epilogue contract: bias BEFORE the activation, residual AFTER it."""
+    x, packed, cb, scale, bias, res = _problem(8, 128, 128)
+    got = lut_matmul_fused(x, packed, cb, scale, bias=bias, residual=res,
+                           activation="relu", use_ref=True)
+    base = lut_matmul_ref(x, packed, cb, scale, block_k=128)
+    want = jax.nn.relu(base + bias) + res
+    assert rel_err(got, want) < 1e-6
+
+
+def test_fused_wrapper_pads_non_divisible_m_and_n():
+    # M=13, N=130: neither divides the 128 blocks -> padding path
+    x, packed, cb, scale, bias, res = _problem(13, 256, 130)
+    got = lut_matmul_fused(x, packed, cb, scale, bias=bias, residual=res,
+                           activation="gelu", block_m=128, block_n=128,
+                           block_k=128, interpret=True)
+    want = lut_matmul_fused_ref(x, packed, cb, scale, bias=bias, residual=res,
+                                activation="gelu")
+    assert got.shape == (13, 130)
+    assert rel_err(got, want) < 1e-5
+
+
+def test_fused_block_k_multiple_of_pack_block():
+    """The kernel may take block_k = any multiple of the export pack block."""
+    x, packed, cb, scale, bias, _ = _problem(16, 512, 128)
+    got = lut_matmul_pallas(x, packed, cb, scale, bias=bias,
+                            activation="silu", block_m=16, block_k=256,
+                            pack_block=128, interpret=True)
+    want = lut_matmul_fused_ref(x, packed, cb, scale, bias=bias,
+                                activation="silu")
+    assert rel_err(got, want) < 1e-5
+
+
+def test_compat_lut_matmul_unchanged():
+    x, packed, cb, scale, _, _ = _problem(32, 256, 128)
+    got = lut_matmul(x, packed, cb, scale, interpret=True)
+    want = lut_matmul_ref(x, packed, cb, scale, block_k=128)
+    assert rel_err(got, want) < 1e-5
+
+
+def test_serve_dense_fused_epilogue():
+    w = jax.random.normal(jax.random.PRNGKey(5), (192, 96)) * 0.04
+    comp = qat.identity_comp(w.shape)
+    comp["codebook"], comp["codebook_k"] = qat.make_codebook(VALUES)
+    art = export_layer(w, comp, kind="dense")
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 7, 192))
+    bias = jnp.linspace(-0.2, 0.2, 96)
+    res = jax.random.normal(jax.random.PRNGKey(7), (4, 7, 96))
+    got = serve_dense(x, art, bias=bias, residual=res, activation="relu",
+                      use_ref=True)
+    base = serve_dense(x, art, use_ref=True)
+    assert got.shape == (4, 7, 96)
+    assert rel_err(got, jax.nn.relu(base + bias) + res) < 1e-6
+
+
+# ------------------------------------------------- shape diagnostics (no -O)
+
+
+def test_bad_block_shapes_raise_value_error():
+    x, packed, cb, scale, bias, res = _problem(16, 256, 128)
+    with pytest.raises(ValueError, match="block_k"):
+        lut_matmul_pallas(x, packed, cb, scale, block_m=16, block_k=100,
+                          interpret=True)
+    with pytest.raises(ValueError, match="bias"):
+        lut_matmul_pallas(x, packed, cb, scale, block_m=16, bias=bias[:-1],
+                          interpret=True)
+    with pytest.raises(ValueError, match="residual"):
+        lut_matmul_pallas(x, packed, cb, scale, block_m=16,
+                          residual=res[:, :-1], interpret=True)
+    with pytest.raises(ValueError, match="activation"):
+        lut_matmul_pallas(x, packed, cb, scale, block_m=16,
+                          activation="tanh", interpret=True)
+    with pytest.raises(ValueError, match="pack_block"):
+        lut_matmul_fused(x[:, :200], packed, cb, scale, use_ref=True)
+
+
+# ------------------------------------------------------------------ autotuner
+
+
+def test_candidate_blocks_are_legal():
+    for bm, bn, bk in at.candidate_blocks(8, 1024, 512):
+        assert bk % 128 == 0 and 1024 % bk == 0
+        assert at.tile_vmem_bytes(bm, bn, bk) <= at.MachineBalance().vmem_bytes
+        assert bm <= 8   # M cap: padded M, sublane-aligned
+
+
+def test_roofline_prefers_wide_blocks_for_decode_shape():
+    """For M=8 decode GEMMs the model must beat the hand-picked 128-cube
+    (a (8, *, *) tile does strictly less padded work)."""
+    m, k, n = 8, 1024, 512
+    best = min(at.candidate_blocks(m, k, n),
+               key=lambda b: at.roofline_time(m, k, n, b))
+    assert best[0] == 8
+    assert at.roofline_time(m, k, n, best) \
+        < at.roofline_time(m, k, n, (128, 128, 128))
+
+
+def test_autotuner_cache_roundtrip_zero_retunes(tmp_path):
+    path = str(tmp_path / "cache.json")
+    shapes = [(8, 512, 256), (64, 512, 512)]
+    t1 = at.BlockAutotuner(path=path)
+    winners = {s: t1.best(*s, backend="test") for s in shapes}
+    assert t1.stats()["retune_events"] == len(shapes)
+    t1.save()
+
+    t2 = at.BlockAutotuner(path=path)   # loads at construction
+    for s in shapes:
+        assert t2.best(*s, backend="test") == winners[s]
+    st = t2.stats()
+    assert st["retune_events"] == 0 and st["hits"] == len(shapes)
+
+
+def test_autotuner_measure_refines_top_k(tmp_path):
+    calls = []
+
+    def measure(blocks):
+        calls.append(blocks)
+        return 0.0 if blocks == calls[0] else 1.0   # first candidate "wins"
+
+    t = at.BlockAutotuner()
+    best = t.best(8, 512, 256, backend="test", measure=measure, top_k=2)
+    assert len(calls) == 2 and best == calls[0]
+
+
+def test_default_autotuner_honors_env_cache(tmp_path, monkeypatch):
+    path = str(tmp_path / "env_cache.json")
+    t = at.BlockAutotuner(path=path)
+    t.best(8, 256, 128, backend=jax.default_backend())
+    t.save()
+    monkeypatch.setenv(at.ENV_CACHE_PATH, path)
+    at.reset_default_autotuner()
+    try:
+        d = at.get_default_autotuner()
+        d.best(8, 256, 128)
+        assert d.stats() == {**d.stats(), "retune_events": 0, "hits": 1}
+    finally:
+        at.reset_default_autotuner()
+
+
+def test_fingerprint_separates_backends_and_shapes():
+    fp = at.shape_fingerprint
+    base = fp(8, 512, 256, pack_block=128, backend="cpu")
+    assert base != fp(8, 512, 256, pack_block=128, backend="tpu")
+    assert base != fp(16, 512, 256, pack_block=128, backend="cpu")
+    assert base == fp(8, 512, 256, pack_block=128, backend="cpu")
+
+
+# ------------------------------------------------------- serving integration
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    from repro.configs import get_config
+    from repro.models.lm import build_lm
+    from repro.nn.spec import init_params
+
+    cfg = get_config("olmo-1b").scaled_down(compute_dtype="float32")
+    model = build_lm(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.spec)
+    return model, params
+
+
+def test_attach_serve_artifacts_preserves_fingerprint(tiny_lm):
+    from repro.core.lm_compress import attach_serve_artifacts
+    from repro.serving.fleet import PlanHandle, comp_fingerprint
+
+    model, params = tiny_lm
+    plan = PlanHandle.from_compress_k(model, 8)
+    comp_serve, n_units = attach_serve_artifacts(model, params, plan.comp)
+    assert n_units > 0
+    # artifacts are derived content: attaching them must not change identity
+    assert comp_fingerprint(comp_serve) == comp_fingerprint(plan.comp)
+
+
+def test_engine_lut_serve_matches_fake_quant(tiny_lm, tmp_path):
+    from repro.serving import EngineConfig, ServingEngine
+    from repro.serving.fleet import PlanHandle
+
+    model, params = tiny_lm
+    plan = PlanHandle.from_compress_k(model, 8)
+    cache = str(tmp_path / "autotune.json")
+    base = dict(max_batch=2, prompt_buckets=(8,), new_token_buckets=(8,),
+                max_waves=1)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, model.cfg.vocab, size=6).astype(np.int32)
+               for _ in range(2)]
+
+    def run(config):
+        eng = ServingEngine(model, params, mode="oneshot", config=config,
+                            plan=plan)
+        eng.warmup([(6, 4)])
+        rids = [eng.submit(p, new_tokens=4) for p in prompts]
+        eng.run()
+        return eng, [eng.result(r).tokens for r in rids]
+
+    eng_fq, toks_fq = run(EngineConfig(**base))
+    eng_lut, toks_lut = run(EngineConfig(**base, lut_serve=True,
+                                         autotune_cache=cache))
+    assert eng_lut.serve_units > 0
+    assert toks_lut == toks_fq          # token-for-token parity
+    assert os.path.exists(cache)        # winners persisted after warmup
+
+
+def test_engine_config_validates_lut_knobs():
+    from repro.serving import EngineConfig
+
+    with pytest.raises(ValueError, match="lut_serve"):
+        EngineConfig(lut_serve="yes")
+    with pytest.raises(ValueError, match="lut_use_ref"):
+        EngineConfig(lut_use_ref=1)
+    with pytest.raises(ValueError, match="autotune_cache"):
+        EngineConfig(autotune_cache=7)

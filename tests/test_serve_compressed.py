@@ -297,7 +297,7 @@ def test_pack_indices_rejects_bad_k():
 def test_lut_matmul_rejects_unpadded_k():
     x = jnp.zeros((8, 100))
     packed = jnp.zeros((50, 8), jnp.int8)
-    with pytest.raises(ValueError, match="multiple of block_k"):
+    with pytest.raises(ValueError, match="multiple of pack_block"):
         lut_matmul(x, packed, jnp.zeros((16,), jnp.int8), jnp.ones((8,)),
                    interpret=True)
 

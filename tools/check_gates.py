@@ -13,6 +13,15 @@ by name instead of a dead shell.
     PYTHONPATH=src python tools/check_gates.py --trajectory [--ci]
     PYTHONPATH=src python tools/check_gates.py --plan BASE [--ci]
     PYTHONPATH=src python tools/check_gates.py --cosim [--ci] [--skip-bench]
+    PYTHONPATH=src python tools/check_gates.py --kernels [--ci] [--skip-bench]
+
+``--kernels`` runs `benchmarks/bench_kernels.py` alone and gates the fused
+LUT-GEMM serve lane (the dedicated ``kernels`` CI job): oracle parity for
+the bare and fused-epilogue kernels, the 4-bit weight format's >= 3.5x
+compression vs bf16, the fused single-dispatch call beating the unfused
+serve + eager-epilogue sequence it replaced, and the roofline block
+autotuner's cache round-tripping with zero retune events. Summary:
+``benchmarks/out/kernels_summary.json``.
 
 ``--cosim`` runs `benchmarks/bench_cosim.py` and gates bit-exact agreement
 between the transition-energy kernel's histograms and the independent
@@ -85,6 +94,10 @@ GATES = [
      "serve_weight_compression_vs_bf16", ">=", 3.5, False),
     ("serve_vs_dense_throughput", "bench_kernels",
      "serve_vs_dense_throughput", ">=", 0.05, True),
+    ("serve_fused_epilogue_parity", "bench_kernels", "serve_fused_rel_err",
+     "<", 2e-2, False),
+    ("serve_fused_vs_unfused", "bench_kernels", "serve_fused_vs_unfused",
+     ">=", 1.0, True),
     ("schedule_sweep_speedup_batched_vs_serial", "bench_schedule",
      "sweep_speedup_batched_vs_serial", ">=", 3.0, True),
     ("schedule_sweep_decisions_match", "bench_schedule", "decisions_match",
@@ -101,6 +114,32 @@ GATES = [
      "parity_engine_vs_oneshot", "==", True, False),
     ("serving_parity_slot_vs_wave", "bench_serving",
      "parity_slot_vs_wave", "==", True, False),
+]
+
+# kernel gates for `--kernels` (the dedicated CI kernel lane): the fused
+# LUT-GEMM serve path must match its oracle, keep the 4-bit weight format's
+# >= 3.5x compression vs bf16, beat the unfused serve + eager-epilogue
+# dispatch it replaced (timing gate, CI slack applies), and the roofline
+# block autotuner's cache must round-trip with zero retune events while
+# never preferring a tile its own model scores worse than the 128-cube
+# default. Runs bench_kernels only; summary: benchmarks/out/
+# kernels_summary.json.
+KERNEL_GATES = [
+    ("kernel_lut_parity", "bench_kernels", "lut_rel_err", "<", 2e-2, False),
+    ("kernel_all_within_tolerance", "bench_kernels", "all_within_tolerance",
+     "==", True, False),
+    ("kernel_fused_epilogue_parity", "bench_kernels", "serve_fused_rel_err",
+     "<", 2e-2, False),
+    ("kernel_serve_parity", "bench_kernels", "serve_forward_rel_err",
+     "<", 2e-2, False),
+    ("kernel_weight_compression_vs_bf16", "bench_kernels",
+     "serve_weight_compression_vs_bf16", ">=", 3.5, False),
+    ("kernel_fused_vs_unfused", "bench_kernels", "serve_fused_vs_unfused",
+     ">=", 1.0, True),
+    ("kernel_autotune_roundtrip_retunes", "bench_kernels",
+     "autotune_cache_roundtrip_retunes", "==", 0, False),
+    ("kernel_autotune_model_sane", "bench_kernels", "autotune_model_sane",
+     "==", True, False),
 ]
 
 # bit-accuracy gates for `--cosim`: the transition-energy kernel's MSB-group
@@ -255,6 +294,17 @@ def check_plan(base: str, ci: bool = False) -> int:
     return report(summary, ci, "plan_summary.json")
 
 
+def check_kernels(ci: bool = False, skip_bench: bool = False) -> int:
+    """Run the kernel microbenchmarks and gate the fused LUT-GEMM lane."""
+    if not skip_bench:
+        from benchmarks import bench_kernels
+
+        print("== bench_kernels ==", flush=True)
+        bench_kernels.run()
+    return report(evaluate(ci=ci, gates=KERNEL_GATES), ci,
+                  "kernels_summary.json")
+
+
 def check_cosim(ci: bool = False, skip_bench: bool = False) -> int:
     """Run the cosim verification benchmark and gate bit-exactness + MSR."""
     if not skip_bench:
@@ -328,6 +378,12 @@ def main(argv=None) -> int:
     ap.add_argument("--plan", default=None, metavar="BASE",
                     help="validate a saved CompressionPlan document "
                          "(BASE.json) instead of running benchmarks")
+    ap.add_argument("--kernels", action="store_true",
+                    help="run the kernel microbenchmarks only and gate the "
+                         "fused LUT-GEMM serve lane: oracle parity, >= 3.5x "
+                         "weight compression vs bf16, fused beats unfused, "
+                         "and autotune cache round-trip with zero retunes "
+                         "(writes kernels_summary.json)")
     ap.add_argument("--cosim", action="store_true",
                     help="run the bit-accurate cosim verification benchmark "
                          "and gate kernel-vs-cosim histogram exactness plus "
@@ -342,6 +398,8 @@ def main(argv=None) -> int:
 
     if args.plan:
         return check_plan(args.plan, ci=args.ci)
+    if args.kernels:
+        return check_kernels(ci=args.ci, skip_bench=args.skip_bench)
     if args.cosim:
         return check_cosim(ci=args.ci, skip_bench=args.skip_bench)
     if args.fleet:

@@ -61,7 +61,7 @@ fi
 if [[ "$FAST" == 1 ]]; then
   echo "== tier-1 tests (fast subset) =="
   python -m pytest "${PYTEST_ARGS[@]}" ${COV_ARGS[@]+"${COV_ARGS[@]}"} \
-    tests/test_kernels.py \
+    tests/test_kernels.py tests/test_lut_fused.py \
     tests/test_core_energy.py tests/test_profiler.py \
     tests/test_serve_compressed.py tests/test_schedule_batched.py \
     tests/test_serving_engine.py tests/test_fleet.py \
@@ -78,6 +78,12 @@ if [[ "$CI" == 1 ]]; then
   GATE_ARGS+=(--ci)
 fi
 python tools/check_gates.py ${GATE_ARGS[@]+"${GATE_ARGS[@]}"}
+
+echo "== kernel gates =="
+# re-gates the bench_kernels.json the main pass just produced (the dedicated
+# CI kernels job runs the same table standalone with --kernels, no --skip)
+python tools/check_gates.py --kernels --skip-bench \
+  ${GATE_ARGS[@]+"${GATE_ARGS[@]}"}
 
 echo "== bench trajectory gates =="
 python tools/check_gates.py --trajectory ${GATE_ARGS[@]+"${GATE_ARGS[@]}"}
