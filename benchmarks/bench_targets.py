@@ -1,0 +1,94 @@
+"""Routing-aware compression target benchmark: MoE + scan smoke gate.
+
+Runs the two routed reduced pipelines end-to-end through export —
+``repro.pipeline.targets.MoETarget`` on the reduced phi3.5-MoE config and
+``ScanTarget`` on the reduced mamba2 config — and derives the keys gated by
+``tools/check_gates.py --targets``:
+
+* ``targets_{moe,scan}_parity_rel_err`` — the exported per-expert /
+  per-scan-unit LUT-GEMM artifacts must match the fake-quant matmul on
+  random activations (`repro.core.lm_compress.lut_parity_report` inside the
+  export stage). This is the compressed-vs-dense serving parity: the same
+  artifacts the serve stage dispatches on.
+* ``targets_{moe,scan}_energy_reduction`` — traffic-weighted per-token
+  energy must drop by the documented floor once the k-ladder assignment is
+  applied over the uniform codebook floor.
+* ``targets_{moe,scan}_hotcold_monotone`` — within every routed group
+  (experts of one MoE layer; layers of one scan unit) a higher measured
+  traffic share must never get a smaller codebook than a lower one.
+* ``targets_{moe,scan}_routed_units`` / ``targets_{moe,scan}_export_skipped``
+  — the routed slice count matches the architecture and nothing silently
+  drops out of the export (the skip report must be empty).
+
+Deterministic: the calibration trace, routing counts and energy model are
+all seeded; no timing-sensitive keys, so no CI slack applies.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from benchmarks.common import emit
+
+
+def _monotone(pairs: List[Tuple[float, int]]) -> bool:
+    """share_i > share_j must imply k_i >= k_j within one routed group."""
+    for s1, k1 in pairs:
+        for s2, k2 in pairs:
+            if s1 > s2 and k1 < k2:
+                return False
+    return True
+
+
+def _run_target(tag: str, make_cfg) -> Dict:
+    from repro.pipeline.pipeline import Pipeline
+    from repro.pipeline.targets import _slice_key
+
+    pipe = Pipeline(make_cfg())
+    plan = pipe.run_until("export", verbose=False)
+    m = plan.metrics
+
+    routed = [d for d in plan.decisions if "traffic_share" in d]
+    groups: Dict[Tuple, List[Tuple[float, int]]] = {}
+    for d in routed:
+        path, li, ei = _slice_key(d["layer"])
+        key = (path, li) if ei is not None else (path,)
+        groups.setdefault(key, []).append(
+            (float(d["traffic_share"]), int(d["k"])))
+    e_before = float(m["energy_before"])
+    e_after = float(m["energy_after"])
+    return {
+        f"targets_{tag}_parity_rel_err": float(m["export_parity_max_rel_err"]),
+        f"targets_{tag}_energy_reduction":
+            1.0 - e_after / max(e_before, 1e-12),
+        f"targets_{tag}_hotcold_monotone":
+            bool(groups) and all(_monotone(g) for g in groups.values()),
+        f"targets_{tag}_routed_units": len(routed),
+        f"targets_{tag}_export_skipped": int(m["export_skipped"]),
+        f"targets_{tag}_routing_tokens": int(m["routing_tokens"]),
+    }
+
+
+def run():
+    from repro.pipeline.config import reduced_moe_config, reduced_scan_config
+
+    t0 = time.time()
+    rows = []
+    derived: Dict = {}
+    for tag, make_cfg in (("moe", reduced_moe_config),
+                          ("scan", reduced_scan_config)):
+        res = _run_target(tag, make_cfg)
+        derived.update(res)
+        rows.append({"bench": "targets", "target": tag, **res})
+        print(f"  targets {tag}: parity="
+              f"{res[f'targets_{tag}_parity_rel_err']:.2e} "
+              f"energy_reduction="
+              f"{res[f'targets_{tag}_energy_reduction']:.3f} "
+              f"monotone={res[f'targets_{tag}_hotcold_monotone']} "
+              f"routed={res[f'targets_{tag}_routed_units']}", flush=True)
+    return emit("bench_targets", t0, rows, derived)
+
+
+if __name__ == "__main__":
+    run()

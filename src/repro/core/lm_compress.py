@@ -39,6 +39,18 @@ ELIGIBLE: Dict[str, Tuple[str, ...]] = {
     "rglru": ("in_proj", "gate_proj", "w_a", "w_x", "out_proj"),
 }
 
+# expert-batched MoE tensors carry a leading expert axis and get *per-expert*
+# codebooks/k (hot experts gentler, cold aggressive — repro.core.routing_stats
+# supplies the traffic prior). Identified by (sub == "moe", key) — the "mlp"
+# sub reuses the same key names for plain 2-D matrices.
+MOE_EXPERT_KEYS: Tuple[str, ...] = ("w_gate", "w_up", "w_down")
+
+
+def is_expert_unit(unit: str) -> bool:
+    """True for 'moe/w_gate'-style expert-batched units ('sub/key' form)."""
+    sub, key = unit.split("/")
+    return sub == "moe" and key in MOE_EXPERT_KEYS
+
 
 def _block_comp_spec(block_spec: dict) -> dict:
     """{'attn/wq': comp-spec-dict} for one (possibly stacked) block spec."""
@@ -50,17 +62,21 @@ def _block_comp_spec(block_spec: dict) -> dict:
             if key not in block_spec[sub]:
                 continue
             p: ParamSpec = block_spec[sub][key]
-            stacked = p.axes and p.axes[0] == "layers"
-            cb_shape = (p.shape[0], qat.K_MAX) if stacked else (qat.K_MAX,)
-            k_shape = (p.shape[0],) if stacked else ()
+            stacked = bool(p.axes and p.axes[0] == "layers")
+            if sub == "moe" and key in MOE_EXPERT_KEYS:
+                # leading (layers?, expert) axes: one codebook per expert
+                lead = p.shape[:2] if stacked else p.shape[:1]
+                lead_axes = ("layers", "expert") if stacked else ("expert",)
+            else:
+                lead = (p.shape[0],) if stacked else ()
+                lead_axes = ("layers",) if stacked else ()
             out[f"{sub}/{key}"] = {
                 "mask": ParamSpec(p.shape, jnp.int8, p.axes,
                                   lambda k, s, t: jnp.ones(s, t)),
-                "codebook": ParamSpec(cb_shape, jnp.int32,
-                                      ("layers", None) if stacked else (None,),
+                "codebook": ParamSpec((*lead, qat.K_MAX), jnp.int32,
+                                      (*lead_axes, None),
                                       lambda k, s, t: jnp.zeros(s, t)),
-                "codebook_k": ParamSpec(k_shape, jnp.int32,
-                                        ("layers",) if stacked else (),
+                "codebook_k": ParamSpec(lead, jnp.int32, lead_axes,
                                         lambda k, s, t: jnp.zeros(s, t)),
             }
     return out
@@ -116,9 +132,10 @@ _SERVE_LAYOUTS: Dict[str, str] = {
 def _serve_layout(key: str, ndim: int) -> Optional[str]:
     """Layout for the 4-bit LUT GEMM; None = not servable as one matmul.
 
-    Per-expert MoE tensors (expert-batched matmuls sharing one quant scale
-    across experts) are excluded: slicing them per expert would change the
-    scale semantics vs training. They stay on the fake-quant path.
+    Expert-batched MoE tensors never reach this table: the unit walkers
+    slice them per (scan layer, expert) into plain 2-D matrices first, each
+    carrying its own codebook and per-output-channel scale — the same
+    semantics the per-expert vmapped fake-quant uses in training.
     """
     if ndim == 2:
         return "out_last"
@@ -127,7 +144,22 @@ def _serve_layout(key: str, ndim: int) -> Optional[str]:
     return None
 
 
-def iter_eligible_units(model: LMModel, params: dict, comp: Optional[dict] = None):
+def _slice_comp(c: Optional[dict], idx: tuple) -> Optional[dict]:
+    """Per-slice comp entry for one (layer[, expert]) slice of a unit."""
+    if c is None:
+        return None
+    out = {"mask": c["mask"][idx], "codebook": c["codebook"][idx],
+           "codebook_k": c["codebook_k"][idx]}
+    if "msr_bits" in c:
+        mb = c["msr_bits"]
+        # msr_bits is scalar or per-scan-layer; never per-expert
+        out["msr_bits"] = mb if jnp.ndim(mb) == 0 else mb[idx[0]]
+    return out
+
+
+def iter_eligible_units(model: LMModel, params: dict,
+                        comp: Optional[dict] = None, *,
+                        include_skipped: bool = False):
     """Yield (name, weight, comp_entry_or_None, layout) for every eligible
     matmul the serving engine treats as one (K, N) GEMM, regardless of
     restriction state.
@@ -135,9 +167,13 @@ def iter_eligible_units(model: LMModel, params: dict, comp: Optional[dict] = Non
     Stacked (scanned) units are yielded per scan layer — the scan applies
     fake-quant to per-layer slices, so each slice exports independently with
     its own scale, exactly matching the training semantics. Names follow
-    ``blocks/g0/attn/wq[3]`` for layer 3 of a stack. With ``comp=None`` the
-    comp entries are None (used by serve-time energy accounting, which
-    charges the unrestricted int8 histogram).
+    ``blocks/g0/attn/wq[3]`` for layer 3 of a stack. Expert-batched MoE units
+    additionally slice per expert (``blocks/g0/moe/w_gate[3][e2]``), matching
+    the per-expert vmapped fake-quant. With ``comp=None`` the comp entries
+    are None (used by serve-time energy accounting, which charges the
+    unrestricted int8 histogram). With ``include_skipped``, units that have
+    no serving layout are yielded once (unsliced) with ``layout=None``
+    instead of being silently dropped.
     """
     spec = make_lm_comp_spec(model)
     for top, groups in spec.items():
@@ -148,28 +184,37 @@ def iter_eligible_units(model: LMModel, params: dict, comp: Optional[dict] = Non
                 sub, key = unit.split("/")
                 node_p = params[top] if g is None else params[top][g]
                 w = node_p[sub][key]
-                if comp is None:
-                    c = None
-                    stacked = (spec[top][unit] if g is None
-                               else spec[top][g][unit])["codebook"].shape != (qat.K_MAX,)
-                else:
+                spec_entry = (spec[top][unit] if g is None
+                              else spec[top][g][unit])
+                stacked = bool(spec_entry["mask"].axes
+                               and spec_entry["mask"].axes[0] == "layers")
+                c = None
+                if comp is not None:
                     node_c = comp[top] if g is None else comp[top][g]
                     c = node_c[unit]
-                    stacked = c["codebook"].ndim == 2
                 base = f"{top}/{g}/{unit}" if g is not None else f"{top}/{unit}"
-                if stacked:
+                if is_expert_unit(unit):
+                    if stacked:
+                        for li in range(w.shape[0]):
+                            for ei in range(w.shape[1]):
+                                yield (f"{base}[{li}][e{ei}]", w[li, ei],
+                                       _slice_comp(c, (li, ei)), "out_last")
+                    else:
+                        for ei in range(w.shape[0]):
+                            yield (f"{base}[e{ei}]", w[ei],
+                                   _slice_comp(c, (ei,)), "out_last")
+                elif stacked:
                     layout = _serve_layout(key, w.ndim - 1)
                     if layout is None:
+                        if include_skipped:
+                            yield base, w, c, None
                         continue
                     for li in range(w.shape[0]):
-                        c_l = None if c is None else {
-                            "mask": c["mask"][li],
-                            "codebook": c["codebook"][li],
-                            "codebook_k": c["codebook_k"][li]}
-                        yield f"{base}[{li}]", w[li], c_l, layout
+                        yield (f"{base}[{li}]", w[li],
+                               _slice_comp(c, (li,)), layout)
                 else:
                     layout = _serve_layout(key, w.ndim)
-                    if layout is not None:
+                    if layout is not None or include_skipped:
                         yield base, w, c, layout
 
 
@@ -184,22 +229,42 @@ def iter_restricted_units(model: LMModel, params: dict, comp: dict):
 
 
 def export_lm_matmuls(model: LMModel, params: dict, comp: dict, *,
-                      block_k: int = 128, limit: Optional[int] = None) -> Dict:
+                      block_k: int = 128, limit: Optional[int] = None
+                      ) -> Tuple[Dict, List[Dict[str, str]]]:
     """Export every restricted eligible LM matmul to a `ServeArtifact`.
 
-    Returns {unit_name: ServeArtifact}; `repro.core.export.serve_dense`
-    runs any of them (x flattened over leading axes, outputs reshaped by the
-    caller per the unit's einsum).
+    Returns ``({unit_name: ServeArtifact}, skip_report)``;
+    `repro.core.export.serve_dense` runs any of the artifacts (x flattened
+    over leading axes, outputs reshaped by the caller per the unit's einsum).
+    The skip report lists every eligible unit that did *not* export, as
+    ``{"unit", "reason", "detail"}`` with reason one of ``no_layout``
+    (no single-GEMM serving layout for the tensor rank),
+    ``inactive_codebook`` (restriction never applied, codebook_k == 0) and
+    ``codebook_too_large`` (k exceeds the 16-entry LUT hardware codebook) —
+    nothing is dropped silently.
     """
     from repro.core import export as _export
 
-    out = {}
-    for name, w, c, layout in iter_restricted_units(model, params, comp):
+    out: Dict = {}
+    skips: List[Dict[str, str]] = []
+    for name, w, c, layout in iter_eligible_units(model, params, comp,
+                                                  include_skipped=True):
+        if layout is None:
+            skips.append({"unit": name, "reason": "no_layout",
+                          "detail": f"rank-{w.ndim} tensor has no serving "
+                                    "layout"})
+            continue
+        k = 0 if c is None else int(c["codebook_k"])
+        if not (c is not None and _export.servable(c)):
+            reason = "inactive_codebook" if k <= 0 else "codebook_too_large"
+            skips.append({"unit": name, "reason": reason,
+                          "detail": f"codebook_k={k}"})
+            continue
         out[name] = _export.export_layer(w, c, kind="dense", layout=layout,
                                          block_k=block_k)
         if limit is not None and len(out) >= limit:
             break
-    return out
+    return out, skips
 
 
 def attach_serve_artifacts(model: LMModel, params: dict, comp: dict, *,
@@ -208,42 +273,55 @@ def attach_serve_artifacts(model: LMModel, params: dict, comp: dict, *,
 
     Every servable eligible unit gains a ``"serve"`` key in its comp entry
     holding the packed 4-bit form of its weight; `QuantConfig.serve` forwards
-    (attention `_project`, FFN `mm`, dense/conv layers) dispatch on that key
-    to the fused LUT GEMM. Stacked (scanned) units export per scan layer —
-    each layer keeps its own scale/codebook, exactly matching the per-slice
-    fake-quant semantics — and the slices are stacked leaf-wise, so the
-    artifact rides ``lax.scan`` xs and `jax.tree.map` layer slicing like
-    every other comp leaf. Units that are not servable (inactive or >16-value
-    codebooks, undefined layouts, MoE experts) keep their entries unchanged
-    and fall back to fake-quant per unit.
+    (attention `_project`, FFN `mm`, MoE expert/shared matmuls, scan-mixer
+    projections, dense/conv layers) dispatch on that key to the fused LUT
+    GEMM. Stacked (scanned) units export per scan layer — each layer keeps
+    its own scale/codebook, exactly matching the per-slice fake-quant
+    semantics — and the slices are stacked leaf-wise, so the artifact rides
+    ``lax.scan`` xs and `jax.tree.map` layer slicing like every other comp
+    leaf. Expert-batched MoE units additionally export per expert and stack
+    the artifacts over the expert axis (`nn.moe` slices them back per expert
+    at dispatch). Units that are not servable (inactive or >16-value
+    codebooks, undefined layouts) keep their entries unchanged and fall back
+    to fake-quant per unit.
 
     The ``"serve"`` key is derived content: `comp_fingerprint` skips it, so
     attaching artifacts never changes a plan's identity.
     """
     from repro.core import export as _export
 
-    def export_stacked(w, c, key):
-        layout = _serve_layout(key, w.ndim - 1)
-        if layout is None:
-            return None
+    def all_servable(c) -> bool:
         from repro.kernels.lut_matmul.ops import N_CODES
 
         ks = jnp.asarray(c["codebook_k"]).reshape(-1)
-        if not bool(jnp.all((ks > 0) & (ks <= N_CODES))):
+        return bool(jnp.all((ks > 0) & (ks <= N_CODES)))
+
+    def stack_arts(slices):
+        if any(s is None for s in slices):
             return None
-        slices = []
-        for li in range(w.shape[0]):
-            c_l = {"mask": c["mask"][li], "codebook": c["codebook"][li],
-                   "codebook_k": c["codebook_k"][li]}
-            if "msr_bits" in c:
-                mb = c["msr_bits"]
-                c_l["msr_bits"] = mb if jnp.ndim(mb) == 0 else mb[li]
-            art = _export.export_layer(w[li], c_l, kind="dense",
-                                       layout=layout, block_k=block_k)
-            if art is None:
-                return None
-            slices.append(art)
         return jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+
+    def export_slice(w, c, idx, layout):
+        return _export.export_layer(w[idx], _slice_comp(c, idx), kind="dense",
+                                    layout=layout, block_k=block_k)
+
+    def export_stacked(w, c, key):
+        layout = _serve_layout(key, w.ndim - 1)
+        if layout is None or not all_servable(c):
+            return None
+        return stack_arts([export_slice(w, c, (li,), layout)
+                           for li in range(w.shape[0])])
+
+    def export_expert(w, c, stacked):
+        if not all_servable(c):
+            return None
+        if stacked:
+            rows = [stack_arts([export_slice(w, c, (li, ei), "out_last")
+                                for ei in range(w.shape[1])])
+                    for li in range(w.shape[0])]
+            return stack_arts(rows)
+        return stack_arts([export_slice(w, c, (ei,), "out_last")
+                           for ei in range(w.shape[0])])
 
     def attach_entries(node_p, entries):
         new, n = {}, 0
@@ -251,7 +329,9 @@ def attach_serve_artifacts(model: LMModel, params: dict, comp: dict, *,
             sub, key = unit.split("/")
             w = node_p[sub][key]
             entry = {k: v for k, v in c.items() if k != "serve"}
-            if c["codebook"].ndim == 2:          # stacked over scan layers
+            if is_expert_unit(unit):
+                art = export_expert(w, c, stacked=c["codebook"].ndim == 3)
+            elif c["codebook"].ndim == 2:        # stacked over scan layers
                 art = export_stacked(w, c, key)
             else:
                 layout = _serve_layout(key, w.ndim)
@@ -331,35 +411,47 @@ def restrict_all_codebooks(model: LMModel, comp: dict, values) -> dict:
     return comp
 
 
-def set_codebook(comp: dict, path: str, values, layer: Optional[int] = None) -> dict:
+def set_codebook(comp: dict, path: str, values, layer: Optional[int] = None,
+                 expert: Optional[int] = None) -> dict:
     """Functional codebook update for unit `path` ('blocks/g0/mlp/w_down').
 
-    For stacked (scanned) units, `layer` selects the repeat index; None
-    applies the same codebook to every layer of the stack.
+    For stacked (scanned) units, `layer` selects the repeat index; for
+    expert-batched MoE units, `expert` selects the expert. A None index
+    broadcasts the codebook over that whole axis.
     """
     cb, k = qat.make_codebook(values)
     parts = path.split("/")
     unit = "/".join(parts[-2:])
     node_path = parts[:-2]
 
+    def set_entry(entry):
+        lead = entry["codebook"].shape[:-1]  # () | (L,) | (E,) | (L, E)
+        if len(lead) == 2:
+            idx: Tuple[Optional[int], ...] = (layer, expert)
+        elif len(lead) == 1:
+            idx = (expert,) if is_expert_unit(unit) else (layer,)
+        else:
+            entry["codebook"] = cb
+            entry["codebook_k"] = jnp.asarray(k)
+            return entry
+        if all(i is None for i in idx):
+            entry["codebook"] = jnp.broadcast_to(
+                cb, entry["codebook"].shape).copy()
+            entry["codebook_k"] = jnp.full_like(entry["codebook_k"], k)
+        elif len(idx) == 2 and idx[0] is None:   # every layer, one expert
+            entry["codebook"] = entry["codebook"].at[:, idx[1]].set(cb)
+            entry["codebook_k"] = entry["codebook_k"].at[:, idx[1]].set(k)
+        else:
+            ii = tuple(i for i in idx if i is not None)  # full or row index
+            entry["codebook"] = entry["codebook"].at[ii].set(cb)
+            entry["codebook_k"] = entry["codebook_k"].at[ii].set(k)
+        return entry
+
     def update(tree, keys):
-        if not keys:
-            entry = dict(tree[unit])
-            if entry["codebook"].ndim == 2:  # stacked
-                if layer is None:
-                    entry["codebook"] = jnp.broadcast_to(
-                        cb, entry["codebook"].shape).copy()
-                    entry["codebook_k"] = jnp.full_like(entry["codebook_k"], k)
-                else:
-                    entry["codebook"] = entry["codebook"].at[layer].set(cb)
-                    entry["codebook_k"] = entry["codebook_k"].at[layer].set(k)
-            else:
-                entry["codebook"] = cb
-                entry["codebook_k"] = jnp.asarray(k)
-            out = dict(tree)
-            out[unit] = entry
-            return out
         out = dict(tree)
+        if not keys:
+            out[unit] = set_entry(dict(tree[unit]))
+            return out
         out[keys[0]] = update(tree[keys[0]], keys[1:])
         return out
 

@@ -1,0 +1,261 @@
+"""Routing/activity profiling for traffic-weighted unit compression.
+
+The paper's schedule compresses high-energy layers more aggressively; for
+MoE and recurrent-scan workloads the relevant energy prior is not the layer
+position but the *measured traffic* through each unit: how often the router
+dispatches tokens to an expert, and how much signal flows through each scan
+layer. This module collects those statistics from calibration traces and
+turns them into per-unit compression aggressiveness (hot experts keep
+gentler codebooks, cold experts compress hard).
+
+Mechanics: the mixer/FFN kernels (`nn.moe`, `nn.ssm`, `nn.rglru`) emit one
+event per call through a collector contextvar — a no-op unless profiling is
+active. `collect_lm_routing_stats` drives `LMModel.prefill` *eagerly* (the
+prefill path unrolls blocks per layer, so events arrive as concrete arrays
+in deterministic call order) and maps the event stream back onto named comp
+units ("blocks/g0/moe", layer index within the stack).
+
+Everything downstream is plain numpy: traffic shares normalize per layer,
+and `assign_rank_k` buckets units by traffic rank onto a k ladder sorted
+gentle->aggressive, which makes hot-gentler/cold-aggressive monotone by
+construction.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Collector signature: fn(kind, name, value) with kind in
+# {"moe", "ssm", "rglru"}, name the block-local comp prefix (e.g. "moe"),
+# and value a per-call statistic ((E,) kept-dispatch counts for MoE, scalar
+# mean-square activation for scan mixers). Only set this around *eager*
+# model calls — under jit/scan the events would be tracers in traced order.
+_COLLECTOR: contextvars.ContextVar[Optional[Callable]] = \
+    contextvars.ContextVar("routing_stats_collector", default=None)
+
+
+def get_collector() -> Optional[Callable]:
+    return _COLLECTOR.get()
+
+
+def set_collector(fn: Optional[Callable]):
+    """Returns a contextvars token; reset with the token when done."""
+    return _COLLECTOR.set(fn)
+
+
+@contextlib.contextmanager
+def collecting(fn: Callable):
+    token = set_collector(fn)
+    try:
+        yield
+    finally:
+        _COLLECTOR.reset(token)
+
+
+# ------------------------------------------------------------------ stats
+
+
+@dataclasses.dataclass
+class RoutingStats:
+    """Accumulated calibration statistics, keyed by comp-unit base path.
+
+    ``moe_counts["blocks/g0/moe"]`` is a (n_layers_in_stack, E) float64 array
+    of kept-dispatch token counts (capacity-dropped tokens excluded — they
+    never reach the expert matmuls, so they cost no expert energy).
+    ``scan_activity["blocks/g0/ssm"]`` is (n_layers_in_stack,) mean-square
+    pre-mixer activation, one entry per scan layer. Tail (unstacked) units
+    get a leading layer axis of 1.
+    """
+    moe_counts: Dict[str, np.ndarray]
+    scan_activity: Dict[str, np.ndarray]
+    tokens: int    # total calibration tokens seen (batches * batch * seq)
+
+    def as_arrays(self) -> Dict[str, np.ndarray]:
+        """Flat {key: array} form that round-trips through plan npz stores."""
+        out = {f"moe:{k}": v for k, v in self.moe_counts.items()}
+        out.update({f"scan:{k}": v for k, v in self.scan_activity.items()})
+        out["tokens"] = np.asarray(self.tokens, np.int64)
+        return out
+
+    @classmethod
+    def from_arrays(cls, arrays: Dict[str, np.ndarray]) -> "RoutingStats":
+        moe = {k[len("moe:"):]: np.asarray(v) for k, v in arrays.items()
+               if k.startswith("moe:")}
+        scan = {k[len("scan:"):]: np.asarray(v) for k, v in arrays.items()
+                if k.startswith("scan:")}
+        return cls(moe_counts=moe, scan_activity=scan,
+                   tokens=int(np.asarray(arrays.get("tokens", 0))))
+
+
+def _block_stat_kind(cfg, block_type: str) -> Optional[str]:
+    """Which event (if any) one block of this type emits per forward call."""
+    if block_type in ("attn", "local") and cfg.is_moe:
+        return "moe"
+    if block_type in ("ssm", "rglru"):
+        return block_type
+    return None
+
+
+def expected_units(model) -> List[Tuple[str, str, Optional[int]]]:
+    """Event schedule of one eager prefill: (unit_base, kind, layer_index).
+
+    Mirrors `LMModel.prefill`'s unrolled walk: repeats outer, pattern inner,
+    then tail blocks. layer_index is the repeat index within the stacked
+    group (None for tail units, stored as layer 0).
+    """
+    cfg = model.cfg
+    out: List[Tuple[str, str, Optional[int]]] = []
+    for r in range(model.n_rep):
+        for i, bt in enumerate(cfg.pattern):
+            kind = _block_stat_kind(cfg, bt)
+            if kind is not None:
+                out.append((f"blocks/g{i}/{kind}", kind, r))
+    for j in range(model.n_tail):
+        kind = _block_stat_kind(cfg, cfg.pattern[j])
+        if kind is not None:
+            out.append((f"tail/t{j}/{kind}", kind, None))
+    return out
+
+
+def calibration_batches(vocab: int, batches: int, batch_size: int,
+                        seq_len: int, seed: int):
+    """Deterministic synthetic token batches for routing calibration."""
+    key = jax.random.PRNGKey(seed)
+    for i in range(batches):
+        yield jax.random.randint(jax.random.fold_in(key, i),
+                                 (batch_size, seq_len), 0, vocab, jnp.int32)
+
+
+def collect_lm_routing_stats(model, params, *, comp=None, qcfg=None,
+                             batches: int = 2, batch_size: int = 2,
+                             seq_len: int = 32, seed: int = 0) -> RoutingStats:
+    """Profile routing/activity over synthetic calibration traces.
+
+    Runs `model.prefill` eagerly per batch under an event collector and
+    accumulates per-unit statistics. Deterministic for a fixed seed: the
+    token batches come from a fixed PRNG chain and dispatch itself has no
+    stochastic component.
+    """
+    if qcfg is None:
+        from repro.nn.layers import QuantConfig
+        qcfg = QuantConfig.off()
+
+    schedule = expected_units(model)
+    if not schedule:
+        raise ValueError(
+            f"arch {model.cfg.name!r} has no MoE or scan units to profile")
+
+    n_rep = max(model.n_rep, 1)
+    moe_counts: Dict[str, np.ndarray] = {}
+    scan_sums: Dict[str, np.ndarray] = {}
+    n_calls = 0
+
+    events: List[Tuple[str, str, np.ndarray]] = []
+
+    def on_event(kind, name, value):
+        events.append((kind, name, np.asarray(jax.device_get(value),
+                                              np.float64)))
+
+    tokens_total = 0
+    for toks in calibration_batches(model.cfg.vocab, batches, batch_size,
+                                    seq_len, seed):
+        events.clear()
+        with collecting(on_event):
+            model.prefill(params, toks, max_len=int(toks.shape[1]),
+                          qcfg=qcfg, comp=comp)
+        if len(events) != len(schedule):
+            raise RuntimeError(
+                f"routing collector saw {len(events)} events, expected "
+                f"{len(schedule)} — was prefill traced instead of eager?")
+        for (unit, kind, li), (ev_kind, _name, value) in zip(schedule, events):
+            if ev_kind != kind:
+                raise RuntimeError(
+                    f"event kind mismatch at {unit}: got {ev_kind}")
+            row = 0 if li is None else li
+            n_layers = 1 if li is None else n_rep
+            if kind == "moe":
+                acc = moe_counts.setdefault(
+                    unit, np.zeros((n_layers, value.shape[-1]), np.float64))
+                acc[row] += value
+            else:
+                acc = scan_sums.setdefault(unit,
+                                           np.zeros((n_layers,), np.float64))
+                acc[row] += float(value)
+        tokens_total += int(toks.shape[0] * toks.shape[1])
+        n_calls += 1
+
+    scan_activity = {k: v / max(n_calls, 1) for k, v in scan_sums.items()}
+    return RoutingStats(moe_counts=moe_counts, scan_activity=scan_activity,
+                        tokens=tokens_total)
+
+
+# ------------------------------------------------------- shares + k ladders
+
+
+def traffic_shares(counts: np.ndarray) -> np.ndarray:
+    """Per-layer traffic shares: rows of (L, E) counts normalized to sum 1.
+
+    A row with zero traffic (no kept dispatches in the calibration trace)
+    falls back to the uniform share — no information means no reason to
+    treat experts differently.
+    """
+    counts = np.asarray(counts, np.float64)
+    if counts.ndim == 1:
+        counts = counts[None, :]
+    totals = counts.sum(axis=-1, keepdims=True)
+    uniform = np.full_like(counts, 1.0 / counts.shape[-1])
+    with np.errstate(invalid="ignore", divide="ignore"):
+        shares = np.where(totals > 0, counts / np.maximum(totals, 1e-12),
+                          uniform)
+    return shares
+
+
+def activity_shares(activity: np.ndarray) -> np.ndarray:
+    """(L,) activity statistics normalized to shares summing to 1."""
+    act = np.asarray(activity, np.float64).reshape(-1)
+    total = act.sum()
+    if total <= 0:
+        return np.full_like(act, 1.0 / max(act.size, 1))
+    return act / total
+
+
+def assign_rank_k(shares: np.ndarray, ladder: Sequence[int]) -> np.ndarray:
+    """Bucket units onto a k ladder by traffic rank: hottest -> gentlest.
+
+    ``ladder`` is the set of codebook sizes to use (order-insensitive); the
+    hottest ceil(n/len(ladder)) units get the largest k, the coldest the
+    smallest. Monotone by construction: share_i > share_j implies
+    k_i >= k_j. Ties break on unit index (stable sort) for determinism.
+    """
+    shares = np.asarray(shares, np.float64).reshape(-1)
+    gentle_first = sorted({int(k) for k in ladder}, reverse=True)
+    if not gentle_first:
+        raise ValueError("empty k ladder")
+    n, n_l = shares.size, len(gentle_first)
+    order = np.argsort(-shares, kind="stable")    # hottest first
+    ks = np.zeros(n, np.int64)
+    for rank, idx in enumerate(order):
+        ks[idx] = gentle_first[min(rank * n_l // max(n, 1), n_l - 1)]
+    return ks
+
+
+def traffic_weighted_energy(unit_energy: np.ndarray,
+                            shares: np.ndarray) -> np.ndarray:
+    """Scale per-unit tile energies by measured traffic share.
+
+    The tile-level energy model charges each expert slice as if every token
+    passed through it; in an MoE only a ``share`` fraction of the routed
+    tokens does. Multiplying by ``share * n_units`` keeps the layer total
+    comparable to the dense accounting (uniform traffic changes nothing)
+    while concentrating the prior on hot units.
+    """
+    unit_energy = np.asarray(unit_energy, np.float64)
+    shares = np.asarray(shares, np.float64)
+    return unit_energy * shares * shares.shape[-1]

@@ -67,6 +67,13 @@ class ScheduleConfig:
     min_energy_share: float = 0.01  # skip layers below this ρ (tiny fc heads)
     max_layers: Optional[int] = None  # cap processed layers (tests)
     search_mode: str = "batched"    # "batched" candidate sweep | "serial"
+    # when MSR depths are in play, rank candidates by a *measured* energy
+    # prior — quantize this layer's weights under each (prune, k, msr)
+    # combo and score the resulting value histogram against the layer's
+    # energy LUT — instead of the static lexicographic aggressiveness
+    # proxy. With msr_bits=(0,) the prior is a no-op (order unchanged), so
+    # existing decision traces are untouched.
+    msr_energy_prior: bool = True
 
 
 @dataclasses.dataclass
@@ -119,12 +126,56 @@ def _config_order(cfg: ScheduleConfig) -> List[Tuple[float, int, int]]:
     return sorted(combos, key=lambda c: (-c[0], c[2] == 0, c[2], c[1]))
 
 
+def _candidate_order(runner, params, comp, models, layer,
+                     cfg: ScheduleConfig) -> List[Tuple[float, int, int]]:
+    """Candidate combos for one layer, most aggressive first.
+
+    With ``msr_energy_prior`` off — or no non-zero MSR depth in play — this
+    is exactly `_config_order`. Otherwise each combo's post-compression
+    layer energy is *estimated* (prune mask + symmetric k-value codebook
+    proxy + MSR truncation -> int weight histogram -> LUT energy) and the
+    combos are reordered by that estimate ascending (largest expected
+    saving first), ties broken by the static order. Both search modes call
+    this helper with identical inputs, so serial/batched decision parity is
+    preserved by construction.
+    """
+    combos = _config_order(cfg)
+    if not cfg.msr_energy_prior or all(m == 0 for m in cfg.msr_bits):
+        return combos
+
+    from repro.core.layer_energy import (
+        layer_energy_from_counts,
+        weight_value_counts,
+    )
+    from repro.core.lm_compress import symmetric_codebook_values
+    from repro.core.stats import conv_weight_matrix
+
+    cl = runner.model.comp_layer(layer)
+    m = models[layer]
+    w = runner.model.get_weight(params, layer)
+    cost = []
+    for prune, k_target, msr in combos:
+        cb, k = qat.make_codebook(symmetric_codebook_values(k_target))
+        c_est = dict(comp[layer])
+        c_est["mask"] = qat.magnitude_prune_mask(w, prune)
+        c_est["codebook"] = cb
+        c_est["codebook_k"] = k
+        c_est["msr_bits"] = jnp.asarray(msr, jnp.int32)
+        w_int = qat.quantize_weight_int(w, c_est)
+        w_int = conv_weight_matrix(w_int) if cl.kind == "conv" else w_int.T
+        counts = weight_value_counts(w_int, m.dims)
+        cost.append(float(layer_energy_from_counts(counts, m.lut, m.dims)))
+    order = sorted(range(len(combos)), key=lambda i: (cost[i], i))
+    return [combos[i] for i in order]
+
+
 def _sweep_layer_serial(runner, params, state, opt_state, comp, models,
                         layer, share, acc0, cfg, sel_cfg, verbose):
     """Reference trial-and-rollback walk: one candidate config at a time."""
     e_before = models[layer].energy
     tried: List[Tuple[float, int, int]] = []
-    for prune, k_target, msr in _config_order(cfg):
+    for prune, k_target, msr in _candidate_order(runner, params, comp,
+                                                 models, layer, cfg):
         tried.append((prune, k_target, msr))
         t0 = time.time()
         # --- trial state (rollback on reject)
@@ -190,7 +241,7 @@ def _sweep_layer_batched(runner, params, state, opt_state, comp, models,
     never selected out of the stacked trees, and the caller's
     params/opt_state are returned untouched when no candidate passes.
     """
-    combos = _config_order(cfg)
+    combos = _candidate_order(runner, params, comp, models, layer, cfg)
     n = len(combos)
     e_before = models[layer].energy
     t0 = time.time()

@@ -59,8 +59,10 @@ def compress_report(model, params, k: int, *, block_k: int = 128,
     values = lm_compress.symmetric_codebook_values(k)
     comp = lm_compress.init_lm_comp(model)
     comp = lm_compress.restrict_all_codebooks(model, comp, values)
-    arts = lm_compress.export_lm_matmuls(model, params, comp, block_k=block_k)
+    arts, skips = lm_compress.export_lm_matmuls(model, params, comp,
+                                                block_k=block_k)
     summary = export_summary(arts)
+    summary["skipped_units"] = skips
     checked = lm_compress.lut_parity_report(model, params, comp, arts,
                                             check_units=check_units,
                                             seed=seed)

@@ -127,6 +127,23 @@ def apply_dense(
     return y
 
 
+def quantized_mm(params, key, xin, *, qcfg: QuantConfig, comp, name: str,
+                 dtype) -> jax.Array:
+    """``xin @ params[key]`` for a named compressible unit: fake-quantized
+    under QAT, dispatched to the packed LUT GEMM when a `ServeArtifact` is
+    attached and ``comp_mode == "serve"``. Shared by the scan mixers
+    (ssm/rglru), whose projections are plain ``(..., K) @ (K, N)`` matmuls."""
+    c = None if comp is None else comp.get(f"{name}/{key}")
+    art = None if c is None else c.get("serve")
+    if qcfg.enabled and qcfg.comp_mode == "serve" and art is not None:
+        from repro.core.export import serve_dense
+
+        return serve_dense(xin, art, use_ref=qcfg.use_ref_kernel).astype(dtype)
+    w = params[key]
+    w = qat.fake_quant_weight(w, c) if qcfg.enabled else w
+    return jnp.einsum("...k,kn->...n", xin, w.astype(dtype))
+
+
 # --------------------------------------------------------------------- conv2d
 
 

@@ -28,8 +28,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import qat
-from repro.nn.layers import QuantConfig
+from repro.core import qat, routing_stats
+from repro.nn.layers import QuantConfig, quantized_mm
 from repro.nn.spec import ParamSpec, fan_in_init, normal_init, zeros_init
 
 _C = 8.0
@@ -78,17 +78,12 @@ def _causal_depthwise_conv(x, w, b):
 def _rglru_coeffs(params, xc, qcfg, comp, name):
     """Per-step (log_a, beta*i*x) terms from conv output xc (B, S, r)."""
 
-    def w_of(key):
-        w = params[key]
-        cmp = None if comp is None else comp.get(f"{name}/{key}")
-        return qat.fake_quant_weight(w, cmp) if qcfg.enabled else w
+    def mm(key, xin):
+        return quantized_mm(params, key, xin, qcfg=qcfg, comp=comp,
+                            name=name, dtype=xc.dtype)
 
-    r_gate = jax.nn.sigmoid(
-        jnp.einsum("bsr,rk->bsk", xc, w_of("w_a").astype(xc.dtype))
-        + params["b_a"].astype(xc.dtype))
-    i_gate = jax.nn.sigmoid(
-        jnp.einsum("bsr,rk->bsk", xc, w_of("w_x").astype(xc.dtype))
-        + params["b_x"].astype(xc.dtype))
+    r_gate = jax.nn.sigmoid(mm("w_a", xc) + params["b_a"].astype(xc.dtype))
+    i_gate = jax.nn.sigmoid(mm("w_x", xc) + params["b_x"].astype(xc.dtype))
     log_a = (-_C * jax.nn.softplus(params["lam"]) *
              r_gate.astype(jnp.float32))                      # (B, S, r)
     a = jnp.exp(log_a)
@@ -107,14 +102,17 @@ def apply_rglru(
     name: str = "rglru",
     return_state: bool = False,
 ):
-    def w_of(key):
-        w = params[key]
-        cmp = None if comp is None else comp.get(f"{name}/{key}")
-        return qat.fake_quant_weight(w, cmp) if qcfg.enabled else w
+    collector = routing_stats.get_collector()
+    if collector is not None:
+        collector("rglru", name, jnp.mean(jnp.square(x.astype(jnp.float32))))
+
+    def mm(key, xin):
+        return quantized_mm(params, key, xin, qcfg=qcfg, comp=comp,
+                            name=name, dtype=x.dtype)
 
     xin = qat.fake_quant_act(x) if (qcfg.enabled and qcfg.act_quant) else x
-    branch = jnp.einsum("bsd,dr->bsr", xin, w_of("in_proj").astype(x.dtype))
-    gate = jnp.einsum("bsd,dr->bsr", xin, w_of("gate_proj").astype(x.dtype))
+    branch = mm("in_proj", xin)
+    gate = mm("gate_proj", xin)
 
     xc = _causal_depthwise_conv(branch, params["conv_w"].astype(x.dtype),
                                 params["conv_b"].astype(x.dtype))
@@ -129,7 +127,7 @@ def apply_rglru(
     out = h.astype(x.dtype) * jax.nn.gelu(gate, approximate=True)
     if qcfg.enabled and qcfg.act_quant:
         out = qat.fake_quant_act(out)
-    out = jnp.einsum("bsr,rd->bsd", out, w_of("out_proj").astype(x.dtype))
+    out = mm("out_proj", out)
     if return_state:
         w = dims.conv_width
         tail = branch[:, -(w - 1):]
@@ -165,14 +163,13 @@ def apply_rglru_decode(
     comp=None,
     name: str = "rglru",
 ) -> Tuple[jax.Array, dict]:
-    def w_of(key):
-        w = params[key]
-        cmp = None if comp is None else comp.get(f"{name}/{key}")
-        return qat.fake_quant_weight(w, cmp) if qcfg.enabled else w
+    def mm(key, xin):
+        return quantized_mm(params, key, xin, qcfg=qcfg, comp=comp,
+                            name=name, dtype=x.dtype)
 
     xin = qat.fake_quant_act(x) if (qcfg.enabled and qcfg.act_quant) else x
-    branch = jnp.einsum("bsd,dr->bsr", xin, w_of("in_proj").astype(x.dtype))
-    gate = jnp.einsum("bsd,dr->bsr", xin, w_of("gate_proj").astype(x.dtype))
+    branch = mm("in_proj", xin)
+    gate = mm("gate_proj", xin)
 
     hist = jnp.concatenate([cache["conv"], branch], axis=1)  # (B, W, r)
     w = params["conv_w"].astype(x.dtype)
@@ -184,5 +181,5 @@ def apply_rglru_decode(
     out = h_new.astype(x.dtype)[:, None] * jax.nn.gelu(gate, approximate=True)
     if qcfg.enabled and qcfg.act_quant:
         out = qat.fake_quant_act(out)
-    out = jnp.einsum("bsr,rd->bsd", out, w_of("out_proj").astype(x.dtype))
+    out = mm("out_proj", out)
     return out, {"h": h_new.astype(cache["h"].dtype), "conv": new_conv}

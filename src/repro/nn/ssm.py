@@ -19,8 +19,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import qat
-from repro.nn.layers import QuantConfig, apply_rmsnorm
+from repro.core import qat, routing_stats
+from repro.nn.layers import QuantConfig, apply_rmsnorm, quantized_mm
 from repro.nn.spec import ParamSpec, fan_in_init, normal_init, zeros_init
 
 
@@ -180,13 +180,16 @@ def apply_ssm(
     cache ({"state", "conv"}) at the end of the sequence."""
     bsz, s, _ = x.shape
 
-    def w_of(key):
-        w = params[key]
-        cmp = None if comp is None else comp.get(f"{name}/{key}")
-        return qat.fake_quant_weight(w, cmp) if qcfg.enabled else w
+    collector = routing_stats.get_collector()
+    if collector is not None:
+        collector("ssm", name, jnp.mean(jnp.square(x.astype(jnp.float32))))
+
+    def mm(key, xin):
+        return quantized_mm(params, key, xin, qcfg=qcfg, comp=comp,
+                            name=name, dtype=x.dtype)
 
     xin_q = qat.fake_quant_act(x) if (qcfg.enabled and qcfg.act_quant) else x
-    z = jnp.einsum("bsd,dk->bsk", xin_q, w_of("in_proj").astype(x.dtype))
+    z = mm("in_proj", xin_q)
     zg, xi, b_mat, c_mat, dt_raw = _split_proj(z, dims)
 
     conv_in = jnp.concatenate([xi, b_mat, c_mat], axis=-1)
@@ -224,7 +227,7 @@ def apply_ssm(
     y = apply_rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(zg))
     if qcfg.enabled and qcfg.act_quant:
         y = qat.fake_quant_act(y)
-    out = jnp.einsum("bsk,kd->bsd", y, w_of("out_proj").astype(x.dtype))
+    out = mm("out_proj", y)
     if return_state:
         w = dims.conv_width
         tail = conv_in[:, -(w - 1):]
@@ -264,13 +267,12 @@ def apply_ssm_decode(
 ) -> Tuple[jax.Array, dict]:
     bsz = x.shape[0]
 
-    def w_of(key):
-        w = params[key]
-        cmp = None if comp is None else comp.get(f"{name}/{key}")
-        return qat.fake_quant_weight(w, cmp) if qcfg.enabled else w
+    def mm(key, xin):
+        return quantized_mm(params, key, xin, qcfg=qcfg, comp=comp,
+                            name=name, dtype=x.dtype)
 
     xin_q = qat.fake_quant_act(x) if (qcfg.enabled and qcfg.act_quant) else x
-    z = jnp.einsum("bsd,dk->bsk", xin_q, w_of("in_proj").astype(x.dtype))[:, 0]
+    z = mm("in_proj", xin_q)[:, 0]
     zg, xi, b_mat, c_mat, dt_raw = _split_proj(z, dims)
 
     conv_in = jnp.concatenate([xi, b_mat, c_mat], axis=-1)     # (B, conv_dim)
@@ -307,5 +309,5 @@ def apply_ssm_decode(
                       y * jax.nn.silu(zg[:, None]))
     if qcfg.enabled and qcfg.act_quant:
         y = qat.fake_quant_act(y)
-    out = jnp.einsum("bsk,kd->bsd", y, w_of("out_proj").astype(x.dtype))
+    out = mm("out_proj", y)
     return out, {"state": new_state.astype(cache["state"].dtype), "conv": new_conv}

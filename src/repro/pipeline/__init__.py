@@ -14,15 +14,20 @@ _EXPORTS = {
     "TargetConfig": "repro.pipeline.config",
     "TrainStageConfig": "repro.pipeline.config",
     "ProfileStageConfig": "repro.pipeline.config",
+    "RoutingStageConfig": "repro.pipeline.config",
     "ExportStageConfig": "repro.pipeline.config",
     "ServeStageConfig": "repro.pipeline.config",
     "reduced_cnn_config": "repro.pipeline.config",
     "reduced_lm_config": "repro.pipeline.config",
+    "reduced_moe_config": "repro.pipeline.config",
+    "reduced_scan_config": "repro.pipeline.config",
     # plan artifact
     "CompressionPlan": "repro.pipeline.plan",
     # targets
     "CnnTarget": "repro.pipeline.targets",
     "LMTarget": "repro.pipeline.targets",
+    "MoETarget": "repro.pipeline.targets",
+    "ScanTarget": "repro.pipeline.targets",
     "resolve_target": "repro.pipeline.targets",
     # driver
     "Pipeline": "repro.pipeline.pipeline",

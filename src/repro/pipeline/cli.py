@@ -46,11 +46,15 @@ def build_parser() -> argparse.ArgumentParser:
             help=f"run the pipeline through its '{stage}' stage")
         p.add_argument("--config", default=None, metavar="JSON",
                        help="PipelineConfig JSON file (see docs/pipeline.md)")
-        p.add_argument("--target", choices=("cnn", "lm"), default=None,
-                       help="target kind when building a config from flags")
+        p.add_argument("--target", choices=("cnn", "lm", "moe", "scan"),
+                       default=None,
+                       help="target kind when building a config from flags "
+                            "(moe/scan: routing-aware LM targets)")
         p.add_argument("--arch", default=None,
                        help="cnn: lenet5|resnet8|resnet20|resnet50; "
-                            "lm: repro.configs arch id (e.g. olmo-1b)")
+                            "lm/moe/scan: repro.configs arch id "
+                            "(e.g. olmo-1b, phi3.5-moe-42b-a6.6b, "
+                            "mamba2-1.3b)")
         p.add_argument("--reduced", action="store_true",
                        help="CPU-smoke preset (tiny budgets; lm: scaled-down "
                             "config)")
@@ -129,6 +133,8 @@ def _build_config(args):
         PipelineConfig,
         reduced_cnn_config,
         reduced_lm_config,
+        reduced_moe_config,
+        reduced_scan_config,
     )
 
     kind = args.target
@@ -138,7 +144,11 @@ def _build_config(args):
     if args.config:
         cfg = PipelineConfig.load(args.config)
     elif args.reduced:
-        if kind == "lm":
+        if kind == "moe":
+            cfg = reduced_moe_config(args.arch or "phi3.5-moe-42b-a6.6b")
+        elif kind == "scan":
+            cfg = reduced_scan_config(args.arch or "mamba2-1.3b")
+        elif kind == "lm":
             cfg = reduced_lm_config(args.arch or "olmo-1b")
         else:
             cfg = reduced_cnn_config()

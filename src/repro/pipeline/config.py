@@ -66,6 +66,27 @@ class ProfileStageConfig:
 
 
 @dataclasses.dataclass
+class RoutingStageConfig:
+    """Routing/activity calibration for traffic-weighted compression.
+
+    Used by the "moe" and "scan" targets (`repro.pipeline.targets.MoETarget`
+    / `ScanTarget`): a deterministic synthetic calibration trace measures
+    per-expert dispatch frequency and per-scan-layer activity
+    (`repro.core.routing_stats`), and routed units are bucketed onto
+    ``k_ladder`` by traffic rank — hottest units get the largest (gentlest)
+    codebook, coldest the smallest.
+    """
+
+    calib_batches: int = 2       # calibration prefill batches
+    calib_batch_size: int = 2
+    calib_seq_len: int = 32
+    calib_seed: int = 0          # PRNG chain seed of the token trace
+    # codebook sizes routed units are assigned by traffic rank
+    # (order-insensitive; entries must stay LUT-servable, i.e. <= N_CODES)
+    k_ladder: Tuple[int, ...] = (4, 8, 16)
+
+
+@dataclasses.dataclass
 class ExportStageConfig:
     """Packed 4-bit artifact export (see repro.core.export)."""
 
@@ -113,6 +134,8 @@ class PipelineConfig:
         default_factory=ScheduleConfig)
     selection: SelectionConfig = dataclasses.field(
         default_factory=SelectionConfig)
+    routing: RoutingStageConfig = dataclasses.field(
+        default_factory=RoutingStageConfig)
     export: ExportStageConfig = dataclasses.field(
         default_factory=ExportStageConfig)
     serve: ServeStageConfig = dataclasses.field(
@@ -151,8 +174,9 @@ class PipelineConfig:
         from repro.core.schedule import _SEARCH_MODES
 
         t = self.target
-        if t.kind not in ("cnn", "lm"):
-            raise ValueError(f"target.kind must be 'cnn' or 'lm', got {t.kind!r}")
+        if t.kind not in ("cnn", "lm", "moe", "scan"):
+            raise ValueError(f"target.kind must be one of 'cnn', 'lm', "
+                             f"'moe', 'scan', got {t.kind!r}")
         if t.kind == "cnn" and t.arch not in CNN_ARCHS:
             raise ValueError(
                 f"target.arch {t.arch!r} is not a CNN arch {CNN_ARCHS}")
@@ -184,9 +208,18 @@ class PipelineConfig:
                 f"serve.compress_k must be in [0, {K_MAX}], got "
                 f"{self.serve.compress_k}")
         if (self.serve.plans or self.serve.plans_dir) \
-                and self.target.kind != "lm":
+                and self.target.kind == "cnn":
             raise ValueError("serve.plans / serve.plans_dir (fleet serving) "
-                             "need target.kind == 'lm'")
+                             "need an LM-family target")
+        if not self.routing.k_ladder:
+            raise ValueError("routing.k_ladder must not be empty")
+        for k in self.routing.k_ladder:
+            if not 1 <= k <= K_MAX:
+                raise ValueError(
+                    f"routing.k_ladder entry {k} not in [1, {K_MAX}]")
+        for name in ("calib_batches", "calib_batch_size", "calib_seq_len"):
+            if getattr(self.routing, name) < 1:
+                raise ValueError(f"routing.{name} must be >= 1")
         for spec in self.serve.plans:
             k, msr = parse_plan_spec(spec)
             if k is None:
@@ -285,6 +318,24 @@ def reduced_lm_config(arch: str = "olmo-1b", *, compress_k: int = 4,
         train=TrainStageConfig(qat_steps=0, final_finetune_steps=0),
         serve=serve,
     )
+
+
+def reduced_moe_config(arch: str = "phi3.5-moe-42b-a6.6b", *,
+                       compress_k: int = 4, **serve_kw) -> PipelineConfig:
+    """CPU-smoke preset for a routed MoE target: reduced config, uniform
+    codebook floor plus per-expert k sized by measured dispatch traffic."""
+    cfg = reduced_lm_config(arch, compress_k=compress_k, **serve_kw)
+    return dataclasses.replace(
+        cfg, target=dataclasses.replace(cfg.target, kind="moe"))
+
+
+def reduced_scan_config(arch: str = "mamba2-1.3b", *, compress_k: int = 4,
+                        **serve_kw) -> PipelineConfig:
+    """CPU-smoke preset for a routed SSM/RG-LRU target: per-scan-unit k
+    sized by measured activation activity."""
+    cfg = reduced_lm_config(arch, compress_k=compress_k, **serve_kw)
+    return dataclasses.replace(
+        cfg, target=dataclasses.replace(cfg.target, kind="scan"))
 
 
 def from_legacy(core_cfg, *, arch: Optional[str] = None) -> PipelineConfig:

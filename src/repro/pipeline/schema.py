@@ -91,12 +91,16 @@ def validate_plan_doc(doc: dict) -> List[Dict]:
             msr = d.get("msr")   # absent in pre-MSR documents
             if msr is not None and not (0 <= int(msr) <= 8):
                 sane = False
+            # routed (moe/scan) decisions carry the measured traffic share
+            ts = d.get("traffic_share")
+            if ts is not None and not (0.0 <= float(ts) <= 1.0):
+                sane = False
             eb, ea = d.get("energy_before"), d.get("energy_after")
             if eb is None or ea is None or ea > eb * (1.0 + _SHARE_TOL):
                 sane = False
         gate("plan_decisions_sane", len(decisions), "==",
              f"accepted k in [1, {K_MAX}], msr in [0, 8], "
-             f"energy non-increasing", sane)
+             f"traffic share in [0, 1], energy non-increasing", sane)
 
         metrics = doc.get("metrics") or {}
         eb = metrics.get("energy_before")

@@ -27,6 +27,7 @@ path — gated by tests/test_pipeline.py.
 
 from __future__ import annotations
 
+import re
 from typing import Dict, List, Optional, Tuple
 
 from repro.pipeline.config import PipelineConfig
@@ -38,6 +39,10 @@ def resolve_target(cfg: PipelineConfig):
         return CnnTarget(cfg)
     if cfg.target.kind == "lm":
         return LMTarget(cfg)
+    if cfg.target.kind == "moe":
+        return MoETarget(cfg)
+    if cfg.target.kind == "scan":
+        return ScanTarget(cfg)
     raise ValueError(f"unknown target kind {cfg.target.kind!r}")
 
 
@@ -377,19 +382,28 @@ class LMTarget:
         from repro.core.export import export_summary
         from repro.core.lm_compress import export_lm_matmuls, lut_parity_report
 
-        arts = export_lm_matmuls(self.model, plan.params, plan.comp,
-                                 block_k=cfg.export.block_k)
+        arts, skips = export_lm_matmuls(self.model, plan.params, plan.comp,
+                                        block_k=cfg.export.block_k)
         plan.artifacts = arts
         summary = export_summary(arts)
         checked = lut_parity_report(self.model, plan.params, plan.comp, arts)
         summary["parity_max_rel_err"] = max(checked.values()) if checked else 0.0
-        plan.metrics.update({f"export_{k}": v for k, v in summary.items()})
+        summary["skipped"] = len(skips)
+        plan.metrics.update({f"export_{k}": v for k, v in summary.items()
+                             if k != "skipped_units"})
+        if plan.stats is None:
+            plan.stats = {}
+        plan.stats.setdefault("export", {})["skip_report"] = skips
         if verbose and arts:
             print(f"[pipeline] exported {summary['layers']} matmuls, "
                   f"{summary['weight_bytes_packed'] / 1e6:.2f} MB packed "
                   f"({summary['compression_vs_int8']:.2f}x vs int8), "
                   f"LUT parity max rel err "
                   f"{summary['parity_max_rel_err']:.2e}")
+        if verbose and skips:
+            print(f"[pipeline] export skipped {len(skips)} units:")
+            for s in skips:
+                print(f"  - {s['unit']}: {s['reason']} ({s['detail']})")
 
     def _serve_handle(self, plan: CompressionPlan, k: int):
         """The single-variant `PlanHandle` the pinned serve stage uses."""
@@ -519,3 +533,228 @@ class LMTarget:
                   f"({rep['tokens_per_s']:.1f} tok/s), "
                   f"{rep['recompiles_after_warmup']} recompiles after "
                   f"warmup")
+
+
+# ==================================================== routing-aware targets
+
+
+# per-(layer, expert) slice names from LMTarget._unit_energies /
+# iter_eligible_units: "blocks/g0/moe/w_gate[1][e2]", "tail/t0/moe/w_up[e0]",
+# "blocks/g0/ssm/in_proj[1]", "tail/t0/mlp/w_down"
+_EXPERT_SLICE_RE = re.compile(
+    r"^(?P<base>.+)/(?P<key>[^/\[]+)(?:\[(?P<li>\d+)\])?\[e(?P<ei>\d+)\]$")
+_LAYER_SLICE_RE = re.compile(
+    r"^(?P<base>.+)/(?P<key>[^/\[]+)(?:\[(?P<li>\d+)\])?$")
+
+
+def _slice_key(name: str) -> Tuple[str, int, Optional[int]]:
+    """(unit path, layer index, expert index|None) of one energy-slice name."""
+    m = _EXPERT_SLICE_RE.match(name)
+    if m:
+        return (f"{m.group('base')}/{m.group('key')}",
+                int(m.group("li") or 0), int(m.group("ei")))
+    m = _LAYER_SLICE_RE.match(name)
+    if m:
+        return (f"{m.group('base')}/{m.group('key')}",
+                int(m.group("li") or 0), None)
+    return (name, 0, None)
+
+
+def traffic_weighted_unit_energies(energies: Dict[str, float],
+                                   stats) -> Dict[str, float]:
+    """Scale per-slice tile energies by measured routing traffic.
+
+    ``stats`` is a `repro.core.routing_stats.RoutingStats`. Expert slices
+    are charged ``energy * share * E`` (uniform traffic changes nothing,
+    hot experts weigh more); scan-layer slices likewise against the
+    activity share. Slices without routing statistics pass through.
+    """
+    from repro.core import routing_stats as rs
+
+    moe = {u: rs.traffic_shares(c) for u, c in stats.moe_counts.items()}
+    scan = {u: rs.activity_shares(a) for u, a in stats.scan_activity.items()}
+    out: Dict[str, float] = {}
+    for name, e in energies.items():
+        path, li, ei = _slice_key(name)
+        base = path.rsplit("/", 1)[0]
+        if ei is not None and base in moe:
+            shares = moe[base]
+            out[name] = float(e * shares[li, ei] * shares.shape[-1])
+        elif ei is None and base in scan:
+            shares = scan[base]
+            out[name] = float(e * shares[li] * shares.size)
+        else:
+            out[name] = float(e)
+    return out
+
+
+class _RoutedTarget(LMTarget):
+    """LM target with traffic-weighted per-unit compression.
+
+    Extends the uniform LM schedule with a calibration pass
+    (`repro.core.routing_stats.collect_lm_routing_stats`): the profile
+    stage measures how traffic distributes over routed units, the energy
+    model scales each unit's tile energy by its measured share, and the
+    schedule stage assigns per-unit codebook sizes from the config's k
+    ladder by traffic rank — hot units keep gentler (larger-k) codebooks,
+    cold units compress aggressively. Subclasses define which units are
+    routed and how assignments map onto comp entries."""
+
+    def _collect_routing(self, plan: CompressionPlan, cfg: PipelineConfig,
+                         verbose: bool = False):
+        from repro.core import routing_stats as rs
+
+        r = cfg.routing
+        stats = rs.collect_lm_routing_stats(
+            self.model, plan.params, comp=plan.comp,
+            batches=r.calib_batches, batch_size=r.calib_batch_size,
+            seq_len=r.calib_seq_len, seed=r.calib_seed)
+        if plan.stats is None:
+            plan.stats = {}
+        plan.stats["routing"] = stats.as_arrays()
+        self._routing_cache = stats
+        if verbose:
+            units = len(stats.moe_counts) + len(stats.scan_activity)
+            print(f"[pipeline] routing calibration: {stats.tokens} tokens "
+                  f"over {units} routed units")
+        return stats
+
+    def _routing_stats(self, plan: CompressionPlan, cfg: PipelineConfig):
+        """Cached -> plan-recorded -> freshly collected, in that order."""
+        stats = getattr(self, "_routing_cache", None)
+        if stats is not None:
+            return stats
+        arrays = (plan.stats or {}).get("routing")
+        if arrays:
+            from repro.core.routing_stats import RoutingStats
+
+            self._routing_cache = RoutingStats.from_arrays(
+                {k: v for k, v in arrays.items()})
+            return self._routing_cache
+        return self._collect_routing(plan, cfg)
+
+    def _unit_energies(self, params, comp) -> Dict[str, float]:
+        energies = super()._unit_energies(params, comp)
+        stats = getattr(self, "_routing_cache", None)
+        if stats is None:
+            return energies
+        return traffic_weighted_unit_energies(energies, stats)
+
+    def _routed_assignments(self, stats, cfg: PipelineConfig) -> List[Tuple]:
+        """(path, layer, expert|None, k, traffic_share) per routed slice."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- stages
+
+    def stage_profile(self, plan: CompressionPlan, cfg: PipelineConfig,
+                      verbose: bool = False) -> None:
+        super().stage_profile(plan, cfg, verbose)
+        self._collect_routing(plan, cfg, verbose)
+
+    def stage_energy_model(self, plan: CompressionPlan, cfg: PipelineConfig,
+                           verbose: bool = False) -> None:
+        self._routing_stats(plan, cfg)   # ensure the traffic prior is live
+        super().stage_energy_model(plan, cfg, verbose)
+
+    def stage_schedule(self, plan: CompressionPlan, cfg: PipelineConfig,
+                       verbose: bool = False) -> None:
+        from repro.core.lm_compress import (
+            restrict_all_codebooks,
+            set_codebook,
+            symmetric_codebook_values,
+        )
+
+        k = cfg.serve.compress_k
+        e_before = getattr(self, "_unit_energy_cache", None)
+        if e_before is None:
+            e_before = self._unit_energies(plan.params, plan.comp)
+        total_before = sum(e_before.values())
+        plan.metrics["energy_before"] = float(total_before)
+        if not k:
+            plan.metrics["energy_after"] = float(total_before)
+            return
+
+        # uniform floor first (every eligible unit gets the serve codebook),
+        # then traffic-ranked per-unit overrides from the k ladder
+        plan.comp = restrict_all_codebooks(self.model, plan.comp,
+                                           symmetric_codebook_values(k))
+        stats = self._routing_stats(plan, cfg)
+        routed = self._routed_assignments(stats, cfg)
+        for path, li, ei, kk, _share in routed:
+            plan.comp = set_codebook(plan.comp, path,
+                                     symmetric_codebook_values(int(kk)),
+                                     layer=li, expert=ei)
+        e_after = self._unit_energies(plan.params, plan.comp)
+
+        assign = {(p, li, ei): (kk, share)
+                  for p, li, ei, kk, share in routed}
+        plan.decisions = []
+        for name in e_before:
+            kk, tshare = assign.get(_slice_key(name), (k, None))
+            d = {"layer": name,
+                 "share": e_before[name] / max(total_before, 1e-12),
+                 "prune_ratio": None, "k": int(kk),
+                 "energy_before": e_before[name],
+                 "energy_after": e_after[name],
+                 "accuracy": None, "accepted": True,
+                 "tried": [[0.0, int(kk)]]}
+            if tshare is not None:
+                d["traffic_share"] = float(tshare)
+            plan.decisions.append(d)
+
+        plan.metrics["energy_after"] = float(sum(e_after.values()))
+        plan.metrics["compress_k"] = k
+        plan.metrics["routed_units"] = len(routed)
+        plan.metrics["routing_tokens"] = int(stats.tokens)
+        if verbose:
+            ks = sorted({int(kk) for _, _, _, kk, _ in routed})
+            print(f"[pipeline] routed {len(routed)} unit slices onto "
+                  f"k ladder {ks} (uniform floor k={k}; per-token energy "
+                  f"{total_before:.3g} -> "
+                  f"{plan.metrics['energy_after']:.3g} eu)")
+
+
+class MoETarget(_RoutedTarget):
+    """MoE LM: per-expert codebooks sized by measured dispatch frequency."""
+
+    kind = "moe"
+
+    def _routed_assignments(self, stats, cfg: PipelineConfig) -> List[Tuple]:
+        from repro.core import routing_stats as rs
+        from repro.core.lm_compress import MOE_EXPERT_KEYS
+
+        ladder = tuple(cfg.routing.k_ladder)
+        out: List[Tuple] = []
+        for base, counts in sorted(stats.moe_counts.items()):
+            shares = rs.traffic_shares(counts)
+            for li in range(shares.shape[0]):
+                ks = rs.assign_rank_k(shares[li], ladder)
+                for key in MOE_EXPERT_KEYS:
+                    for ei in range(shares.shape[1]):
+                        out.append((f"{base}/{key}", li, ei, int(ks[ei]),
+                                    float(shares[li, ei])))
+        return out
+
+
+class ScanTarget(_RoutedTarget):
+    """SSM/RG-LRU LM: per-scan-unit codebooks sized by measured activity."""
+
+    kind = "scan"
+
+    def _routed_assignments(self, stats, cfg: PipelineConfig) -> List[Tuple]:
+        from repro.core import routing_stats as rs
+        from repro.core.lm_compress import lm_comp_layers
+
+        ladder = tuple(cfg.routing.k_ladder)
+        by_base: Dict[str, List[str]] = {}
+        for path in lm_comp_layers(self.model):
+            by_base.setdefault(path.rsplit("/", 1)[0], []).append(path)
+        out: List[Tuple] = []
+        for base, act in sorted(stats.scan_activity.items()):
+            shares = rs.activity_shares(act)
+            ks = rs.assign_rank_k(shares, ladder)
+            for li in range(shares.size):
+                for path in by_base.get(base, ()):
+                    out.append((path, li, None, int(ks[li]),
+                                float(shares[li])))
+        return out

@@ -245,7 +245,7 @@ class ServeCompileCache:
             from repro.core.export import export_summary
             from repro.core.lm_compress import export_lm_matmuls
 
-            arts = export_lm_matmuls(self.model, params, self.comp)
+            arts, _skips = export_lm_matmuls(self.model, params, self.comp)
             summary = export_summary(arts)
         self._artifacts[key] = (arts, summary)
         return self._artifacts[key]

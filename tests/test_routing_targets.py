@@ -1,0 +1,192 @@
+"""Routing-aware compression targets (ISSUE 10).
+
+Three layers of coverage:
+
+- pure-numpy unit tests for the `repro.core.routing_stats` share / ladder
+  helpers (deterministic, no jax);
+- a calibration-trace determinism test on the reduced MoE model — two
+  collections under the same seed must be bit-identical;
+- a reduced `MoETarget` pipeline driven through `export`, asserting the
+  hot-gentler / cold-aggressive k assignment, the LUT-serve parity metric,
+  and the structured export skip report.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import routing_stats as rs
+
+# ------------------------------------------------------------- share math
+
+
+def test_traffic_shares_rows_sum_to_one():
+    rng = np.random.default_rng(0)
+    counts = rng.integers(0, 50, size=(3, 4)).astype(np.float64)
+    shares = rs.traffic_shares(counts)
+    assert shares.shape == counts.shape
+    np.testing.assert_allclose(shares.sum(axis=-1), np.ones(3), atol=1e-12)
+    assert (shares >= 0).all()
+
+
+def test_traffic_shares_zero_row_falls_back_to_uniform():
+    counts = np.array([[0.0, 0.0, 0.0, 0.0], [1.0, 3.0, 0.0, 0.0]])
+    shares = rs.traffic_shares(counts)
+    np.testing.assert_allclose(shares[0], np.full(4, 0.25))
+    np.testing.assert_allclose(shares[1], [0.25, 0.75, 0.0, 0.0])
+
+
+def test_traffic_shares_accepts_1d_counts():
+    shares = rs.traffic_shares(np.array([2.0, 6.0]))
+    assert shares.shape == (1, 2)
+    np.testing.assert_allclose(shares[0], [0.25, 0.75])
+
+
+def test_activity_shares_normalize_and_zero_fallback():
+    shares = rs.activity_shares(np.array([1.0, 3.0]))
+    np.testing.assert_allclose(shares, [0.25, 0.75])
+    np.testing.assert_allclose(rs.activity_shares(np.zeros(4)),
+                               np.full(4, 0.25))
+
+
+# --------------------------------------------------------------- k ladder
+
+
+def test_assign_rank_k_hot_gets_gentlest():
+    ks = rs.assign_rank_k(np.array([0.1, 0.5, 0.3, 0.1]), (4, 8, 16))
+    assert ks[1] == 16                       # hottest expert, gentlest k
+    assert set(int(k) for k in ks) <= {4, 8, 16}
+
+
+def test_assign_rank_k_monotone_in_share():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        shares = rng.random(rng.integers(2, 9))
+        shares /= shares.sum()
+        ks = rs.assign_rank_k(shares, (2, 4, 8, 16))
+        for i in range(len(shares)):
+            for j in range(len(shares)):
+                if shares[i] > shares[j]:
+                    assert ks[i] >= ks[j], (shares, ks)
+
+
+def test_assign_rank_k_deterministic_ties_and_empty_ladder():
+    ks_a = rs.assign_rank_k(np.full(4, 0.25), (4, 16))
+    ks_b = rs.assign_rank_k(np.full(4, 0.25), (16, 4))   # order-insensitive
+    np.testing.assert_array_equal(ks_a, ks_b)
+    with pytest.raises(ValueError, match="empty"):
+        rs.assign_rank_k(np.array([1.0]), ())
+
+
+def test_traffic_weighted_energy_uniform_is_identity():
+    e = np.array([3.0, 5.0, 7.0, 9.0])
+    np.testing.assert_allclose(
+        rs.traffic_weighted_energy(e, np.full(4, 0.25)), e)
+    hot = rs.traffic_weighted_energy(e, np.array([0.7, 0.1, 0.1, 0.1]))
+    assert hot[0] > e[0] and hot[1] < e[1]
+    # the layer total stays comparable to the dense accounting
+    np.testing.assert_allclose(hot.sum(),
+                               (e * [0.7, 0.1, 0.1, 0.1]).sum() * 4)
+
+
+# -------------------------------------------- calibration-trace collection
+
+
+@pytest.fixture(scope="module")
+def moe_model():
+    """Reduced phi-MoE model + fresh params (no QAT) for routing tests."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.lm import build_lm
+    from repro.nn.spec import init_params
+
+    acfg = get_config("phi3.5-moe-42b-a6.6b").scaled_down(
+        compute_dtype="float32")
+    model = build_lm(acfg)
+    params = init_params(jax.random.PRNGKey(0), model.spec)
+    return model, params
+
+
+def test_routing_collection_deterministic_under_seed(moe_model):
+    model, params = moe_model
+    kw = dict(batches=2, batch_size=2, seq_len=16, seed=0)
+    a = rs.collect_lm_routing_stats(model, params, **kw)
+    b = rs.collect_lm_routing_stats(model, params, **kw)
+    assert a.tokens == b.tokens == 2 * 2 * 16
+    assert a.moe_counts.keys() == b.moe_counts.keys()
+    assert len(a.moe_counts) >= 1
+    for unit, counts in a.moe_counts.items():
+        assert counts.ndim == 2                 # (layers, experts)
+        np.testing.assert_array_equal(counts, b.moe_counts[unit])
+        shares = rs.traffic_shares(counts)
+        np.testing.assert_allclose(shares.sum(axis=-1),
+                                   np.ones(counts.shape[0]), atol=1e-12)
+    # round-trip through the plan.stats array encoding
+    c = rs.RoutingStats.from_arrays(a.as_arrays())
+    assert c.tokens == a.tokens
+    for unit, counts in a.moe_counts.items():
+        np.testing.assert_array_equal(c.moe_counts[unit], counts)
+
+
+def test_export_skip_report_on_unrestricted_comp(moe_model):
+    """Fresh `init_lm_comp` codebooks exceed the serve-kernel budget, so
+    every unit must land in the skip report with a reason — never silently
+    vanish from the artifact dict."""
+    from repro.core.lm_compress import (export_lm_matmuls, init_lm_comp,
+                                        lm_comp_layers)
+    from repro.pipeline.targets import _slice_key
+
+    model, params = moe_model
+    arts, skips = export_lm_matmuls(model, params, init_lm_comp(model))
+    assert arts == {}
+    # one skip entry per unit *slice*; together they cover every comp unit
+    skipped_bases = {_slice_key(s["unit"])[0] for s in skips}
+    assert skipped_bases == set(lm_comp_layers(model))
+    assert {s["reason"] for s in skips} <= {"inactive_codebook", "no_layout",
+                                            "codebook_too_large"}
+    assert all(s["unit"] for s in skips)
+
+
+# ------------------------------------------------------ routed pipelines
+
+
+@pytest.fixture(scope="module")
+def moe_plan():
+    from repro.pipeline import Pipeline, reduced_moe_config
+
+    pipe = Pipeline(reduced_moe_config())
+    pipe.run_until("export")
+    return pipe.plan
+
+
+def test_moe_pipeline_routes_experts_hot_to_gentle(moe_plan):
+    from repro.pipeline.targets import _slice_key
+
+    routed = [d for d in moe_plan.decisions if "traffic_share" in d]
+    assert len(routed) >= 8                    # >= layers x experts slices
+    # hot experts keep gentler (larger-k) codebooks within each (unit, layer)
+    groups = {}
+    for d in routed:
+        path, li, ei = _slice_key(d["layer"])
+        assert ei is not None
+        assert 0.0 <= d["traffic_share"] <= 1.0
+        groups.setdefault((path, li), []).append(
+            (d["traffic_share"], d["k"]))
+    assert groups
+    for pairs in groups.values():
+        for share_i, k_i in pairs:
+            for share_j, k_j in pairs:
+                if share_i > share_j:
+                    assert k_i >= k_j, pairs
+
+
+def test_moe_pipeline_export_parity_and_energy(moe_plan):
+    m = moe_plan.metrics
+    assert m["export_parity_max_rel_err"] < 2e-2
+    assert m["export_skipped"] == 0
+    assert (moe_plan.stats or {}).get("export", {}).get("skip_report") == []
+    assert m["energy_after"] < m["energy_before"]
+    assert m["routed_units"] >= 8
+    assert m["routing_tokens"] > 0
+    # plan round-trips the routing arrays for resume
+    assert any(key.startswith("moe:") for key in moe_plan.stats["routing"])

@@ -183,6 +183,34 @@ FLEET_GATES = [
      "fleet_parity_routed_vs_pinned", "==", True, False),
 ]
 
+# routing-aware compression-target gates for `--targets`
+# (benchmarks/bench_targets.py): the routed MoE and scan pipelines must
+# serve their per-expert / per-scan-unit LUT-GEMM exports at fake-quant
+# parity, cut traffic-weighted per-token energy past the documented floor,
+# keep the hot-gentler/cold-aggressive k assignment monotone in measured
+# traffic, and export with an empty skip report. All deterministic
+# (seeded calibration, analytic energy) — no CI slack.
+TARGETS_GATES = [
+    ("targets_moe_parity_rel_err", "bench_targets",
+     "targets_moe_parity_rel_err", "<", 2e-2, False),
+    ("targets_moe_energy_reduction", "bench_targets",
+     "targets_moe_energy_reduction", ">=", 0.10, False),
+    ("targets_moe_hotcold_monotone", "bench_targets",
+     "targets_moe_hotcold_monotone", "==", True, False),
+    ("targets_moe_routed_units", "bench_targets",
+     "targets_moe_routed_units", ">=", 8, False),
+    ("targets_moe_export_skipped", "bench_targets",
+     "targets_moe_export_skipped", "==", 0, False),
+    ("targets_scan_parity_rel_err", "bench_targets",
+     "targets_scan_parity_rel_err", "<", 2e-2, False),
+    ("targets_scan_energy_reduction", "bench_targets",
+     "targets_scan_energy_reduction", ">=", 0.05, False),
+    ("targets_scan_hotcold_monotone", "bench_targets",
+     "targets_scan_hotcold_monotone", "==", True, False),
+    ("targets_scan_export_skipped", "bench_targets",
+     "targets_scan_export_skipped", "==", 0, False),
+]
+
 OPS = {
     ">=": lambda v, t: v >= t,
     "<": lambda v, t: v < t,
@@ -327,6 +355,17 @@ def check_fleet(ci: bool = False, skip_bench: bool = False) -> int:
                   "fleet_summary.json")
 
 
+def check_targets(ci: bool = False, skip_bench: bool = False) -> int:
+    """Run the routing-aware target benchmark and gate MoE/scan routing."""
+    if not skip_bench:
+        from benchmarks import bench_targets
+
+        print("== bench_targets ==", flush=True)
+        bench_targets.run()
+    return report(evaluate(ci=ci, gates=TARGETS_GATES), ci,
+                  "targets_summary.json")
+
+
 def check_trajectory(ci: bool = False) -> int:
     """Compare the newest vs previous point of each repo-root BENCH_*.json."""
     summary = []
@@ -394,6 +433,13 @@ def main(argv=None) -> int:
                          "zero recompiles, observed degrade/recover "
                          "transitions, and routed-vs-pinned parity (writes "
                          "fleet_summary.json)")
+    ap.add_argument("--targets", action="store_true",
+                    help="run the routing-aware target benchmark and gate "
+                         "MoE/scan routed compression: LUT-GEMM vs "
+                         "fake-quant parity, traffic-weighted energy "
+                         "reduction, hot-gentler/cold-aggressive "
+                         "monotonicity, and an empty export skip report "
+                         "(writes targets_summary.json)")
     args = ap.parse_args(argv)
 
     if args.plan:
@@ -404,6 +450,8 @@ def main(argv=None) -> int:
         return check_cosim(ci=args.ci, skip_bench=args.skip_bench)
     if args.fleet:
         return check_fleet(ci=args.ci, skip_bench=args.skip_bench)
+    if args.targets:
+        return check_targets(ci=args.ci, skip_bench=args.skip_bench)
     if args.trajectory:
         return check_trajectory(ci=args.ci)
 

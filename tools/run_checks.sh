@@ -66,7 +66,8 @@ if [[ "$FAST" == 1 ]]; then
     tests/test_serve_compressed.py tests/test_schedule_batched.py \
     tests/test_serving_engine.py tests/test_fleet.py \
     tests/test_pipeline.py \
-    tests/test_cosim_differential.py tests/test_msr_schedule.py
+    tests/test_cosim_differential.py tests/test_msr_schedule.py \
+    tests/test_routing_targets.py
 else
   echo "== tier-1 tests =="
   python -m pytest "${PYTEST_ARGS[@]}" ${COV_ARGS[@]+"${COV_ARGS[@]}"}
